@@ -1,0 +1,51 @@
+"""Shared benchmark harness: datasets, timing, recall, CSV emission.
+
+Sizes are scaled to a single CPU core (the paper runs 1M vectors on a
+144-thread Xeon); every benchmark keeps the paper's *structure* — same
+workloads, same comparisons, same metrics — at reduced N.  The TPU-scale
+path is exercised by the dry-run + roofline instead (EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (LabelWorkloadConfig, brute_force_filtered,
+                        generate_label_sets, generate_query_label_sets,
+                        recall_at_k)
+
+
+def make_dataset(n=20_000, d=32, n_labels=12, q=200, distribution="zipf",
+                 seed=0, mean_set_size=3.0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    ls = generate_label_sets(n, LabelWorkloadConfig(
+        num_labels=n_labels, distribution=distribution,
+        mean_set_size=mean_set_size, seed=seed + 1))
+    qv = rng.standard_normal((q, d)).astype(np.float32)
+    qls = generate_query_label_sets(ls, q, seed=seed + 2)
+    return x, ls, qv, qls
+
+
+def ground_truth(x, ls, qv, qls, k=10):
+    return brute_force_filtered(x, ls, qv, qls, k)
+
+
+def measure(searcher, qv, qls, k, gt_i, n, repeats=3):
+    """(qps, recall, per-query us).  First call warms any jit caches."""
+    searcher.search(qv[:4], qls[:4], k)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        d, i = searcher.search(qv, qls, k)
+    dt = (time.perf_counter() - t0) / repeats
+    return (len(qls) / dt, recall_at_k(i, gt_i, n), dt / len(qls) * 1e6)
+
+
+def emit(rows: list[dict], name: str):
+    """Print one CSV block: name,us_per_call,derived."""
+    for r in rows:
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "us_per_call"))
+        print(f"{r.get('name', name)},{r.get('us_per_call', '')},{derived}",
+              flush=True)

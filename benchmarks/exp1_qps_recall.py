@@ -1,0 +1,34 @@
+"""Exp-1 (Fig 10) — QPS/recall tradeoff: ELI-0.2 and ELI-2.0 vs the
+baseline field (pre/post-filter, ACORN-1/γ, UNG, NHQ) across |L|."""
+from repro.baselines import BASELINE_REGISTRY
+from repro.core.engine import LabelHybridEngine
+
+from .common import emit, ground_truth, make_dataset, measure
+
+
+def run(n=6_000, k=10, label_sizes=(8, 16)):
+    rows = []
+    for L in label_sizes:
+        x, ls, qv, qls = make_dataset(n=n, n_labels=L, q=120)
+        gt_d, gt_i = ground_truth(x, ls, qv, qls, k)
+        engines = {
+            "ELI-0.2": LabelHybridEngine.build(x, ls, mode="eis", c=0.2,
+                                               backend="flat"),
+            "ELI-2.0": LabelHybridEngine.build(x, ls, mode="sis",
+                                               space_budget=2 * n,
+                                               backend="flat"),
+        }
+        for bname in ("prefilter", "postfilter", "acorn1", "acorn_gamma",
+                      "ung", "nhq"):
+            engines[bname] = BASELINE_REGISTRY[bname](x, ls)
+        for name, eng in engines.items():
+            qps, rec, us = measure(eng, qv, qls, k, gt_i, n)
+            rows.append({"name": f"exp1/L={L}/{name}",
+                         "us_per_call": f"{us:.1f}",
+                         "qps": f"{qps:.0f}", "recall": f"{rec:.4f}"})
+    emit(rows, "exp1")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

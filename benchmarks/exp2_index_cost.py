@@ -1,0 +1,42 @@
+"""Exp-2 (Tables 5/6) — index construction time and size."""
+import time
+
+from repro.baselines import BASELINE_REGISTRY
+from repro.core.engine import LabelHybridEngine
+
+from .common import emit, make_dataset
+
+
+def run(n=6_000, L=16):
+    x, ls, qv, qls = make_dataset(n=n, n_labels=L, q=8)
+    rows = []
+    t0 = time.perf_counter()
+    eng = LabelHybridEngine.build(x, ls, mode="eis", c=0.2, backend="flat")
+    st = eng.stats()
+    rows.append({"name": "exp2/ELI-0.2", "us_per_call": "",
+                 "build_s": f"{time.perf_counter() - t0:.2f}",
+                 "select_s": f"{st.select_seconds:.3f}",
+                 "entries": st.total_entries, "mb": f"{st.nbytes/2**20:.1f}",
+                 "n_indexes": st.n_selected,
+                 "achieved_c": f"{st.achieved_c:.3f}"})
+    t0 = time.perf_counter()
+    eng2 = LabelHybridEngine.build(x, ls, mode="sis", space_budget=2 * n,
+                                   backend="flat")
+    st2 = eng2.stats()
+    rows.append({"name": "exp2/ELI-2.0", "us_per_call": "",
+                 "build_s": f"{time.perf_counter() - t0:.2f}",
+                 "entries": st2.total_entries,
+                 "mb": f"{st2.nbytes/2**20:.1f}",
+                 "achieved_c": f"{st2.achieved_c:.3f}"})
+    for bname in ("postfilter", "acorn1", "acorn_gamma", "ung", "optimal"):
+        t0 = time.perf_counter()
+        b = BASELINE_REGISTRY[bname](x, ls)
+        rows.append({"name": f"exp2/{bname}", "us_per_call": "",
+                     "build_s": f"{time.perf_counter() - t0:.2f}",
+                     "mb": f"{b.nbytes/2**20:.1f}"})
+    emit(rows, "exp2")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

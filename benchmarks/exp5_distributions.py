@@ -1,0 +1,28 @@
+"""Exp-5 — label distribution robustness (Zipf/Uniform/Poisson/Multinormal)."""
+from repro.baselines import BASELINE_REGISTRY
+from repro.core.engine import LabelHybridEngine
+
+from .common import emit, ground_truth, make_dataset, measure
+
+
+def run(n=5_000, k=10):
+    rows = []
+    for dist in ("zipf", "uniform", "poisson", "multinormal"):
+        x, ls, qv, qls = make_dataset(n=n, n_labels=12, q=100,
+                                      distribution=dist)
+        gt_d, gt_i = ground_truth(x, ls, qv, qls, k)
+        eng = LabelHybridEngine.build(x, ls, mode="eis", c=0.2,
+                                      backend="flat")
+        ung = BASELINE_REGISTRY["ung"](x, ls)
+        acorn = BASELINE_REGISTRY["acorn_gamma"](x, ls)
+        for name, s in (("ELI-0.2", eng), ("ung", ung), ("acorn_g", acorn)):
+            qps, rec, us = measure(s, qv, qls, k, gt_i, n)
+            rows.append({"name": f"exp5/{dist}/{name}",
+                         "us_per_call": f"{us:.1f}", "qps": f"{qps:.0f}",
+                         "recall": f"{rec:.4f}"})
+    emit(rows, "exp5")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

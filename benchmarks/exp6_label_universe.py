@@ -1,0 +1,35 @@
+"""Exp-6 — large label universes |L| (paper: 64..512; here 32..128 on one
+core).  ELI's fixed-efficiency selection stays flat; UNG's cross-group
+machinery degrades with |L|."""
+import time
+
+from repro.baselines import BASELINE_REGISTRY
+from repro.core.engine import LabelHybridEngine
+
+from .common import emit, ground_truth, make_dataset, measure
+
+
+def run(n=5_000, k=10, sizes=(32, 64, 128)):
+    rows = []
+    for L in sizes:
+        x, ls, qv, qls = make_dataset(n=n, n_labels=L, q=80)
+        gt_d, gt_i = ground_truth(x, ls, qv, qls, k)
+        t0 = time.perf_counter()
+        eng = LabelHybridEngine.build(x, ls, mode="eis", c=0.2,
+                                      backend="flat")
+        eli_build = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ung = BASELINE_REGISTRY["ung"](x, ls)
+        ung_build = time.perf_counter() - t0
+        for name, s, bt in (("ELI-0.2", eng, eli_build),
+                            ("ung", ung, ung_build)):
+            qps, rec, us = measure(s, qv, qls, k, gt_i, n)
+            rows.append({"name": f"exp6/L={L}/{name}",
+                         "us_per_call": f"{us:.1f}", "qps": f"{qps:.0f}",
+                         "recall": f"{rec:.4f}", "build_s": f"{bt:.2f}"})
+    emit(rows, "exp6")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

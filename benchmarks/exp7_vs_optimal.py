@@ -1,0 +1,37 @@
+"""Exp-7 — distance to the optimal approach (one index per query key).
+
+ELI-0.5 ~ optimal QPS at a fraction of its space; ELI-2.0 trades QPS for
+a hard 2x space budget."""
+from repro.baselines import BASELINE_REGISTRY
+from repro.core.engine import LabelHybridEngine
+
+from .common import emit, ground_truth, make_dataset, measure
+
+
+def run(n=6_000, k=10, L=16):
+    x, ls, qv, qls = make_dataset(n=n, n_labels=L, q=120)
+    gt_d, gt_i = ground_truth(x, ls, qv, qls, k)
+    rows = []
+    systems = [
+        ("optimal", BASELINE_REGISTRY["optimal"](x, ls), None),
+        ("ELI-0.5", LabelHybridEngine.build(x, ls, mode="eis", c=0.5,
+                                            backend="flat"), None),
+        ("ELI-0.2", LabelHybridEngine.build(x, ls, mode="eis", c=0.2,
+                                            backend="flat"), None),
+        ("ELI-2.0", LabelHybridEngine.build(x, ls, mode="sis",
+                                            space_budget=2 * n,
+                                            backend="flat"), None),
+    ]
+    for name, s, _ in systems:
+        qps, rec, us = measure(s, qv, qls, k, gt_i, n)
+        size = (s.stats().total_entries if hasattr(s, "stats")
+                else getattr(s, "total_entries", -1))
+        rows.append({"name": f"exp7/{name}", "us_per_call": f"{us:.1f}",
+                     "qps": f"{qps:.0f}", "recall": f"{rec:.4f}",
+                     "entries": size})
+    emit(rows, "exp7")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""One function per paper table/figure.  Prints ``name,us_per_call,derived``
+CSV.  ``python -m benchmarks.run [--only fig6,exp1,...]``"""
+import argparse
+import sys
+import time
+import traceback
+
+from . import (exp1_qps_recall, exp2_index_cost, exp3_shard_scaling,
+               exp5_distributions, exp6_label_universe, exp7_vs_optimal,
+               exp8_adaptive, exp9_backends, fig6_elastic_factor)
+
+ALL = {
+    "fig6": fig6_elastic_factor.run,
+    "exp1": exp1_qps_recall.run,
+    "exp2": exp2_index_cost.run,
+    "exp3": exp3_shard_scaling.run,
+    "exp5": exp5_distributions.run,
+    "exp6": exp6_label_universe.run,
+    "exp7": exp7_vs_optimal.run,
+    "exp8": exp8_adaptive.run,
+    "exp9": exp9_backends.run,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(ALL)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        t0 = time.time()
+        try:
+            ALL[name]()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Serving example: continuous-batching decoder + ELI retrieval.
+
+Requests carry (prompt, label set); the engine embeds the prompt with the
+model itself, retrieves label-filtered neighbors through the ELI-selected
+indexes, splices them as context, and generates with slot-based batching —
+the "vector DB next to the LLM" deployment the paper targets.
+
+    PYTHONPATH=src python examples/rag_serve.py --arch mamba2_130m
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2_130m")
+    args = ap.parse_args()
+    import sys
+    sys.argv = ["serve", "--arch", args.arch, "--requests", "10",
+                "--slots", "4", "--max-new", "10"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,475 @@
+"""Architecture registry: one ArchSpec per assigned architecture, plus the
+uniform (arch × shape) "cell" abstraction the dry-run, roofline, trainer
+and smoke tests all consume.
+
+A cell binds:   step function        (train_step / prefill / decode)
+                argument structs     (ShapeDtypeStructs — no allocation)
+                in/out shardings     (logical-axis rules → mesh-specific)
+                donation             (params+opt for train, cache for decode)
+
+Shape policy (per the assignment matrix):
+    train_4k     seq 4096   global_batch 256   -> train_step
+    prefill_32k  seq 32768  global_batch 32    -> serve prefill
+    decode_32k   seq 32768  global_batch 128   -> serve decode (1 token)
+    long_500k    seq 524288 global_batch 1     -> decode; SSM/hybrid/
+                 window archs only (DESIGN.md §4 records the skips)
+
+Sharding policy (DESIGN.md §5): training uses FSDP rules (EMBED axis over
+'data'; kimi-k2 additionally over 'pod') with ZeRO-sharded optimizer
+moments; serving uses plain TP for ≤15B models and FSDP for kimi-k2;
+long-context decode swaps to the flash-decoding layout (KV seq over
+'data').
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as shd
+from .models import encdec as ed
+from .models import hybrid as hy
+from .models import transformer as tf
+from .models import vlm
+from .models.common import ParamSpec, is_spec, param_structs
+from .optim import Optimizer, OptimizerConfig
+
+
+# ---------------------------------------------------------------------------
+# shapes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                       # transformer | hybrid | encdec | vlm
+    cfg: Any
+    optimizer: OptimizerConfig = OptimizerConfig()
+    train_rules: str = "fsdp"         # fsdp | fsdp_pod
+    serve_rules: str = "default"      # default | fsdp
+    long_ok: bool = False             # may lower the long_500k cell
+    long_skip_reason: str = ""
+    n_patches: int = 576              # vlm prefix length
+    layout: str = "megatron"          # megatron | dp2d | dp_flat (§Perf)
+    notes: str = ""
+
+    def supports(self, shape: ShapeSpec) -> bool:
+        if shape.name == "long_500k":
+            return self.long_ok
+        return True
+
+
+ARCH_IDS = [
+    "starcoder2_7b", "minitron_4b", "nemotron_4_15b", "gemma2_9b",
+    "zamba2_7b", "kimi_k2_1t_a32b", "phi35_moe_42b", "whisper_medium",
+    "llava_next_mistral_7b", "mamba2_130m",
+]
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.ARCH
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+# ---------------------------------------------------------------------------
+# rules resolution
+# ---------------------------------------------------------------------------
+
+_RULES = {
+    "default": shd.DEFAULT_RULES,
+    "fsdp": shd.FSDP_RULES,
+    "fsdp_pod": shd.FSDP_POD_RULES,
+    "dp2d": shd.DP2D_PARAM_RULES,
+    "decode": shd.DECODE_RULES,
+    "long": shd.LONG_CONTEXT_RULES,
+}
+
+
+def param_rules(arch: ArchSpec, shape: ShapeSpec) -> shd.ShardingRules:
+    if arch.layout in ("dp2d", "dp_flat") and shape.kind == "train":
+        return shd.DP_FLAT_PARAM_RULES
+    if arch.layout == "dp2d" and shape.kind == "prefill":
+        return _RULES["dp2d"]
+    if shape.kind == "train":
+        return _RULES[arch.train_rules]
+    return _RULES["fsdp" if arch.serve_rules == "fsdp" else "default"]
+
+
+def data_rules(arch: ArchSpec, shape: ShapeSpec) -> shd.ShardingRules:
+    """Rules for activations / caches / batches."""
+    if shape.name == "long_500k":
+        return _RULES["long"]
+    if shape.kind in ("prefill", "decode"):
+        return _RULES["decode"]       # flash-decoding cache layout
+    if arch.layout in ("dp2d", "dp_flat"):
+        return shd.DP_FLAT_ACT_RULES  # batch over the whole mesh
+    return _RULES["default"]
+
+
+def act_rules(arch: ArchSpec, shape: ShapeSpec) -> shd.ShardingRules:
+    """Rules binding the model's logical activation constraints."""
+    if arch.layout in ("dp2d", "dp_flat") and shape.kind == "train":
+        return shd.DP_FLAT_ACT_RULES
+    if arch.layout == "dp2d" and shape.kind == "prefill":
+        return shd.DP2D_ACT_RULES
+    return shd.DEFAULT_RULES
+
+
+# ---------------------------------------------------------------------------
+# param specs / counting
+# ---------------------------------------------------------------------------
+
+def param_specs(arch: ArchSpec):
+    if arch.family in ("transformer", "vlm"):
+        return tf.transformer_specs(arch.cfg)
+    if arch.family == "hybrid":
+        return hy.hybrid_specs(arch.cfg)
+    if arch.family == "encdec":
+        return ed.encdec_specs(arch.cfg)
+    raise ValueError(arch.family)
+
+
+def count_total_params(arch: ArchSpec) -> int:
+    return sum(math.prod(s.shape)
+               for s in jax.tree.leaves(param_specs(arch), is_leaf=is_spec))
+
+
+def useful_flops(arch: ArchSpec, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS for the roofline: parameter flops (6·N_active·D train,
+    2·N_active·D forward) plus the attention context term (PaLM-style MFU
+    accounting), window-capped for local layers, plus the SSD chunk term
+    for Mamba2 layers.  Conservative: masking/softmax/elementwise excluded.
+    """
+    cfg = arch.cfg
+    B, S = shape.global_batch, shape.seq_len
+    fwd_mult = {"train": 3.0, "prefill": 1.0, "decode": 1.0}[shape.kind]
+    tokens = B * (1 if shape.kind == "decode" else S)
+    n_act = count_active_params(arch)
+    total = 2.0 * n_act * tokens * fwd_mult
+
+    def attn_term(n_layers, ctx, h, dh, causal=True):
+        # 2 ops (QK^T + PV) x 2 flops/MAC, halved for causal masking
+        per_q = ctx * (0.5 if causal and shape.kind != "decode" else 1.0)
+        return fwd_mult * 4.0 * B * n_layers * h * dh * \
+            (1 if shape.kind == "decode" else S) * per_q
+
+    if arch.family in ("transformer", "vlm"):
+        h, dh, L = cfg.n_heads, cfg.resolved_head_dim, cfg.n_layers
+        if cfg.layer_pattern == "local_global":
+            w = min(cfg.window or S, S)
+            total += attn_term(L / 2, w, h, dh)      # local
+            total += attn_term(L / 2, S, h, dh)      # global
+        else:
+            total += attn_term(L, S, h, dh)
+    elif arch.family == "encdec":
+        h, dh, L = cfg.n_heads, cfg.resolved_head_dim, cfg.n_layers
+        if shape.kind != "decode":
+            # encoder runs on enc_len tokens regardless of S
+            total += fwd_mult * 4.0 * B * L * h * dh * cfg.enc_len * cfg.enc_len
+        total += attn_term(L, S, h, dh)                      # dec self
+        total += attn_term(L, cfg.enc_len, h, dh, causal=False)  # cross
+    elif arch.family == "hybrid":
+        scfg = cfg.ssm_cfg()
+        if cfg.n_groups:
+            total += attn_term(cfg.n_groups, S, cfg.n_heads,
+                               cfg.resolved_head_dim)
+        # SSD chunked dual form per layer per token (intra-chunk Lc-wide
+        # quadratic + state terms), fwd only; x3 for train
+        Lc = min(scfg.chunk, S)
+        H, P, N, G = scfg.n_heads, scfg.d_head, scfg.d_state, scfg.n_groups
+        per_tok = 2.0 * Lc * (G * N + H * P) + 4.0 * H * P * N
+        total += fwd_mult * cfg.n_layers * tokens * per_tok
+    return total
+
+
+def count_active_params(arch: ArchSpec) -> int:
+    """MoE-aware active parameter count (per-token), for 6·N_active·D."""
+    cfg = arch.cfg
+    specs = param_specs(arch)
+    flat = jax.tree.flatten_with_path(specs, is_leaf=is_spec)[0]
+    total = 0
+    for path, s in flat:
+        n = math.prod(s.shape)
+        keys = [getattr(k, "key", getattr(k, "idx", "")) for k in path]
+        if arch.family in ("transformer", "vlm") and cfg.is_moe and \
+                "moe" in keys and any(k in ("w_up", "w_gate", "w_down")
+                                      for k in keys):
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# batch structs + logical axes
+# ---------------------------------------------------------------------------
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _bf16(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def batch_structs(arch: ArchSpec, shape: ShapeSpec):
+    """(structs, logical) for the data arguments of the cell's step fn."""
+    B, S = shape.global_batch, shape.seq_len
+    cfg = arch.cfg
+    tok2 = (shd.BATCH, shd.SEQ)
+    if shape.kind == "train":
+        if arch.family == "transformer":
+            return ({"tokens": _i32((B, S)), "labels": _i32((B, S)),
+                     "positions": _i32((B, S))},
+                    {"tokens": tok2, "labels": tok2, "positions": tok2})
+        if arch.family == "hybrid":
+            return ({"tokens": _i32((B, S)), "labels": _i32((B, S)),
+                     "positions": _i32((B, S))},
+                    {"tokens": tok2, "labels": tok2, "positions": tok2})
+        if arch.family == "encdec":
+            return ({"frames": _bf16((B, cfg.enc_len, cfg.d_model)),
+                     "tokens": _i32((B, S)), "labels": _i32((B, S)),
+                     "positions": _i32((B, S))},
+                    {"frames": (shd.BATCH, None, shd.EMBED),
+                     "tokens": tok2, "labels": tok2, "positions": tok2})
+        if arch.family == "vlm":
+            St = S - arch.n_patches
+            return ({"patches": _bf16((B, arch.n_patches, cfg.d_model)),
+                     "tokens": _i32((B, St)), "labels": _i32((B, St))},
+                    {"patches": (shd.BATCH, None, shd.EMBED),
+                     "tokens": tok2, "labels": tok2})
+    if shape.kind == "prefill":
+        if arch.family in ("transformer", "hybrid"):
+            return ({"tokens": _i32((B, S)), "positions": _i32((B, S))},
+                    {"tokens": tok2, "positions": tok2})
+        if arch.family == "encdec":
+            return ({"frames": _bf16((B, cfg.enc_len, cfg.d_model)),
+                     "tokens": _i32((B, S)), "positions": _i32((B, S))},
+                    {"frames": (shd.BATCH, None, shd.EMBED),
+                     "tokens": tok2, "positions": tok2})
+        if arch.family == "vlm":
+            St = S - arch.n_patches
+            return ({"patches": _bf16((B, arch.n_patches, cfg.d_model)),
+                     "tokens": _i32((B, St))},
+                    {"patches": (shd.BATCH, None, shd.EMBED),
+                     "tokens": tok2})
+    if shape.kind == "decode":
+        return ({"token": _i32((B,)), "position": _i32((B,))},
+                {"token": (shd.BATCH,), "position": (shd.BATCH,)})
+    raise ValueError((arch.family, shape.kind))
+
+
+def cache_structs(arch: ArchSpec, shape: ShapeSpec):
+    """(structs, logical) for the KV cache / SSM state of serve cells."""
+    B, S = shape.global_batch, shape.seq_len
+    if arch.family in ("transformer", "vlm"):
+        return (tf.cache_structs(arch.cfg, B, S),
+                tf.cache_logical_tree(arch.cfg))
+    if arch.family == "hybrid":
+        return (hy.state_structs(arch.cfg, B, S),
+                hy.state_logical(arch.cfg))
+    if arch.family == "encdec":
+        return (ed.cache_structs(arch.cfg, B, S), ed.cache_logical(arch.cfg))
+    raise ValueError(arch.family)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(arch: ArchSpec) -> Callable:
+    cfg = arch.cfg
+    fam = arch.family
+    if fam == "transformer":
+        return lambda p, b: tf.loss_fn(p, b["tokens"], b["labels"],
+                                       b["positions"], cfg)
+    if fam == "hybrid":
+        return lambda p, b: hy.loss_fn(p, b["tokens"], b["labels"],
+                                       b["positions"], cfg)
+    if fam == "encdec":
+        return lambda p, b: ed.loss_fn(p, b["frames"], b["tokens"],
+                                       b["labels"], b["positions"], cfg)
+    if fam == "vlm":
+        return lambda p, b: vlm.loss_fn(p, b["patches"], b["tokens"],
+                                        b["labels"], cfg)
+    raise ValueError(fam)
+
+
+def make_train_step(arch: ArchSpec) -> Callable:
+    loss = make_loss_fn(arch)
+    opt = Optimizer(arch.optimizer)
+
+    def train_step(params, opt_state, batch):
+        (l, ce), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        params, opt_state, stats = opt.update(grads, opt_state, params)
+        return params, opt_state, {"loss": l, "ce": ce, **stats}
+
+    return train_step
+
+
+def make_prefill(arch: ArchSpec, max_len: int) -> Callable:
+    cfg = arch.cfg
+    fam = arch.family
+    if fam == "transformer":
+        return lambda p, b: tf.prefill(p, b["tokens"], b["positions"], cfg,
+                                       max_len)
+    if fam == "hybrid":
+        return lambda p, b: hy.prefill(p, b["tokens"], b["positions"], cfg,
+                                       max_len)
+    if fam == "encdec":
+        return lambda p, b: ed.prefill(p, b["frames"], b["tokens"],
+                                       b["positions"], cfg, max_len)
+    if fam == "vlm":
+        return lambda p, b: vlm.prefill(p, b["patches"], b["tokens"], cfg,
+                                        max_len)
+    raise ValueError(fam)
+
+
+def make_decode(arch: ArchSpec) -> Callable:
+    cfg = arch.cfg
+    fam = arch.family
+    if fam in ("transformer", "vlm"):
+        return lambda p, c, b: tf.decode_step(p, c, b["token"],
+                                              b["position"], cfg)
+    if fam == "hybrid":
+        return lambda p, c, b: hy.decode_step(p, c, b["token"],
+                                              b["position"], cfg)
+    if fam == "encdec":
+        return lambda p, c, b: ed.decode_step(p, c, b["token"],
+                                              b["position"], cfg)
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# cells — the unit the dry-run lowers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: ArchSpec
+    shape: ShapeSpec
+    step_fn: Callable
+    arg_structs: tuple                 # positional args (trees of structs)
+    arg_logical: tuple                 # matching logical-axis trees
+    arg_rules: tuple                   # matching ShardingRules per arg
+    donate_argnums: tuple
+    out_shardings_builder: Callable    # mesh -> out_shardings (or None)
+    act_rules: shd.ShardingRules = shd.DEFAULT_RULES
+
+    def in_shardings(self, mesh):
+        return tuple(
+            shd.struct_shardings(structs, logical, mesh, rules)
+            for structs, logical, rules in
+            zip(self.arg_structs, self.arg_logical, self.arg_rules))
+
+    def lower(self, mesh):
+        jitted = jax.jit(self.step_fn,
+                         in_shardings=self.in_shardings(mesh),
+                         out_shardings=self.out_shardings_builder(mesh),
+                         donate_argnums=self.donate_argnums)
+        # logical activation constraints bind to this mesh during tracing
+        with shd.activation_context(mesh, self.act_rules):
+            return jitted.lower(*self.arg_structs)
+
+
+def _logical_of_specs(spec_tree):
+    return jax.tree.map(lambda s: s.logical, spec_tree, is_leaf=is_spec)
+
+
+def build_cell(arch_id: str, shape_name: str) -> Cell:
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if not arch.supports(shape):
+        raise ValueError(
+            f"{arch_id} x {shape_name} skipped: {arch.long_skip_reason}")
+
+    p_specs = param_specs(arch)
+    p_structs = param_structs(p_specs)
+    p_logical = _logical_of_specs(p_specs)
+    p_rules = param_rules(arch, shape)
+    d_rules = data_rules(arch, shape)
+    b_structs, b_logical = batch_structs(arch, shape)
+
+    if shape.kind == "train":
+        opt = Optimizer(arch.optimizer)
+        o_specs = opt.state_specs(p_specs)
+        o_structs = param_structs(o_specs)
+        # fp32 moments (param_structs yields bf16 leaves — fix dtype)
+        o_structs = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), o_structs)
+        o_logical = _logical_of_specs(o_specs)
+
+        def out_sh(mesh):
+            psh = shd.struct_shardings(p_structs, p_logical, mesh, p_rules)
+            osh = shd.struct_shardings(o_structs, o_logical, mesh, p_rules)
+            return (psh, osh, None)
+
+        return Cell(arch, shape, make_train_step(arch),
+                    (p_structs, o_structs, b_structs),
+                    (p_logical, o_logical, b_logical),
+                    (p_rules, p_rules, d_rules),
+                    donate_argnums=(0, 1), out_shardings_builder=out_sh,
+                    act_rules=act_rules(arch, shape))
+
+    if shape.kind == "prefill":
+        c_structs, c_logical = cache_structs(arch, shape)
+
+        def out_sh(mesh):
+            return (None,
+                    shd.struct_shardings(c_structs, c_logical, mesh, d_rules))
+
+        return Cell(arch, shape, make_prefill(arch, shape.seq_len),
+                    (p_structs, b_structs),
+                    (p_logical, b_logical),
+                    (p_rules, d_rules),
+                    donate_argnums=(), out_shardings_builder=out_sh,
+                    act_rules=act_rules(arch, shape))
+
+    # decode
+    c_structs, c_logical = cache_structs(arch, shape)
+
+    def out_sh(mesh):
+        return (None,
+                shd.struct_shardings(c_structs, c_logical, mesh, d_rules))
+
+    return Cell(arch, shape, make_decode(arch),
+                (p_structs, c_structs, b_structs),
+                (p_logical, c_logical, b_logical),
+                (p_rules, d_rules, d_rules),
+                donate_argnums=(1,), out_shardings_builder=out_sh,
+                act_rules=act_rules(arch, shape))
+
+
+def cell_matrix() -> list[tuple[str, str, bool, str]]:
+    """All 40 (arch, shape, runnable, skip_reason) rows."""
+    rows = []
+    for aid in ARCH_IDS:
+        arch = get_arch(aid)
+        for sname, sh in SHAPES.items():
+            ok = arch.supports(sh)
+            rows.append((aid, sname, ok,
+                         "" if ok else arch.long_skip_reason))
+    return rows

@@ -1,0 +1,35 @@
+"""Baselines the paper compares against (§1, §6).
+
+All baselines share one calling convention:
+    searcher.search(queries [Q, D], query_label_sets, k) -> (dists, global ids)
+
+  prefilter / postfilter — the two basic strategies on an unmodified graph
+                           index (paper §2.2, Fig 3)
+  acorn1 / acorn_gamma   — ACORN [38]-like: PreFiltering on a (γ-densified)
+                           graph that ignores labels at build time
+  ung                    — UNG [5]-like: per-group subgraphs + cross-group
+                           edges to minimal supersets, label-navigating entry
+  nhq                    — NHQ [42]-like: fusion distance via label-augmented
+                           vectors (hard filter replaced by a soft penalty)
+  optimal                — one index per query label set (elastic factor 1;
+                           the paper's upper bound, Exp-7)
+
+Deviations from the original C++ systems are documented in each module and
+in DESIGN.md §3 — the baselines here are faithful to the *strategies*, not
+line-by-line ports.
+"""
+from .filtered import PreFilteringBaseline, PostFilteringBaseline  # noqa: F401
+from .acorn import AcornBaseline  # noqa: F401
+from .ung import UNGBaseline  # noqa: F401
+from .nhq import NHQBaseline  # noqa: F401
+from .optimal import OptimalBaseline  # noqa: F401
+
+BASELINE_REGISTRY = {
+    "prefilter": PreFilteringBaseline,
+    "postfilter": PostFilteringBaseline,
+    "acorn1": lambda *a, **kw: AcornBaseline(*a, gamma=1, **kw),
+    "acorn_gamma": lambda *a, **kw: AcornBaseline(*a, gamma=6, **kw),
+    "ung": UNGBaseline,
+    "nhq": NHQBaseline,
+    "optimal": OptimalBaseline,
+}

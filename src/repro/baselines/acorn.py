@@ -1,0 +1,63 @@
+"""ACORN [38]-like baseline: predicate-agnostic dense graph + PreFiltering.
+
+ACORN builds a graph with γ× the normal out-degree *without* consulting
+labels, betting that the passing subgraph of a denser graph stays connected.
+Search is PreFiltering over the (compressed) neighbor lists.
+
+Faithfulness notes (DESIGN.md §3):
+  * ACORN-γ's "neighbor list expansion" — keep the top γ·M exact neighbors
+    with pruning disabled — is reproduced verbatim (``gamma > 1`` skips the
+    α-prune, keeping the raw top γ·M candidate list).
+  * ACORN-1 approximates the original's two-hop expansion with a plain
+    degree-M graph under PreFiltering; this under-reports ACORN-1 slightly
+    and is noted wherever Exp-1 numbers are compared.
+  * The paper's observed failure mode — recall collapse at low selectivity /
+    large |𝓛| — is a property of the *strategy* and reproduces here (see
+    benchmarks/exp1_qps_recall.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from ..core.labels import encode_many, masks_to_int32_words
+from ..index.graph import GraphIndex, _pairwise_block_topk, build_vamana
+
+
+class AcornBaseline:
+    def __init__(self, vectors: np.ndarray,
+                 label_sets: Sequence[tuple[int, ...]], *, metric: str = "l2",
+                 M: int = 16, gamma: int = 6, ef_search: int = 64, **_):
+        t0 = time.perf_counter()
+        self.gamma = gamma
+        self.name = f"acorn{'_gamma' if gamma > 1 else '1'}"
+        self.n = len(label_sets)
+        vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        words = masks_to_int32_words(encode_many(label_sets))
+        if gamma > 1:
+            # dense, unpruned top-(γM) adjacency — ACORN's expansion
+            adj = _pairwise_block_topk(vectors, gamma * M)
+            medoid = int(np.argmin(np.sum(
+                (vectors - vectors.mean(0)) ** 2, axis=1)))
+        else:
+            adj, medoid = build_vamana(vectors, M=M)
+        self.index = GraphIndex(vectors, words, metric=metric, M=adj.shape[1],
+                                ef_search=ef_search, strategy="pre",
+                                adjacency=adj, medoid=medoid)
+        self.build_seconds = time.perf_counter() - t0
+
+    def search(self, queries: np.ndarray,
+               query_label_sets: Sequence[tuple[int, ...]], k: int,
+               ef: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        qwords = masks_to_int32_words(encode_many(query_label_sets))
+        return self.index.search(queries, qwords, k, ef=ef)
+
+    @property
+    def last_stats(self):
+        return self.index.last_stats
+
+    @property
+    def nbytes(self) -> int:
+        return self.index.nbytes

@@ -1,0 +1,62 @@
+"""PreFiltering / PostFiltering baselines (paper §2.2).
+
+One unmodified graph index over the whole dataset; the label predicate is
+evaluated on the fly during traversal:
+
+  * PreFiltering  — filtered-out nodes are removed from navigation (their
+    outgoing edges are not followed).  Fails to reach the answer when the
+    passing subgraph is disconnected from the entry (paper Fig 3, query 1).
+  * PostFiltering — every node navigates; only passing nodes enter the
+    result set (incremental k+1 semantics).  Cost degrades as ~N/|S(L_q)|
+    when selectivity is low (paper §2.2) — exactly the 1/elastic-factor
+    blow-up that motivates ELI.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from ..core.labels import encode_many, masks_to_int32_words
+from ..index.graph import GraphIndex
+
+
+class _FilteredStrategyBaseline:
+    strategy: str = "post"
+    name: str = "postfilter"
+
+    def __init__(self, vectors: np.ndarray,
+                 label_sets: Sequence[tuple[int, ...]], *, metric: str = "l2",
+                 M: int = 16, ef_search: int = 64, **graph_params):
+        t0 = time.perf_counter()
+        self.n = len(label_sets)
+        words = masks_to_int32_words(encode_many(label_sets))
+        self.index = GraphIndex(vectors, words, metric=metric, M=M,
+                                ef_search=ef_search, strategy=self.strategy,
+                                **graph_params)
+        self.build_seconds = time.perf_counter() - t0
+
+    def search(self, queries: np.ndarray,
+               query_label_sets: Sequence[tuple[int, ...]], k: int,
+               ef: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        qwords = masks_to_int32_words(encode_many(query_label_sets))
+        return self.index.search(queries, qwords, k, ef=ef)
+
+    @property
+    def last_stats(self):
+        return self.index.last_stats
+
+    @property
+    def nbytes(self) -> int:
+        return self.index.nbytes
+
+
+class PreFilteringBaseline(_FilteredStrategyBaseline):
+    strategy = "pre"
+    name = "prefilter"
+
+
+class PostFilteringBaseline(_FilteredStrategyBaseline):
+    strategy = "post"
+    name = "postfilter"

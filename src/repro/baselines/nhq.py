@@ -1,0 +1,83 @@
+"""NHQ [42]-like baseline: fusion distance instead of a hard filter.
+
+NHQ folds the label predicate into the similarity itself:
+``d_fused(q, x) = δ(q, x) + w · label_mismatch(L_q, L_x)`` and runs a plain
+(unfiltered) graph search with the fused metric.
+
+Implementation: label *augmentation* — each label becomes an extra vector
+dimension of magnitude √w, so squared-L2 on the augmented vectors is
+exactly ``δ(q, x) + w · hamming(L_q, L_x)``.  This turns the fused metric
+into a plain L2 search, reusing the stock graph backend end-to-end (the
+same trick NHQ's "fusion distance" amounts to for binary attributes; the
+original tunes w per dataset — the paper's criticism that the weight needs
+manual adjustment applies verbatim, and Exp-1 sweeps it).
+
+Results are the fused top-k; entries violating the hard predicate are NOT
+removed (NHQ has no completeness guarantee — paper Table 1), so recall
+against the filtered ground truth directly exposes the method's soft-filter
+error.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from ..core.labels import MAX_LABELS, encode_many, masks_to_int32_words
+from ..index.graph import GraphIndex
+
+
+def _label_matrix(label_sets: Sequence[tuple[int, ...]], num_labels: int
+                  ) -> np.ndarray:
+    out = np.zeros((len(label_sets), num_labels), dtype=np.float32)
+    for i, ls in enumerate(label_sets):
+        for l in ls:
+            out[i, l] = 1.0
+    return out
+
+
+class NHQBaseline:
+    name = "nhq"
+
+    def __init__(self, vectors: np.ndarray,
+                 label_sets: Sequence[tuple[int, ...]], *, metric: str = "l2",
+                 weight: float | None = None, num_labels: int | None = None,
+                 M: int = 16, ef_search: int = 64, **_):
+        t0 = time.perf_counter()
+        vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        self.n, d = vectors.shape
+        self.num_labels = num_labels or (
+            max((max(ls) for ls in label_sets if ls), default=0) + 1)
+        # empirical weight rule (NHQ §5): scale to the data's typical
+        # squared distance so one mismatched label ≈ one σ of geometry
+        if weight is None:
+            sample = vectors[:: max(1, self.n // 256)]
+            weight = float(np.median(
+                np.sum((sample[:, None, :] - sample[None, :, :]) ** 2, -1)))
+        self.weight = weight
+        lm = _label_matrix(label_sets, self.num_labels)
+        aug = np.concatenate([vectors, np.sqrt(weight) * lm], axis=1)
+        words = masks_to_int32_words(encode_many(label_sets))
+        self.index = GraphIndex(aug, words, metric="l2", M=M,
+                                ef_search=ef_search, strategy="post")
+        self.build_seconds = time.perf_counter() - t0
+
+    def search(self, queries: np.ndarray,
+               query_label_sets: Sequence[tuple[int, ...]], k: int,
+               ef: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        lm = _label_matrix(query_label_sets, self.num_labels)
+        aug = np.concatenate(
+            [np.asarray(queries, np.float32), np.sqrt(self.weight) * lm],
+            axis=1)
+        # no hard filter: search with the empty label set (everything passes)
+        qwords = masks_to_int32_words(encode_many([()] * len(query_label_sets)))
+        return self.index.search(aug, qwords, k, ef=ef)
+
+    @property
+    def last_stats(self):
+        return self.index.last_stats
+
+    @property
+    def nbytes(self) -> int:
+        return self.index.nbytes

@@ -1,0 +1,124 @@
+"""UNG [5]-like baseline: label-navigating graph with cross-group edges.
+
+UNG groups entries by exact label set, builds a proximity subgraph per
+group, and wires each group to its *minimal supersets* (paper Fig 5) with
+cross-group edges so that, entering at the query's label-set group, the
+traversal reaches exactly the vectors whose label sets contain the query's
+— completeness by construction, no wasted distance computations on
+non-passing nodes.
+
+Reproduced structure:
+  * per-group Vamana subgraph (degree ≤ M),
+  * ``cross_edges`` nearest-neighbor links from every node to each minimal
+    superset group,
+  * query entry at the group equal to L_q, else at every *minimal* group key
+    containing L_q (the paper's LNG descendants),
+  * traversal restricted to passing nodes (they all pass by construction —
+    the restriction only guards entry-point corner cases).
+
+The known failure mode the paper reports — the cross-group edge count and
+entry enumeration growing with |𝓛| until search efficiency collapses —
+emerges naturally (benchmarks/exp6_label_universe.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import numpy as np
+
+from ..core.groups import GroupTable
+from ..core.labels import (encode_label_set, encode_many, key_contains,
+                           key_popcount, mask_key, masks_to_int32_words)
+from ..index.graph import GraphIndex, build_vamana
+
+
+class UNGBaseline:
+    name = "ung"
+
+    def __init__(self, vectors: np.ndarray,
+                 label_sets: Sequence[tuple[int, ...]], *, metric: str = "l2",
+                 M: int = 16, cross_edges: int = 3, ef_search: int = 64, **_):
+        t0 = time.perf_counter()
+        vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        self.n = len(label_sets)
+        words = masks_to_int32_words(encode_many(label_sets))
+        self.table = GroupTable.build_groups_only(label_sets)
+        dag = self.table.minimal_superset_dag()
+
+        width = M + cross_edges * max(1, max(
+            (len(v) for v in dag.values()), default=1))
+        width = min(width, M + 12)           # cap cross-edge fan-out
+        adj = np.full((self.n, width), -1, dtype=np.int32)
+        self.entries_by_key: dict[tuple[int, ...], np.ndarray] = {}
+
+        for key, rows in self.table.groups.items():
+            sub = vectors[rows]
+            sub_adj, sub_medoid = build_vamana(sub, M=M)
+            for local, g in enumerate(rows):
+                nbrs = sub_adj[local]
+                nbrs = rows[nbrs[nbrs >= 0]]
+                adj[g, : nbrs.size] = nbrs
+            self.entries_by_key[key] = np.array([rows[sub_medoid]],
+                                                dtype=np.int32)
+
+        # cross-group edges: each node links to its nearest `cross_edges`
+        # nodes in every minimal superset group
+        for key, supers in dag.items():
+            rows = self.table.groups[key]
+            base_deg = (adj[rows] >= 0).sum(axis=1)
+            for skey in supers:
+                srows = self.table.groups[skey]
+                d = (np.sum(vectors[rows] ** 2, 1)[:, None]
+                     - 2.0 * vectors[rows] @ vectors[srows].T
+                     + np.sum(vectors[srows] ** 2, 1)[None, :])
+                take = min(cross_edges, srows.size)
+                nearest = np.argpartition(d, take - 1, axis=1)[:, :take]
+                for li, g in enumerate(rows):
+                    for t in nearest[li]:
+                        slot = base_deg[li]
+                        if slot >= width:
+                            break
+                        adj[g, slot] = srows[t]
+                        base_deg[li] += 1
+
+        self.index = GraphIndex(vectors, words, metric=metric, M=width,
+                                ef_search=ef_search, strategy="pre",
+                                adjacency=adj, medoid=0)
+        self.build_seconds = time.perf_counter() - t0
+
+    def _entries(self, qls: tuple[int, ...], max_entries: int = 8) -> np.ndarray:
+        qkey = mask_key(encode_label_set(qls))
+        exact = self.entries_by_key.get(qkey)
+        if exact is not None:
+            return exact
+        # minimal group keys containing the query key
+        containing = [g for g in self.table.groups if key_contains(g, qkey)]
+        containing.sort(key=key_popcount)
+        minimal: list[tuple[int, ...]] = []
+        for g in containing:
+            if not any(key_contains(g, m) for m in minimal):
+                minimal.append(g)
+        ents = [self.entries_by_key[m][0] for m in minimal[:max_entries]]
+        if not ents:
+            return np.array([-1], dtype=np.int32)
+        return np.asarray(ents, dtype=np.int32)
+
+    def search(self, queries: np.ndarray,
+               query_label_sets: Sequence[tuple[int, ...]], k: int,
+               ef: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        qwords = masks_to_int32_words(encode_many(query_label_sets))
+        ents = [self._entries(tuple(q)) for q in query_label_sets]
+        width = max(e.size for e in ents)
+        entries = np.full((len(ents), width), -1, dtype=np.int32)
+        for i, e in enumerate(ents):
+            entries[i, : e.size] = e
+        return self.index.search(queries, qwords, k, ef=ef, entries=entries)
+
+    @property
+    def last_stats(self):
+        return self.index.last_stats
+
+    @property
+    def nbytes(self) -> int:
+        return self.index.nbytes

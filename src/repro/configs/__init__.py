@@ -1,0 +1,52 @@
+"""One module per assigned architecture (exact published configs) plus the
+paper's own vector-search workload config (``eli_paper``).
+
+``reduced_arch(arch_id)`` shrinks any config to a CPU-runnable smoke size
+(same family/topology, tiny dims) — used by tests/test_arch_smoke.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..arch import ArchSpec, get_arch
+from ..models.encdec import EncDecConfig
+from ..models.hybrid import HybridConfig
+from ..models.transformer import TransformerConfig
+
+
+def reduced_arch(arch_id: str) -> ArchSpec:
+    arch = get_arch(arch_id)
+    cfg = arch.cfg
+    if isinstance(cfg, TransformerConfig):
+        n_layers = 4 if cfg.layer_pattern == "local_global" else 2
+        if cfg.is_moe and cfg.first_dense:
+            n_layers = 3
+        small = dataclasses.replace(
+            cfg, n_layers=n_layers, d_model=64,
+            n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 2), head_dim=16,
+            d_ff=128, vocab=512,
+            n_experts=min(cfg.n_experts, 4) if cfg.is_moe else 0,
+            top_k=min(cfg.top_k, 2) if cfg.is_moe else 0,
+            d_ff_expert=64 if cfg.is_moe else 0,
+            d_ff_shared=64 if (cfg.is_moe and cfg.shared_expert) else 0,
+            first_dense=min(cfg.first_dense, 1),
+            window=min(cfg.window, 8) if cfg.window else None,
+            q_chunk=16, kv_chunk=16, loss_chunk=32)
+    elif isinstance(cfg, HybridConfig):
+        pure_ssm = cfg.n_groups == 0
+        small = dataclasses.replace(
+            cfg, n_layers=4 if pure_ssm else 5,
+            attn_period=cfg.attn_period if pure_ssm else 2,
+            d_model=64, n_heads=4, n_kv_heads=min(cfg.n_kv_heads, 4),
+            head_dim=16, d_ff=128, vocab=512,
+            ssm_state=16, ssm_head=16, ssm_chunk=8,
+            q_chunk=16, kv_chunk=16, loss_chunk=32)
+    elif isinstance(cfg, EncDecConfig):
+        small = dataclasses.replace(
+            cfg, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+            head_dim=16, d_ff=128, vocab=512, enc_len=24,
+            q_chunk=16, kv_chunk=16, loss_chunk=32)
+    else:
+        raise TypeError(type(cfg))
+    opt = dataclasses.replace(arch.optimizer, warmup_steps=2, decay_steps=10)
+    return dataclasses.replace(arch, cfg=small, optimizer=opt, n_patches=8)

@@ -1,0 +1,29 @@
+"""The paper's own workload config: label-hybrid AKNN search (ELI).
+
+Mirrors §6 of the paper: 1M base vectors, |L|-label Zipf universe,
+HNSW-equivalent cost model (index cost = #vectors), elastic-factor bound
+0.2 for the fixed-efficiency variant and 2.0x space for the fixed-space
+variant.  Consumed by repro.core.engine / benchmarks, not by the model
+registry (ELI is the retrieval layer; see DESIGN.md §4).
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ELIPaperConfig:
+    n_vectors: int = 1_000_000
+    dim: int = 128
+    n_labels: int = 32              # |L| universe size (paper sweeps 8..512)
+    zipf_a: float = 1.5
+    avg_label_size: float = 3.0
+    elastic_bound: float = 0.2      # ELI-0.2
+    space_budget: float = 2.0       # ELI-2.0 (x base index size)
+    backend: str = "flat"           # flat | ivf | graph
+    k: int = 10
+    graph_degree: int = 16          # M (HNSW-equivalent)
+
+
+PAPER = ELIPaperConfig()
+
+# scaled-down variant every test/benchmark can run on one CPU core
+SMALL = ELIPaperConfig(n_vectors=20_000, dim=32, n_labels=12, k=10)

@@ -1,0 +1,30 @@
+"""Gemma-2 9B — local/global alternating attention, logit soft-capping
+[arXiv:2408.00118; hf].
+
+42L (21 local/global pairs), d_model 3584, 16 heads (GQA kv=8,
+head_dim 256), GeGLU d_ff 14336, vocab 256000, window 4096,
+attn softcap 50, final softcap 30, (1+w) RMSNorm pre+post, tied embed
+with sqrt(d) scaling.
+
+long_500k RUNS for this arch: local layers carry a rolling 4096 cache;
+global layers decode in O(S) against the 500k cache — sub-quadratic
+decode per DESIGN.md §4.
+"""
+from ..arch import ArchSpec
+from ..models.transformer import TransformerConfig
+from ..optim import OptimizerConfig
+
+ARCH = ArchSpec(
+    arch_id="gemma2_9b",
+    family="transformer",
+    cfg=TransformerConfig(
+        name="gemma2-9b", n_layers=42, d_model=3584, n_heads=16,
+        n_kv_heads=8, head_dim=256, d_ff=14336, vocab=256000,
+        act="gelu_tanh", gated_mlp=True, rope_theta=1e4,
+        tie_embeddings=True, norm_plus_one=True, post_block_norm=True,
+        embed_scale=True, attn_softcap=50.0, final_softcap=30.0,
+        layer_pattern="local_global", window=4096),
+    optimizer=OptimizerConfig(kind="adamw"),
+    layout="dp2d",
+    long_ok=True,
+)

@@ -1,0 +1,35 @@
+"""Kimi-K2 — trillion-parameter MoE, 32B active [arXiv:2501.kimi2].
+
+61L (layer 0 dense, DeepSeek-V3 style), d_model 7168, 64 heads
+(GQA kv=8 per the assignment table, head_dim 128), 384 experts top-8 with
+d_ff_expert 2048 + one shared expert, dense-layer d_ff 18432,
+vocab 163840, SwiGLU.
+
+Capacity notes (DESIGN.md §5): 1.04T params ⇒ bf16 weights alone are
+2.08 TB.  Training shards parameters AND gradients over
+(pod, data, model) = 512 ways (FSDP_POD rules) and uses **Adafactor**
+(factored second moment ≈ 0.1% of AdamW state) — the only optimizer
+whose state fits v5e HBM at this scale.  Single-pod (256-chip) training
+is over HBM budget by design; EXPERIMENTS.md §Dry-run reports the
+honest per-device bytes for both meshes.
+"""
+from ..arch import ArchSpec
+from ..models.transformer import TransformerConfig
+from ..optim import OptimizerConfig
+
+ARCH = ArchSpec(
+    arch_id="kimi_k2_1t_a32b",
+    family="transformer",
+    cfg=TransformerConfig(
+        name="kimi-k2-1t-a32b", n_layers=61, d_model=7168, n_heads=64,
+        n_kv_heads=8, head_dim=128, d_ff=18432, vocab=163840,
+        act="silu", gated_mlp=True, rope_theta=5e4, tie_embeddings=False,
+        n_experts=384, top_k=8, d_ff_expert=2048, shared_expert=True,
+        d_ff_shared=2048, first_dense=1),
+    optimizer=OptimizerConfig(kind="adafactor"),
+    train_rules="fsdp_pod",
+    serve_rules="fsdp",
+    long_ok=False,
+    long_skip_reason=("pure full attention; 500k KV cache ≈ 131 GB/seq "
+                      "with no state-compressed form (DESIGN.md §4)"),
+)

@@ -1,0 +1,26 @@
+"""LLaVA-NeXT (Mistral-7B backbone) — VLM
+[hf:llava-hf/llava-v1.6-mistral-7b-hf].
+
+Backbone: 32L, d_model 4096, 32 heads (GQA kv=8, head_dim 128), SwiGLU
+d_ff 14336, vocab 32000.  The anyres vision tower + projector are a
+stub: input_specs() supplies post-projector patch embeddings
+[B, 576, 4096] spliced ahead of the text tokens (assignment rule for
+[vlm] archs).  Loss masks the image prefix.
+"""
+from ..arch import ArchSpec
+from ..models.transformer import TransformerConfig
+from ..optim import OptimizerConfig
+
+ARCH = ArchSpec(
+    arch_id="llava_next_mistral_7b",
+    family="vlm",
+    cfg=TransformerConfig(
+        name="llava-next-mistral-7b", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14336, vocab=32000,
+        act="silu", gated_mlp=True, rope_theta=1e4, tie_embeddings=False),
+    optimizer=OptimizerConfig(kind="adamw"),
+    layout="dp2d",
+    n_patches=576,
+    long_ok=False,
+    long_skip_reason="pure full attention (see starcoder2_7b)",
+)

@@ -1,0 +1,26 @@
+"""Mamba2-130M — pure SSD (state-space duality) LM [arXiv:2405.21060].
+
+24 SSD layers, d_model 768 (d_inner 1536, 24 heads of 64), ssm_state 128,
+vocab 50280, attention-free (attn_period > n_layers disables the shared
+attention block entirely — the hybrid module degenerates to a pure Mamba2
+stack).  Tied embeddings.
+
+long_500k RUNS: decode is O(1) per layer from the [B, H, P, N] SSD state;
+the 500k "cache" is a fixed-size state, the paper's headline property.
+"""
+from ..arch import ArchSpec
+from ..models.hybrid import HybridConfig
+from ..optim import OptimizerConfig
+
+ARCH = ArchSpec(
+    arch_id="mamba2_130m",
+    family="hybrid",
+    cfg=HybridConfig(
+        name="mamba2-130m", n_layers=24, d_model=768, vocab=50280,
+        n_heads=12, n_kv_heads=12, head_dim=64, d_ff=2048,
+        attn_period=25,  # > n_layers: attention-free
+        ssm_state=128, ssm_head=64, ssm_expand=2),
+    optimizer=OptimizerConfig(kind="adamw"),
+    layout="dp_flat",
+    long_ok=True,
+)

@@ -1,0 +1,22 @@
+"""Nemotron-4-15B — dense GQA, squared-ReLU [arXiv:2402.16819].
+
+32L, d_model 6144, 48 heads (GQA kv=8, head_dim 128), d_ff 24576,
+vocab 256000, untied.
+"""
+from ..arch import ArchSpec
+from ..models.transformer import TransformerConfig
+from ..optim import OptimizerConfig
+
+ARCH = ArchSpec(
+    arch_id="nemotron_4_15b",
+    family="transformer",
+    cfg=TransformerConfig(
+        name="nemotron-4-15b", n_layers=32, d_model=6144, n_heads=48,
+        n_kv_heads=8, head_dim=128, d_ff=24576, vocab=256000,
+        act="relu2", gated_mlp=False, rope_theta=1e4,
+        tie_embeddings=False),
+    optimizer=OptimizerConfig(kind="adamw"),
+    layout="dp2d",
+    long_ok=False,
+    long_skip_reason="pure full attention (see starcoder2_7b)",
+)

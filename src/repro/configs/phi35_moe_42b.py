@@ -1,0 +1,24 @@
+"""Phi-3.5-MoE — 42B total / 6.6B active, 16 experts top-2
+[hf:microsoft/Phi-3.5-MoE-instruct].
+
+32L, d_model 4096, 32 heads (GQA kv=8, head_dim 128), 16 experts top-2
+with d_ff 6400 (SwiGLU), vocab 32064, untied.
+"""
+from ..arch import ArchSpec
+from ..models.transformer import TransformerConfig
+from ..optim import OptimizerConfig
+
+ARCH = ArchSpec(
+    arch_id="phi35_moe_42b",
+    family="transformer",
+    cfg=TransformerConfig(
+        name="phi3.5-moe-42b-a6.6b", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=6400, vocab=32064,
+        act="silu", gated_mlp=True, rope_theta=1e4, tie_embeddings=False,
+        n_experts=16, top_k=2, d_ff_expert=6400),
+    optimizer=OptimizerConfig(kind="adamw"),
+    # dp_flat measured WORSE for MoE (tokens re-shard onto the expert axis
+    # per layer outweighs the local-attention win) — §Perf; keep Megatron.
+    long_ok=False,
+    long_skip_reason="pure full attention (see starcoder2_7b)",
+)

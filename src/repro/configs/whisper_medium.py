@@ -1,0 +1,25 @@
+"""Whisper-medium — encoder-decoder ASR backbone [arXiv:2212.04356].
+
+24 encoder + 24 decoder layers, d_model 1024, 16 heads (MHA, kv=16,
+head_dim 64), d_ff 4096 GELU with biases, vocab 51865.  The conv audio
+frontend is a stub: input_specs() supplies precomputed frame embeddings
+[B, 1500, 1024] (assignment rule for [audio] archs).
+
+Decode shapes run against the *decoder* self-attention cache; cross-
+attention K/V are computed once at prefill over the 1500 encoder frames.
+"""
+from ..arch import ArchSpec
+from ..models.encdec import EncDecConfig
+from ..optim import OptimizerConfig
+
+ARCH = ArchSpec(
+    arch_id="whisper_medium",
+    family="encdec",
+    cfg=EncDecConfig(
+        name="whisper-medium", n_layers=24, d_model=1024, n_heads=16,
+        n_kv_heads=16, head_dim=64, d_ff=4096, vocab=51865, enc_len=1500),
+    optimizer=OptimizerConfig(kind="adamw"),
+    layout="dp2d",
+    long_ok=False,
+    long_skip_reason="full-attention decoder (see starcoder2_7b)",
+)

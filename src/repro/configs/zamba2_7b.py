@@ -1,0 +1,27 @@
+"""Zamba2-7B — Mamba2 backbone + weight-shared attention block
+[arXiv:2411.15242].
+
+81 Mamba2 (SSD) blocks, d_model 3584, ssm_state 64; one shared
+full-attention block (32 heads, kv=32 i.e. MHA, head_dim 112,
+GeGLU d_ff 14336) applied after every 6 Mamba blocks (13 invocations,
+3-layer Mamba tail), vocab 32000.
+
+long_500k RUNS: Mamba layers decode O(1) from SSD state; the 13 shared-
+attention invocations keep seq-sharded KV (flash-decoding layout).
+"""
+from ..arch import ArchSpec
+from ..models.hybrid import HybridConfig
+from ..optim import OptimizerConfig
+
+ARCH = ArchSpec(
+    arch_id="zamba2_7b",
+    family="hybrid",
+    cfg=HybridConfig(
+        name="zamba2-7b", n_layers=81, d_model=3584, vocab=32000,
+        n_heads=32, n_kv_heads=32, head_dim=112, d_ff=14336,
+        attn_period=6, act="gelu_tanh", gated_mlp=True,
+        ssm_state=64, ssm_head=64, ssm_expand=2),
+    optimizer=OptimizerConfig(kind="adamw"),
+    layout="dp_flat",
+    long_ok=True,
+)

@@ -1,0 +1,209 @@
+"""LabelHybridEngine — the end-to-end ELI runtime.
+
+Pipeline (paper §3-§5):
+  1. group the labelled dataset (GroupTable; exact or sampled closure sizes),
+  2. run selection — EIS (fixed elastic-factor bound c) or SIS (fixed space
+     budget τ, binary search for the best c),
+  3. materialize one physical index per selected label-set key over its
+     closure S(L) (any registered backend: flat / ivf / graph / distributed),
+  4. route each query to its assigned index (max elastic factor) and run a
+     PostFiltering top-k inside it; local ids map back to global rows.
+
+The engine is the artifact behind every benchmark figure and the serving
+integration (repro.serve).  Routing of query label sets *outside* the
+selection workload falls back to the smallest selected superset-key index —
+the same max-elastic-factor rule, evaluated lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from ..index.base import get_index_builder
+from .eis import EISResult, greedy_eis
+from .elastic import elastic_factor, min_elastic_factor
+from .estimator import sampled_group_table
+from .groups import EMPTY_KEY, GroupTable, observed_query_keys
+from .labels import encode_label_set, encode_many, key_contains, mask_key, masks_to_int32_words
+from .sis import SISResult, sis
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n: int                       # dataset cardinality
+    n_candidates: int            # candidate indices considered
+    n_selected: int              # physical indexes built (incl. top)
+    selection_cost: int          # Σ|I| excluding top (paper cost model)
+    total_entries: int           # Σ|I| including top (actual rows stored)
+    achieved_c: float            # min elastic factor over the workload
+    select_seconds: float
+    build_seconds: float
+    nbytes: int
+
+
+class LabelHybridEngine:
+    """Build-once, search-many ELI engine over a pluggable index backend."""
+
+    def __init__(self, vectors: np.ndarray, label_sets: Sequence[tuple[int, ...]],
+                 table: GroupTable, selection: EISResult,
+                 sis_result: SISResult | None, backend: str, metric: str,
+                 backend_params: dict, select_seconds: float):
+        self.vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        self.label_sets = list(label_sets)
+        self.table = table
+        self.selection = selection
+        self.sis_result = sis_result
+        self.backend = backend
+        self.metric = metric
+
+        masks = encode_many(self.label_sets)
+        self.label_words = masks_to_int32_words(masks)
+
+        t0 = time.perf_counter()
+        builder = get_index_builder(backend)
+        self.indexes: dict[tuple[int, ...], object] = {}
+        self.rows: dict[tuple[int, ...], np.ndarray] = {}
+        for key in selection.selected:
+            rows = (np.arange(len(self.label_sets), dtype=np.int64)
+                    if key == EMPTY_KEY else table.closure_members(key))
+            self.rows[key] = rows
+            self.indexes[key] = builder.build(
+                self.vectors[rows], self.label_words[rows], metric=metric,
+                **backend_params)
+        self._build_seconds = time.perf_counter() - t0
+        self._select_seconds = select_seconds
+
+    # -- construction --------------------------------------------------------
+    @staticmethod
+    def build(vectors: np.ndarray, label_sets: Sequence[tuple[int, ...]], *,
+              mode: str = "eis", c: float = 0.2, space_budget: int | None = None,
+              query_label_sets: Sequence[tuple[int, ...]] | None = None,
+              backend: str = "flat", metric: str = "l2",
+              sample_size: int | None = None,
+              **backend_params) -> "LabelHybridEngine":
+        """Select indices (EIS at bound ``c`` or SIS under ``space_budget``)
+        and materialize them.
+
+        ``query_label_sets``: explicit workload; default derives candidates
+        from all subsets of observed base label sets (paper default).
+        ``sample_size``: use the §4.2 sampled closure-size estimator.
+        """
+        t0 = time.perf_counter()
+        qkeys = (observed_query_keys(query_label_sets)
+                 if query_label_sets is not None else None)
+        if sample_size is not None:
+            table = sampled_group_table(label_sets, sample_size)
+        else:
+            table = GroupTable.build(label_sets, qkeys)
+
+        sis_result: SISResult | None = None
+        if mode == "eis":
+            selection = greedy_eis(table.closure_sizes, c, qkeys)
+        elif mode == "sis":
+            if space_budget is None:
+                raise ValueError("mode='sis' requires space_budget")
+            sis_result = sis(table.closure_sizes, space_budget, qkeys)
+            selection = sis_result.eis
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        select_seconds = time.perf_counter() - t0
+
+        return LabelHybridEngine(vectors, label_sets, table, selection,
+                                 sis_result, backend, metric, backend_params,
+                                 select_seconds)
+
+    # -- routing --------------------------------------------------------------
+    def route(self, query_label_set: tuple[int, ...]) -> tuple[int, ...]:
+        """Selected index key serving this query (max elastic factor)."""
+        qkey = mask_key(encode_label_set(query_label_set))
+        hit = self.selection.assignment.get(qkey)
+        if hit is not None:
+            return hit
+        # unseen query key: among selected keys ⊆ qkey pick the smallest
+        # index (max elastic factor for the fixed |S(L_q)|)
+        best, best_size = EMPTY_KEY, self.rows[EMPTY_KEY].size
+        for skey, size in self.selection.selected.items():
+            if key_contains(qkey, skey) and size < best_size:
+                best, best_size = skey, size
+        return best
+
+    # -- search ----------------------------------------------------------------
+    def search(self, queries: np.ndarray,
+               query_label_sets: Sequence[tuple[int, ...]], k: int,
+               **search_params) -> tuple[np.ndarray, np.ndarray]:
+        """Filtered top-k for a query batch.  Returns (dists, GLOBAL ids);
+        id == N ⇒ empty slot."""
+        queries = np.asarray(queries, dtype=np.float32)
+        Q = queries.shape[0]
+        n = len(self.label_sets)
+        out_d = np.full((Q, k), np.inf, dtype=np.float32)
+        out_i = np.full((Q, k), n, dtype=np.int32)
+
+        qwords = masks_to_int32_words(encode_many(query_label_sets))
+        by_key: dict[tuple[int, ...], list[int]] = {}
+        for qi, qls in enumerate(query_label_sets):
+            by_key.setdefault(self.route(tuple(qls)), []).append(qi)
+
+        for key, qids in by_key.items():
+            index = self.indexes[key]
+            rows = self.rows[key]
+            d, li = index.search(queries[qids], qwords[qids], k,
+                                 **search_params)
+            li = np.asarray(li)
+            empty = li >= rows.size
+            gi = np.where(empty, n, rows[np.clip(li, 0, rows.size - 1)])
+            out_d[qids] = d
+            out_i[qids] = gi.astype(np.int32)
+        return out_d, out_i
+
+    # -- reporting --------------------------------------------------------------
+    def stats(self) -> EngineStats:
+        qkeys = [k for k in self.table.closure_sizes if k != EMPTY_KEY]
+        achieved = min_elastic_factor(qkeys, self.table.closure_sizes,
+                                      self.selection.selected)
+        return EngineStats(
+            n=len(self.label_sets),
+            n_candidates=len(self.table.closure_sizes),
+            n_selected=len(self.indexes),
+            selection_cost=self.selection.cost,
+            total_entries=self.selection.total_entries,
+            achieved_c=achieved,
+            select_seconds=self._select_seconds,
+            build_seconds=self._build_seconds,
+            nbytes=sum(ix.nbytes for ix in self.indexes.values()),
+        )
+
+
+def brute_force_filtered(vectors: np.ndarray,
+                         label_sets: Sequence[tuple[int, ...]],
+                         queries: np.ndarray,
+                         query_label_sets: Sequence[tuple[int, ...]],
+                         k: int, metric: str = "l2"
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Exact filtered ground truth (benchmark reference)."""
+    import jax.numpy as jnp
+    from ..kernels import ref
+
+    lx = masks_to_int32_words(encode_many(label_sets))
+    lq = masks_to_int32_words(encode_many(query_label_sets))
+    d, i = ref.filtered_topk(jnp.asarray(queries, jnp.float32),
+                             jnp.asarray(vectors, jnp.float32),
+                             jnp.asarray(lq), jnp.asarray(lx), k, metric)
+    return np.asarray(d), np.asarray(i)
+
+
+def recall_at_k(result_ids: np.ndarray, truth_ids: np.ndarray, n: int) -> float:
+    """Paper §2.1 recall: |result ∩ truth| / |truth| (averaged over queries;
+    id == n means an empty slot and is ignored)."""
+    total, hit = 0, 0
+    for r, t in zip(result_ids, truth_ids):
+        tt = set(int(v) for v in t if v < n)
+        if not tt:
+            continue
+        rr = set(int(v) for v in r if v < n)
+        hit += len(rr & tt)
+        total += len(tt)
+    return hit / total if total else 1.0

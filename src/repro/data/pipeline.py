@@ -1,0 +1,118 @@
+"""Deterministic, coordinator-free data pipeline.
+
+Design for 1000+ nodes (DESIGN.md §5):
+
+  * **Stateless indexing** — batch(step, host) is a pure function of
+    (seed, step, host); there is no shared cursor, no coordinator, and a
+    restarted/elastically-rescaled job regenerates exactly the same global
+    stream.  Skip-ahead is O(1): resume at step k without replaying.
+  * **Host sharding** — each host materializes only its slice of the
+    global batch; re-sharding after an elastic resize is a pure
+    re-partition of the same deterministic stream.
+  * **Straggler friendliness** — no inter-host data dependencies at all;
+    a slow host never blocks another host's input pipeline.
+
+The token stream is synthetic but *learnable* (affine-recurrence tokens
+with noise), so examples/train_lm.py shows a real loss curve.  The
+vector+label generator reproduces the paper's §6 workloads (Zipf /
+Uniform / Poisson / Multinormal label distributions over N(0,1) or
+clustered vectors).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.labels import LabelWorkloadConfig, generate_label_sets
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+    noise: float = 0.05          # fraction of tokens replaced by noise
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+    def _rng(self, step: int) -> np.random.Generator:
+        # counter-based: independent of call order, O(1) skip-ahead
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.host_id]))
+
+    def batch(self, step: int) -> dict[str, np.ndarray]:
+        """{"tokens","labels","positions"} for this host at ``step``."""
+        rng = self._rng(step)
+        B, S, V = self.host_batch, self.seq_len, self.vocab
+        x0 = rng.integers(0, V, size=(B, 1))
+        mult = 1 + 2 * rng.integers(0, 4, size=(B, 1))    # odd ⇒ bijective
+        t = np.arange(S + 1)
+        # affine recurrence x_{t+1} = m·x_t + 17 (mod V), vectorized via pow
+        seq = (x0 * np.power(mult, t[None, :], dtype=object) % V).astype(np.int64)
+        add = np.zeros_like(seq)
+        for i in range(1, S + 1):
+            add[:, i] = (add[:, i - 1] * mult[:, 0] + 17) % V
+        seq = (seq + add) % V
+        noise_mask = rng.random((B, S + 1)) < self.noise
+        noise_tok = rng.integers(0, V, size=(B, S + 1))
+        seq = np.where(noise_mask, noise_tok, seq)
+        return {
+            "tokens": seq[:, :-1].astype(np.int32),
+            "labels": seq[:, 1:].astype(np.int32),
+            "positions": np.broadcast_to(
+                np.arange(S, dtype=np.int32)[None], (B, S)).copy(),
+        }
+
+    def reshard(self, n_hosts: int, host_id: int) -> "TokenStream":
+        """Elastic resize: same global stream, new host slice."""
+        return dataclasses.replace(self, n_hosts=n_hosts, host_id=host_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class VectorLabelDataset:
+    """Paper §6 workload generator: vectors + label sets + queries."""
+    n: int = 20_000
+    dim: int = 32
+    n_labels: int = 12
+    distribution: str = "zipf"    # zipf | uniform | poisson | multinormal
+    zipf_a: float = 1.5
+    avg_size: float = 3.0
+    n_clusters: int = 0           # >0: clustered (IVF-friendly) vectors
+    seed: int = 0
+
+    def generate(self):
+        rng = np.random.default_rng(self.seed)
+        if self.n_clusters:
+            centers = rng.normal(size=(self.n_clusters, self.dim)) * 4.0
+            assign = rng.integers(0, self.n_clusters, size=self.n)
+            vectors = centers[assign] + rng.normal(size=(self.n, self.dim))
+        else:
+            vectors = rng.normal(size=(self.n, self.dim))
+        vectors = vectors.astype(np.float32)
+        label_sets = generate_label_sets(self.n, LabelWorkloadConfig(
+            num_labels=self.n_labels, distribution=self.distribution,
+            zipf_a=self.zipf_a, mean_set_size=self.avg_size, seed=self.seed))
+        return vectors, label_sets
+
+    def queries(self, n_queries: int, k_labels: tuple[int, ...] = (0, 1, 2, 3)):
+        """Query vectors + query label sets drawn from base distribution."""
+        rng = np.random.default_rng(self.seed + 1)
+        qv = rng.normal(size=(n_queries, self.dim)).astype(np.float32)
+        base = generate_label_sets(n_queries, LabelWorkloadConfig(
+            num_labels=self.n_labels, distribution=self.distribution,
+            zipf_a=self.zipf_a, mean_set_size=self.avg_size,
+            seed=self.seed + 1))
+        qls = []
+        for ls in base:
+            size = int(rng.choice(k_labels))
+            qls.append(tuple(sorted(rng.choice(ls, size=min(size, len(ls)),
+                                               replace=False)))
+                       if ls and size else ())
+        return qv, qls

@@ -1,0 +1,15 @@
+"""Physical AKNN index backends (the paper's "modular index" layer).
+
+ELI is index-agnostic (paper Table 1): any backend implementing the
+``VectorIndex`` protocol (incremental filtered top-k) plugs into the
+selection engine.  Shipped backends:
+
+  flat  — fused filtered scan (primary TPU backend; Pallas kernels)
+  ivf   — k-means inverted file + incremental probe expansion
+  graph — degree-bounded proximity graph, batched lax.while_loop beam search
+"""
+from .base import INDEX_REGISTRY, VectorIndex, get_index_builder, register_index  # noqa: F401
+from .flat import FlatIndex  # noqa: F401
+from .ivf import IVFIndex  # noqa: F401
+from .graph import GraphIndex, SearchStats, build_vamana  # noqa: F401
+from .distributed import DistributedFlatIndex, sharded_filtered_topk  # noqa: F401

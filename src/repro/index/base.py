@@ -1,0 +1,59 @@
+"""VectorIndex protocol — the paper's "modular index" abstraction.
+
+ELI is index-agnostic (paper Table 1, "Index Flexibility"): any index that
+supports incremental filtered top-k search can serve as the physical index
+behind a selected label group.  Backends register themselves in
+``INDEX_REGISTRY`` so the engine, baselines, and benchmarks select them by
+name.
+
+Contract:
+  * ``build(vectors, label_words, metric, **params)`` — vectors are the
+    *selected subset* rows (float32 [n, d]); label_words the matching int32
+    [n, W] device-layout masks (needed because a shared index holds entries
+    whose label sets do NOT all contain a given query's labels).
+  * ``search(queries, query_label_words, k)`` — PostFiltering top-k within
+    the index: only rows whose label set contains the query's pass; returns
+    (dists [Q, k] f32 asc, ids [Q, k] int32 LOCAL row ids; id == n ⇒ empty
+    slot).  Must keep searching (k+1 semantics) until k passing rows are
+    accumulated or the index is exhausted — Lemma 3.2's cost model.
+  * ``num_vectors`` — the paper's cost measure (space ∝ #vectors, degree
+    bounded by a constant for graphs).
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import numpy as np
+
+
+class VectorIndex(Protocol):
+    num_vectors: int
+    dim: int
+    metric: str
+
+    def search(self, queries: np.ndarray, query_label_words: np.ndarray,
+               k: int) -> tuple[np.ndarray, np.ndarray]:
+        ...
+
+    @property
+    def nbytes(self) -> int:
+        ...
+
+
+INDEX_REGISTRY: dict[str, Callable[..., VectorIndex]] = {}
+
+
+def register_index(name: str):
+    def deco(cls):
+        INDEX_REGISTRY[name] = cls
+        cls.backend_name = name
+        return cls
+    return deco
+
+
+def get_index_builder(name: str):
+    try:
+        return INDEX_REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown index backend {name!r}; "
+                       f"available: {sorted(INDEX_REGISTRY)}") from None

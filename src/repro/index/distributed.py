@@ -1,0 +1,127 @@
+"""Distributed filtered search — shard_map over the production mesh.
+
+The paper's Exp-3 scales search over CPU threads; the TPU-native analogue
+shards the (selected) sub-index rows across the ``data`` mesh axis:
+
+    per-device:  fused filtered scan of the local shard -> local top-k
+    collective:  one all-gather of [k] (dist, id) pairs per device,
+                 followed by a device-local merge (lax.top_k)
+
+Merging top-k is monotone — a late shard can only *improve* results — which
+is the formal basis for the straggler-mitigation mode in serving (partial
+merge on timeout; see repro.serve).  The paper's observation that "only one
+sub-index is invoked per query" (Exp-3) maps to routing a query to one
+logical index that is physically sharded.
+
+Communication cost: 2 · devices · k · 8 bytes per query batch — independent
+of N, which is what makes the scheme collective-light (see EXPERIMENTS.md
+§Roofline for the measured terms).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ref
+
+
+def _local_topk(q, x, lq, lx, k: int, metric: str, row_offset):
+    """Device-local filtered top-k over the shard; ids shifted to global."""
+    vals, idxs = ref.filtered_topk(q, x, lq, lx, k, metric)
+    n_local = x.shape[0]
+    gids = jnp.where(idxs >= n_local, jnp.int32(2 ** 30), idxs + row_offset)
+    return vals, gids
+
+
+def sharded_filtered_topk(mesh: Mesh, *, axis: str = "data", k: int = 10,
+                          metric: str = "l2"):
+    """Build a jit'd sharded search fn for ``mesh``.
+
+    Returned fn signature: (q [Q, D], x [N, D], lq [Q, W], lx [N, W],
+    row_offset_base) -> (vals [Q, k], global_ids [Q, k]); x/lx sharded over
+    ``axis`` on dim 0, queries replicated.
+    """
+    n_shards = mesh.shape[axis]
+
+    def per_shard(q, x, lq, lx):
+        idx = jax.lax.axis_index(axis)
+        n_local = x.shape[0]
+        offset = (idx * n_local).astype(jnp.int32)
+        vals, gids = _local_topk(q, x, lq, lx, k, metric, offset)
+        # all-gather the tiny [Q, k] partials and merge locally
+        av = jax.lax.all_gather(vals, axis)          # [S, Q, k]
+        ai = jax.lax.all_gather(gids, axis)          # [S, Q, k]
+        av = jnp.moveaxis(av, 0, 1).reshape(vals.shape[0], n_shards * k)
+        ai = jnp.moveaxis(ai, 0, 1).reshape(vals.shape[0], n_shards * k)
+        neg, pos = jax.lax.top_k(-av, k)
+        return -neg, jnp.take_along_axis(ai, pos, axis=1)
+
+    shard_fn = jax.shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(), P(axis), P(), P(axis)),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return jax.jit(shard_fn)
+
+
+class DistributedFlatIndex:
+    """Flat index sharded over a mesh axis (production serving path).
+
+    Host-side wrapper: pads the row count to a multiple of the shard count,
+    places shards, runs the jit'd shard_map search, and maps padded ids
+    back.  With ELI, each *selected* sub-index is one of these — a query is
+    routed to exactly one logical index.
+    """
+
+    def __init__(self, vectors: np.ndarray, label_words: np.ndarray,
+                 mesh: Mesh, *, axis: str = "data", metric: str = "l2"):
+        self.metric = metric
+        self.mesh = mesh
+        self.axis = axis
+        n, d = vectors.shape
+        self.num_vectors, self.dim = n, d
+        s = mesh.shape[axis]
+        pad = (-n) % s
+        if pad:
+            vectors = np.concatenate(
+                [vectors, np.zeros((pad, d), vectors.dtype)], axis=0)
+            # padded rows carry an empty label mask (never passes a
+            # non-empty query); the id-range mask below handles empty queries
+            label_words = np.concatenate(
+                [label_words,
+                 np.zeros((pad, label_words.shape[1]), label_words.dtype)],
+                axis=0)
+        self._padded_n = n + pad
+        x_sharding = NamedSharding(mesh, jax.sharding.PartitionSpec(axis))
+        self.x = jax.device_put(jnp.asarray(vectors, jnp.float32), x_sharding)
+        self.lx = jax.device_put(jnp.asarray(label_words, jnp.int32), x_sharding)
+        self._fns: dict[int, callable] = {}
+
+    def _fn(self, k: int):
+        if k not in self._fns:
+            self._fns[k] = sharded_filtered_topk(
+                self.mesh, axis=self.axis, k=k, metric=self.metric)
+        return self._fns[k]
+
+    def search(self, queries: np.ndarray, query_label_words: np.ndarray,
+               k: int) -> tuple[np.ndarray, np.ndarray]:
+        q = jnp.asarray(queries, jnp.float32)
+        lq = jnp.asarray(query_label_words, jnp.int32)
+        vals, gids = self._fn(k)(q, self.x, lq, self.lx)
+        vals, gids = np.asarray(vals), np.asarray(gids)
+        # padded rows never pass the containment filter for non-empty
+        # queries; for empty queries they score as ordinary zeros — mask by
+        # id range (padding lives past the true row count of the last shard).
+        bad = (gids >= self.num_vectors)
+        vals = np.where(bad, np.inf, vals)
+        gids = np.where(bad, self.num_vectors, gids).astype(np.int32)
+        return vals, gids
+
+    @property
+    def nbytes(self) -> int:
+        return self.x.nbytes + self.lx.nbytes

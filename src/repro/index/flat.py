@@ -1,0 +1,61 @@
+"""FlatIndex — the primary TPU backend: fused filtered scan (DESIGN.md §3).
+
+Search cost is exactly ``2·n·d`` FLOPs per query on the MXU; under ELI the
+routed sub-index has n ≤ |S(L_q)|/c, so the elastic factor is a hard FLOP
+bound.  The scan streams tiles through VMEM via the Pallas ``filtered_topk``
+kernel (compiled on TPU, interpret elsewhere); ``backend="ref"`` uses the
+pure-jnp oracle, which XLA-compiles to fast vectorized code on CPU — the
+configuration used by the CPU benchmark harness.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops, ref
+from .base import register_index
+
+
+@register_index("flat")
+class FlatIndex:
+    """Brute-force tiled scan over the selected rows."""
+
+    def __init__(self, vectors: np.ndarray, label_words: np.ndarray,
+                 metric: str = "l2", kernel_backend: str = "ref",
+                 block_n: int = 1024):
+        self.vectors = jnp.asarray(np.ascontiguousarray(vectors, dtype=np.float32))
+        self.label_words = jnp.asarray(np.ascontiguousarray(label_words, dtype=np.int32))
+        self.metric = metric
+        self.kernel_backend = kernel_backend
+        self.block_n = block_n
+        self.num_vectors, self.dim = vectors.shape
+
+    @classmethod
+    def build(cls, vectors, label_words, metric: str = "l2", **params):
+        return cls(vectors, label_words, metric, **params)
+
+    def search(self, queries: np.ndarray, query_label_words: np.ndarray,
+               k: int) -> tuple[np.ndarray, np.ndarray]:
+        q = jnp.asarray(queries, dtype=jnp.float32)
+        lq = jnp.asarray(query_label_words, dtype=jnp.int32)
+        if self.kernel_backend == "ref":
+            vals, idxs = _ref_topk_jit(q, self.vectors, lq, self.label_words, k,
+                                       self.metric)
+        else:
+            vals, idxs = ops.filtered_topk(q, self.vectors, lq, self.label_words,
+                                           k=k, metric=self.metric,
+                                           block_n=self.block_n,
+                                           backend=self.kernel_backend)
+        return np.asarray(vals), np.asarray(idxs)
+
+    @property
+    def nbytes(self) -> int:
+        return self.vectors.nbytes + self.label_words.nbytes
+
+
+def _ref_topk(q, x, lq, lx, k: int, metric: str):
+    return ref.filtered_topk(q, x, lq, lx, k, metric)
+
+
+_ref_topk_jit = jax.jit(_ref_topk, static_argnums=(4, 5))

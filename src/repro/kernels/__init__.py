@@ -1,0 +1,14 @@
+"""Pallas TPU kernels: the ELI search hot path + the serving hot spot.
+
+  masked_distance — fused label-filtered distance tile (MXU matmul + VPU filter)
+  filtered_topk   — fused scan: distance + filter + in-VMEM blockwise top-k
+  gather_distance — scalar-prefetch scattered gather + distance (graph backend)
+  flash_decode    — one-token GQA attention vs a long KV cache (decode_32k /
+                    long_500k roofline hot spot; online softmax, VMEM scratch)
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd public wrapper in
+ops.py (padding, backend selection).
+"""
+from . import ops, ref  # noqa: F401
+from .ops import (filtered_topk, flash_decode, gather_distance,  # noqa: F401
+                  masked_distance)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused label-filtered distance + blockwise top-k scan.
+
+This is the production search kernel for ELI's flat/IVF backends (DESIGN.md
+§3): one pass streams database tiles HBM→VMEM, computes distances on the
+MXU, applies the label-containment filter, and reduces each tile to a
+partial top-k *inside VMEM* — the [Q, N] distance matrix is never
+materialized in HBM.  A cheap second stage (lax.top_k over the [Q, NB·K]
+partials) produces the final result.
+
+Per-tile top-k uses K rounds of (min, masked-iota argmin, knock-out) — all
+row-vectorized VPU ops, no sort network and no dynamic stores (results
+accumulate through a fori_loop carry and are written once).  Deterministic
+tie-break toward the lower global index matches ref.filtered_topk.
+
+Arithmetic-intensity note: the kernel's FLOPs are 2·|I|·D per query for the
+matmul + O(K·|I|) for the reduction; ELI bounds |I| ≤ |S(L_q)|/c, so the
+elastic factor is literally the kernel's FLOP guarantee.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .masked_distance import LABEL_WORDS, _containment, _distance_tile
+
+INF = float("inf")
+
+
+def _filtered_topk_kernel(q_ref, x_ref, lq_ref, lx_ref, vals_ref, idxs_ref, *,
+                          metric: str, k: int, n_total: int, block_n: int,
+                          idx_sentinel: int):
+    d = _distance_tile(q_ref, x_ref, metric)              # [BQ, BN] f32
+    keep = _containment(lq_ref, lx_ref)
+    base = pl.program_id(1) * block_n
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1)
+    keep = keep & ((col + base) < n_total)
+    d = jnp.where(keep, d, INF)
+
+    bq = d.shape[0]
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (bq, k), 1)
+    big = jnp.int32(block_n)
+
+    def body(j, carry):
+        dist, vals, idxs = carry
+        amin = jnp.min(dist, axis=1)                       # [BQ]
+        # argmin with lowest-index tie-break; rows of all-inf give arg big→sentinel
+        cand = jnp.where(dist == amin[:, None], col, big)
+        arg = jnp.min(cand, axis=1)                        # [BQ] int32
+        dead = jnp.isinf(amin) | (arg >= big)
+        gidx = jnp.where(dead, jnp.int32(idx_sentinel), arg + base)
+        sel = iota_k == j
+        vals = jnp.where(sel, amin[:, None], vals)
+        idxs = jnp.where(sel, gidx[:, None], idxs)
+        dist = jnp.where(col == arg[:, None], INF, dist)
+        return dist, vals, idxs
+
+    vals0 = jnp.full((bq, k), INF, dtype=jnp.float32)
+    idxs0 = jnp.full((bq, k), idx_sentinel, dtype=jnp.int32)
+    _, vals, idxs = jax.lax.fori_loop(0, k, body, (d, vals0, idxs0))
+    vals_ref[:, 0, :] = vals
+    idxs_ref[:, 0, :] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q", "block_n",
+                                              "n_total", "interpret"))
+def filtered_topk_pallas(q, x, lq_words, lx_words, *, k: int,
+                         metric: str = "l2", block_q: int = 8,
+                         block_n: int = 512, n_total: int | None = None,
+                         interpret: bool = True):
+    """Fused scan: -> (vals [Q, k], idxs [Q, k]); idx ``n_total`` = no result.
+
+    Inputs pre-padded (Q % block_q == 0, N % block_n == 0, D % 128 == 0).
+    """
+    Q, D = q.shape
+    N = x.shape[0]
+    nt = N if n_total is None else n_total
+    nq, nb = Q // block_q, N // block_n
+    kernel = functools.partial(_filtered_topk_kernel, metric=metric, k=k,
+                               n_total=nt, block_n=block_n, idx_sentinel=nt)
+    vals, idxs = pl.pallas_call(
+        kernel,
+        grid=(nq, nb),
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda iq, ib: (iq, 0)),
+            pl.BlockSpec((block_n, D), lambda iq, ib: (ib, 0)),
+            pl.BlockSpec((block_q, LABEL_WORDS), lambda iq, ib: (iq, 0)),
+            pl.BlockSpec((block_n, LABEL_WORDS), lambda iq, ib: (ib, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, 1, k), lambda iq, ib: (iq, ib, 0)),
+            pl.BlockSpec((block_q, 1, k), lambda iq, ib: (iq, ib, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, nb, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, nb, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, x, lq_words, lx_words)
+
+    # Stage 2: merge the per-block partials.  Flattened block-major order
+    # keeps ties resolving toward the lower global index (top_k is stable).
+    flat_v = vals.reshape(Q, nb * k)
+    flat_i = idxs.reshape(Q, nb * k)
+    neg, pos = jax.lax.top_k(-flat_v, k)
+    return -neg, jnp.take_along_axis(flat_i, pos, axis=1)

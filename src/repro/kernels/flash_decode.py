@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: flash-decoding attention for single-token serving.
+
+The decode_32k / long_500k hot spot: one query token per sequence attends
+to a long KV cache.  The op is memory-bound (roofline §Perf: every decode
+cell's dominant term is HBM), so the kernel's job is to stream K/V through
+VMEM exactly once at full bandwidth with the softmax fused:
+
+    grid = (B, S / block_s); the S axis iterates sequentially per batch
+    row ("arbitrary" dimension semantics), carrying the online-softmax
+    state (m, l, acc) in VMEM scratch.  Each step:
+
+      s   = q · K_blockᵀ / sqrt(Dh)        (MXU, [KH·G, block_s])
+      m'  = max(m, max_s)                   (VPU)
+      acc = acc·e^{m-m'} + e^{s-m'} · V_block
+      l   = l·e^{m-m'} + Σ e^{s-m'}
+
+    the final block writes out = acc / l.
+
+GQA is native: q arrives [KH·G, Dh] per row and K/V [block_s, KH, Dh];
+the score matmul batches over KH on the VMEM-resident tiles.  Per-row
+cache lengths mask out unwritten slots (continuous batching: every slot
+has its own position).
+
+Block sizes are hardware-aligned: block_s a multiple of 128 (lane dim of
+the [block_s, Dh] K tile), Dh a multiple of 128 for the MXU contraction.
+VMEM footprint per step ≈ block_s·KH·Dh·2·2 B (K+V) + scratch — e.g.
+512·8·128·4 = 2 MiB, comfortably inside the ~16 MiB VMEM budget while
+double-buffering the HBM stream.
+
+Validated in interpret mode against ref.decode_attention_ref over a
+shape/dtype sweep (tests/test_kernels_flash_decode.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(len_ref, q_ref, k_ref, v_ref, out_ref,
+                         m_ref, l_ref, acc_ref, *, block_s: int,
+                         n_blocks: int, kh: int, group: int, head_dim: int):
+    """One (batch row, kv block) step.
+
+    q_ref   [1, KH*G, Dh]      (same block every step)
+    k_ref   [1, block_s, KH, Dh]
+    v_ref   [1, block_s, KH, Dh]
+    out_ref [1, KH*G, Dh]
+    scratch m/l [KH*G, 1] f32, acc [KH*G, Dh] f32
+    """
+    sb = pl.program_id(1)
+
+    @pl.when(sb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # [KH*G, Dh]
+    k = k_ref[0].astype(jnp.float32)                      # [bs, KH, Dh]
+    v = v_ref[0].astype(jnp.float32)
+
+    scale = 1.0 / math.sqrt(head_dim)
+    qg = q.reshape(kh, group, head_dim)
+    # scores: [KH, G, bs] — contraction over Dh on the MXU, batched on KH
+    s = jax.lax.dot_general(
+        qg, jnp.swapaxes(k, 0, 1),                        # [KH, bs, Dh]
+        (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+
+    # mask slots at/after this row's cache length
+    length = len_ref[0]
+    pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 2) + sb * block_s
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    s2 = s.reshape(kh * group, block_s)
+    m_prev = m_ref[...]                                   # [KH*G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s2, axis=1, keepdims=True))
+    p = jnp.exp(s2 - m_new)                               # [KH*G, bs]
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+
+    # p @ V: [KH, G, bs] x [KH, bs, Dh] -> [KH, G, Dh]
+    pv = jax.lax.dot_general(
+        p.reshape(kh, group, block_s), jnp.swapaxes(v, 0, 1),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv.reshape(kh * group, head_dim)
+
+    @pl.when(sb == n_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        out_ref[0] = (acc_ref[...] / denom).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode_pallas(q, k_cache, v_cache, lengths, *, block_s: int = 512,
+                        interpret: bool = True):
+    """One-token GQA decode attention.
+
+    q        [B, H, Dh]  (H = KH·G)
+    k_cache  [B, S, KH, Dh]
+    v_cache  [B, S, KH, Dh]
+    lengths  [B] int32 — valid cache slots per row (continuous batching)
+    returns  [B, H, Dh], dtype of q.
+
+    S % block_s == 0 required (ops.py pads); masked slots never contribute.
+    """
+    B, H, Dh = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    assert H % KH == 0 and S % block_s == 0, (H, KH, S, block_s)
+    G = H // KH
+    n_blocks = S // block_s
+
+    kernel = functools.partial(
+        _flash_decode_kernel, block_s=block_s, n_blocks=n_blocks,
+        kh=KH, group=G, head_dim=Dh)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, sb: (b,)),
+            pl.BlockSpec((1, H, Dh), lambda b, sb: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, KH, Dh), lambda b, sb: (b, sb, 0, 0)),
+            pl.BlockSpec((1, block_s, KH, Dh), lambda b, sb: (b, sb, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, Dh), lambda b, sb: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),     # m (running max)
+            pltpu.VMEM((H, 1), jnp.float32),     # l (running denom)
+            pltpu.VMEM((H, Dh), jnp.float32),    # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(lengths, q, k_cache, v_cache)

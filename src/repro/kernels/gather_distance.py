@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: scalar-prefetch neighbor gather + distance.
+
+The graph-backend search loop repeatedly needs distances from the query to a
+*scattered* candidate set (the frontier's neighbor lists).  On TPU the
+idiomatic pattern is scalar prefetch: the candidate id array arrives in SMEM
+ahead of the grid, and each grid step's BlockSpec ``index_map`` reads the id
+to DMA exactly that database row HBM→VMEM — a software-pipelined gather, no
+host round-trip.
+
+One grid step processes one candidate row (rows are scattered, so a block
+cannot span several).  Padding ids (< 0) are clamped to row 0 by the
+index_map and masked to +inf by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU grid spec with scalar prefetch (works under interpret=True too)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+INF = float("inf")
+
+
+def _gather_distance_kernel(ids_ref, q_ref, x_ref, out_ref, *, metric: str):
+    q = q_ref[...].astype(jnp.float32)          # [1, D]
+    xr = x_ref[...].astype(jnp.float32)         # [1, D]
+    ip = jnp.sum(q * xr)
+    if metric == "ip":
+        d = -ip
+    else:
+        d = jnp.sum((q - xr) ** 2)
+    out_ref[0, 0] = d
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def gather_distance_pallas(q_row, x, ids, *, metric: str = "l2",
+                           interpret: bool = True):
+    """[D], [N, D], [B] int32 -> [B] f32 distances; ids < 0 -> +inf."""
+    if pltpu is None:  # pragma: no cover
+        raise RuntimeError("pallas tpu grid specs unavailable")
+    B = ids.shape[0]
+    D = q_row.shape[0]
+    clamped = jnp.maximum(ids, 0).astype(jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, ids_ref: (0, 0)),
+            pl.BlockSpec((1, D), lambda i, ids_ref: (ids_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, ids_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_gather_distance_kernel, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        interpret=interpret,
+    )(clamped, q_row[None, :], x)
+    return jnp.where(ids >= 0, out[:, 0], INF)

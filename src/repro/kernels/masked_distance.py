@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused label-filtered distance block.
+
+Computes a [BQ, BN] tile of squared-L2 (or negative-IP) distances between a
+query tile and a database tile, with the label-containment filter fused into
+the same VMEM pass: filtered-out columns are written as +inf, so no second
+pass over HBM is needed.
+
+TPU mapping (DESIGN.md §3): the -2·q·xᵀ term is an MXU matmul over
+128-aligned tiles; norms and the bitmask filter ride the VPU on the same
+resident tiles.  The label bitmask is W=4 int32 words (128-label universe),
+unrolled statically — four AND/CMP vector ops per tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.labels import NUM_WORDS
+
+LABEL_WORDS = 2 * NUM_WORDS   # int32 words per mask
+INF = float("inf")
+
+
+def _containment(lq_ref, lx_ref):
+    """[BQ, W] x [BN, W] -> [BQ, BN] bool, unrolled over the W words."""
+    keep = None
+    for w in range(LABEL_WORDS):
+        lq_w = lq_ref[:, w][:, None]        # [BQ, 1]
+        lx_w = lx_ref[:, w][None, :]        # [1, BN]
+        ok = (lq_w & lx_w) == lq_w          # [BQ, BN]
+        keep = ok if keep is None else (keep & ok)
+    return keep
+
+
+def _distance_tile(q_ref, x_ref, metric: str):
+    """[BQ, D] x [BN, D] -> [BQ, BN] f32 distances on the MXU."""
+    q = q_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    ip = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if metric == "ip":
+        return -ip
+    qn = jnp.sum(q * q, axis=1, keepdims=True)      # [BQ, 1]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)      # [BN, 1]
+    return qn - 2.0 * ip + xn.T
+
+
+def _masked_distance_kernel(q_ref, x_ref, lq_ref, lx_ref, out_ref, *,
+                            metric: str, n_total: int, block_n: int):
+    d = _distance_tile(q_ref, x_ref, metric)
+    keep = _containment(lq_ref, lx_ref)
+    # mask out zero-padded database rows past n_total
+    base = pl.program_id(1) * block_n
+    col = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1) + base
+    keep = keep & (col < n_total)
+    out_ref[...] = jnp.where(keep, d, INF)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_n",
+                                              "n_total", "interpret"))
+def masked_distance_pallas(q, x, lq_words, lx_words, *, metric: str = "l2",
+                           block_q: int = 8, block_n: int = 512,
+                           n_total: int | None = None, interpret: bool = True):
+    """[Q, D], [N, D], [Q, W], [N, W] -> [Q, N] f32 masked distances.
+
+    Inputs must be pre-padded: Q % block_q == 0, N % block_n == 0, D % 128
+    == 0 (ops.py handles padding; ``n_total`` marks the real row count —
+    padded rows come out as +inf).
+    """
+    Q, D = q.shape
+    N = x.shape[0]
+    grid = (Q // block_q, N // block_n)
+    kernel = functools.partial(_masked_distance_kernel, metric=metric,
+                               n_total=N if n_total is None else n_total,
+                               block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, D), lambda iq, ib: (iq, 0)),
+            pl.BlockSpec((block_n, D), lambda iq, ib: (ib, 0)),
+            pl.BlockSpec((block_q, LABEL_WORDS), lambda iq, ib: (iq, 0)),
+            pl.BlockSpec((block_n, LABEL_WORDS), lambda iq, ib: (ib, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda iq, ib: (iq, ib)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.float32),
+        interpret=interpret,
+    )(q, x, lq_words, lx_words)

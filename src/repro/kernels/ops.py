@@ -1,0 +1,126 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles shape padding (queries → block_q, rows → block_n, features → 128
+lanes), backend selection (compiled Pallas on TPU, interpret mode
+elsewhere, pure-jnp `ref` as an escape hatch), and int32 label-word layout.
+
+All functions take *unpadded* arrays and return unpadded results.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.labels import masks_to_int32_words
+from . import ref
+from .filtered_topk import filtered_topk_pallas
+from .gather_distance import gather_distance_pallas
+from .masked_distance import LABEL_WORDS, masked_distance_pallas
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: compiled on TPU, interpreted on CPU/GPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, mult: int, value=0):
+    size = a.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, target - size)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def prepare_label_words(masks_u64: np.ndarray) -> np.ndarray:
+    """(N, NUM_WORDS) uint64 -> (N, LABEL_WORDS) int32 device layout."""
+    return masks_to_int32_words(np.asarray(masks_u64, dtype=np.uint64))
+
+
+def masked_distance(q, x, lq_words, lx_words, *, metric: str = "l2",
+                    block_q: int = 8, block_n: int = 512,
+                    backend: str = "pallas") -> jnp.ndarray:
+    """[Q, D] x [N, D] (+ label words) -> [Q, N] f32 masked distances."""
+    if backend == "ref":
+        return ref.masked_distance(q, x, lq_words, lx_words, metric)
+    Q, N = q.shape[0], x.shape[0]
+    block_n = min(block_n, max(128, 1 << (N - 1).bit_length()))
+    qp = _pad_axis(_pad_axis(q, 1, 128), 0, block_q)
+    xp = _pad_axis(_pad_axis(x, 1, 128), 0, block_n)
+    lqp = _pad_axis(jnp.asarray(lq_words, jnp.int32), 0, block_q)
+    lxp = _pad_axis(jnp.asarray(lx_words, jnp.int32), 0, block_n)
+    out = masked_distance_pallas(qp, xp, lqp, lxp, metric=metric,
+                                 block_q=block_q, block_n=block_n,
+                                 n_total=N, interpret=default_interpret())
+    return out[:Q, :N]
+
+
+def filtered_topk(q, x, lq_words, lx_words, *, k: int, metric: str = "l2",
+                  block_q: int = 8, block_n: int = 512,
+                  backend: str = "pallas"):
+    """Fused filtered top-k: -> (vals [Q, k], idxs [Q, k]); idx == N ⇒ pad."""
+    if backend == "ref":
+        return ref.filtered_topk(q, x, lq_words, lx_words, k, metric)
+    Q, N = q.shape[0], x.shape[0]
+    block_n = min(block_n, max(128, 1 << (N - 1).bit_length()))
+    k_eff = min(k, block_n)
+    qp = _pad_axis(_pad_axis(q, 1, 128), 0, block_q)
+    xp = _pad_axis(_pad_axis(x, 1, 128), 0, block_n)
+    lqp = _pad_axis(jnp.asarray(lq_words, jnp.int32), 0, block_q)
+    lxp = _pad_axis(jnp.asarray(lx_words, jnp.int32), 0, block_n)
+    vals, idxs = filtered_topk_pallas(qp, xp, lqp, lxp, k=k_eff, metric=metric,
+                                      block_q=block_q, block_n=block_n,
+                                      n_total=N, interpret=default_interpret())
+    vals, idxs = vals[:Q], idxs[:Q]
+    if k_eff < k:  # degenerate tiny-index case: pad out to k
+        vals = jnp.pad(vals, ((0, 0), (0, k - k_eff)), constant_values=jnp.inf)
+        idxs = jnp.pad(idxs, ((0, 0), (0, k - k_eff)), constant_values=N)
+    return vals, idxs
+
+
+def gather_distance(q_row, x, ids, *, metric: str = "l2",
+                    backend: str = "pallas") -> jnp.ndarray:
+    """[D], [N, D], [B] -> [B] f32; ids < 0 -> +inf (padding)."""
+    if backend == "ref":
+        return ref.gather_distance(q_row, x, ids, metric)
+    xp = _pad_axis(x, 1, 128)
+    qp = _pad_axis(q_row[None, :], 1, 128)[0]
+    return gather_distance_pallas(qp, xp, jnp.asarray(ids, jnp.int32),
+                                  metric=metric, interpret=default_interpret())
+
+
+__all__ = [
+    "LABEL_WORDS",
+    "default_interpret",
+    "filtered_topk",
+    "gather_distance",
+    "masked_distance",
+    "prepare_label_words",
+]
+
+
+def flash_decode(q, k_cache, v_cache, lengths, *, block_s: int = 512,
+                 interpret: bool = True):
+    """Padded/jit wrapper for the flash-decoding kernel (kernels/flash_decode).
+
+    Pads the cache sequence dim to a block multiple (masked via lengths) and
+    dispatches.  On real TPU pass interpret=False.
+    """
+    import jax.numpy as jnp
+
+    from .flash_decode import flash_decode_pallas
+
+    S = k_cache.shape[1]
+    bs = min(block_s, max(128, 1 << (S - 1).bit_length())) if S < block_s         else block_s
+    pad = (-S) % bs
+    if pad:
+        widths = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+    return flash_decode_pallas(q, k_cache, v_cache,
+                               lengths.astype(jnp.int32),
+                               block_s=bs, interpret=interpret)

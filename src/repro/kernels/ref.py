@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the kernel allclose tests and the fallback
+implementation on backends without Pallas support.  Semantics:
+
+  * distances are **squared L2** (metric="l2") or **negative inner product**
+    (metric="ip") — both "smaller is closer", so top-k = k smallest.
+  * the label filter keeps row i iff ``lq ⊆ lx[i]`` word-wise
+    ((lq & lx[i]) == lq for every 32-bit word); filtered-out rows get +inf.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+FILTERED = jnp.float32(jnp.inf)
+
+
+def distances(q: jnp.ndarray, x: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """[Q, D] x [N, D] -> [Q, N] distance matrix (f32 accumulate)."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    ip = q @ x.T
+    if metric == "ip":
+        return -ip
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=1, keepdims=True)
+        xn = jnp.sum(x * x, axis=1, keepdims=True)
+        return qn - 2.0 * ip + xn.T
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def containment_mask(lq_words: jnp.ndarray, lx_words: jnp.ndarray) -> jnp.ndarray:
+    """[Q, W] query masks vs [N, W] db masks -> [Q, N] bool (query ⊆ db)."""
+    lq = lq_words[:, None, :]        # [Q, 1, W]
+    lx = lx_words[None, :, :]        # [1, N, W]
+    return jnp.all((lq & lx) == lq, axis=-1)
+
+
+def masked_distance(q, x, lq_words, lx_words, metric: str = "l2") -> jnp.ndarray:
+    """Fused distance + label-containment filter oracle: [Q, N] f32."""
+    d = distances(q, x, metric)
+    keep = containment_mask(lq_words, lx_words)
+    return jnp.where(keep, d, FILTERED)
+
+
+def filtered_topk(q, x, lq_words, lx_words, k: int, metric: str = "l2"):
+    """Exact filtered top-k oracle: (vals [Q, k], idxs [Q, k]).
+
+    Ties broken toward the lower index (matches the kernel's deterministic
+    iota tie-break).  Rows with fewer than k passing entries pad with
+    (+inf, N) — N is an intentionally out-of-range sentinel.
+    """
+    d = masked_distance(q, x, lq_words, lx_words, metric)
+    n = x.shape[0]
+    if k > n:  # fewer rows than requested: pad the distance matrix
+        d = jnp.pad(d, ((0, 0), (0, k - n)), constant_values=jnp.inf)
+    # stable lexicographic top-k: sort by (distance, index)
+    order = jnp.argsort(d, axis=1, stable=True)[:, :k]
+    vals = jnp.take_along_axis(d, order, axis=1)
+    idxs = jnp.where(jnp.isinf(vals), n, order)
+    vals = jnp.where(jnp.isinf(vals), FILTERED, vals)
+    return vals, idxs.astype(jnp.int32)
+
+
+def gather_distance(q_row, x, ids, metric: str = "l2") -> jnp.ndarray:
+    """Graph-search hot loop oracle: distances from one query to X[ids].
+
+    ``ids`` may contain -1 padding → +inf distance.
+    """
+    valid = ids >= 0
+    rows = x[jnp.clip(ids, 0, x.shape[0] - 1)]
+    d = distances(q_row[None, :], rows, metric)[0]
+    return jnp.where(valid, d, FILTERED)
+
+
+def blockwise_topk_merge(vals_blocks, idxs_blocks, k: int):
+    """Merge per-block partial top-k: [Q, NB, K] -> (vals [Q, k], idxs [Q, k]).
+
+    Oracle for the two-stage kernel pipeline (block top-k + lax.top_k merge).
+    """
+    Q = vals_blocks.shape[0]
+    flat_v = vals_blocks.reshape(Q, -1)
+    flat_i = idxs_blocks.reshape(Q, -1)
+    # smaller distance = better -> top_k on negative values
+    neg, pos = jax.lax.top_k(-flat_v, k)
+    return -neg, jnp.take_along_axis(flat_i, pos, axis=1)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Oracle for flash_decode: one-token GQA attention vs a length-masked
+    KV cache, all in fp32.  q [B,H,Dh]; k/v [B,S,KH,Dh]; lengths [B]."""
+    B, H, Dh = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qf = q.astype(jnp.float32).reshape(B, KH, G, Dh)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf) / jnp.sqrt(
+        jnp.asarray(Dh, jnp.float32))
+    valid = (jnp.arange(S)[None, :] < lengths[:, None])      # [B, S]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w, vf)
+    return out.reshape(B, H, Dh).astype(q.dtype)

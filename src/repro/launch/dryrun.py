@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture × shape) cell on
+the production meshes and record the artifacts the roofline reads.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2_9b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell,
+        one subprocess per cell (isolation against XLA RSS growth)
+
+Outputs one JSON per cell under results/dryrun/:
+    {arch, shape, mesh, ok, lower_s, compile_s, per_device_flops,
+     bytes_accessed, peak_bytes_per_device, argument_bytes, output_bytes,
+     collectives: {op: {count, bytes}}, comm_bytes_per_device, error}
+
+Cost numbers come from repro.launch.hlo_analysis (trip-count-aware,
+per-device semantics, ring factors, per-dtype collective accounting).
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+RESULTS = Path("results/dryrun")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "s16": 2, "s32": 4, "s64": 8,
+    "u4": 1, "u8": 1, "u16": 2, "u32": 4, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in `text` (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+
+    from .. import arch as A
+    from .mesh import make_production_mesh
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                 "ok": False}
+    t0 = time.time()
+    try:
+        cell = A.build_cell(arch_id, shape_name)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered = cell.lower(mesh)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        ca = compiled.cost_analysis() or {}
+        # raw XLA numbers (while bodies counted ONCE — kept for reference)
+        rec["xla_flops_nontrip"] = float(ca.get("flops", -1.0))
+        rec["xla_bytes_nontrip"] = float(ca.get("bytes accessed", -1.0))
+
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for field in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes"):
+                rec[field] = int(getattr(ma, field, -1))
+            rec["peak_bytes_per_device"] = (
+                rec.get("argument_size_in_bytes", 0)
+                + rec.get("temp_size_in_bytes", 0)
+                + max(rec.get("output_size_in_bytes", 0)
+                      - rec.get("alias_size_in_bytes", 0), 0))
+
+        hlo = compiled.as_text()
+        t2 = time.time()
+        from .hlo_analysis import analyze
+        summary = analyze(hlo)
+        rec["analyze_s"] = round(time.time() - t2, 2)
+        rec["per_device_flops"] = summary.flops
+        rec["bytes_accessed"] = summary.memory_bytes          # HBM lower bound
+        rec["bytes_accessed_max"] = summary.memory_bytes_max  # no-fusion bound
+        rec["collectives"] = {k: dict(v) for k, v in summary.comm.items()}
+        rec["comm_bytes_per_device"] = summary.comm_bytes
+        rec["comm_bytes_per_device_tpu"] = summary.comm_bytes_tpu
+        rec["hlo_lines"] = hlo.count("\n")
+        # model-level bookkeeping for the roofline
+        a = A.get_arch(arch_id)
+        rec["params_total"] = A.count_total_params(a)
+        rec["params_active"] = A.count_active_params(a)
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — recorded, reported, non-zero exit
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def cell_path(arch_id, shape_name, multi_pod) -> Path:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    return RESULTS / f"{arch_id}__{shape_name}__{mesh_name}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every supported cell on both meshes, "
+                         "one subprocess each; skips cells already done")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from .. import arch as A
+        jobs = []
+        for aid, sname, ok, reason in A.cell_matrix():
+            for mp in (False, True):
+                p = cell_path(aid, sname, mp)
+                if not ok:
+                    p.write_text(json.dumps(
+                        {"arch": aid, "shape": sname,
+                         "mesh": "pod2x16x16" if mp else "pod16x16",
+                         "ok": None, "skipped": reason}, indent=1))
+                    continue
+                if p.exists() and not args.force:
+                    prev = json.loads(p.read_text())
+                    if prev.get("ok"):
+                        continue
+                jobs.append((aid, sname, mp))
+        print(f"[dryrun] {len(jobs)} cells to run", flush=True)
+        fails = 0
+        for i, (aid, sname, mp) in enumerate(jobs):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", aid, "--shape", sname] + \
+                  (["--multi-pod"] if mp else [])
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            rec = {}
+            p = cell_path(aid, sname, mp)
+            if p.exists():
+                rec = json.loads(p.read_text())
+            status = "ok" if rec.get("ok") else "FAIL"
+            fails += status == "FAIL"
+            print(f"[dryrun {i + 1}/{len(jobs)}] {aid} x {sname} x "
+                  f"{'2x16x16' if mp else '16x16'}: {status} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+            if status == "FAIL":
+                err = rec.get("error") or r.stderr[-800:]
+                print(f"    {err}", flush=True)
+        print(f"[dryrun] done, {fails} failures", flush=True)
+        return 1 if fails else 0
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod)
+    path = cell_path(args.arch, args.shape, args.multi_pod)
+    path.write_text(json.dumps(rec, indent=1))
+    if rec["ok"]:
+        print(f"[dryrun] {args.arch} x {args.shape} x {rec['mesh']}: ok — "
+              f"lower {rec['lower_s']}s compile {rec['compile_s']}s "
+              f"flops/dev {rec['per_device_flops']:.3e} "
+              f"comm/dev {rec['comm_bytes_per_device']:.3e}B")
+        mem = rec.get("peak_bytes_per_device")
+        if mem is not None:
+            print(f"[dryrun]   memory: args {rec['argument_size_in_bytes']/2**30:.2f} GiB "
+                  f"temp {rec['temp_size_in_bytes']/2**30:.2f} GiB "
+                  f"peak {mem/2**30:.2f} GiB/device")
+        print("[dryrun]   collectives: "
+              + json.dumps(rec["collectives"]))
+    else:
+        print(f"[dryrun] {args.arch} x {args.shape}: FAILED\n{rec['error']}")
+        print(rec.get("traceback", ""))
+    return 0 if rec["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

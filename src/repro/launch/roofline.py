@@ -1,0 +1,135 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape), single-pod mesh, TPU v5e constants:
+
+    compute    = HLO_FLOPs_per_device            / 197e12  FLOP/s (bf16 MXU)
+    memory     = HLO_bytes_accessed_per_device   / 819e9   B/s   (HBM)
+    collective = comm_bytes_per_device           / 50e9    B/s   (ICI/link)
+
+All inputs come from the trip-count-aware HLO analysis (hlo_analysis.py —
+post-SPMD module, per-device semantics, ring factors, bf16-normalized
+collectives).  The bottleneck is the max term; the MFU bound is
+MODEL_FLOPS_per_device / (max_term · 197e12).
+
+MODEL_FLOPS = repro.arch.useful_flops: 6/2 · N_active · tokens plus the
+attention context term (PaLM accounting, window-capped local layers,
+enc/cross terms for whisper) and the SSD chunk term for Mamba2 layers.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh pod16x16]
+        [--json results/roofline.json] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per link (ICI)
+
+RESULTS = Path("results/dryrun")
+
+
+def analyze_record(rec: dict, chips: int) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    from repro import arch as A
+    arch = A.get_arch(rec["arch"])
+    shape = A.SHAPES[rec["shape"]]
+    model_flops = A.useful_flops(arch, shape)
+
+    t_compute = rec["per_device_flops"] / PEAK_FLOPS
+    t_memory = rec["bytes_accessed"] / HBM_BW
+    # bf16-normalized collective bytes (XLA-CPU promotes bf16 dots to f32
+    # and reorders converts across collectives; TPU keeps them bf16)
+    comm = rec.get("comm_bytes_per_device_tpu",
+                   rec["comm_bytes_per_device"])
+    t_comm = comm / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_comm}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    hlo_flops_global = rec["per_device_flops"] * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": round(model_flops / hlo_flops_global, 4)
+        if hlo_flops_global else None,
+        "mfu_bound": round(model_flops / chips / PEAK_FLOPS / step_s, 4)
+        if step_s else None,
+        "peak_gib_per_device": round(
+            rec.get("peak_bytes_per_device", 0) / 2**30, 2),
+        "collectives": rec.get("collectives", {}),
+    }
+
+
+def load_all(mesh: str = "pod16x16") -> list[dict]:
+    chips = 512 if mesh == "pod2x16x16" else 256
+    out = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("skipped"):
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": mesh, "skipped": rec["skipped"]})
+            continue
+        r = analyze_record(rec, chips)
+        if r is None:
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": mesh, "error": rec.get("error", "?")})
+        else:
+            out.append(r)
+    return out
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | MFLOPs ratio | MFU bound | peak GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']} | "
+            f"{r['mfu_bound']} | {r['peak_gib_per_device']} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--json", default="results/roofline.json")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load_all(args.mesh)
+    Path(args.json).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.json).write_text(json.dumps(rows, indent=1))
+    if args.md:
+        print(to_markdown(rows))
+    else:
+        for r in rows:
+            if "skipped" in r or "error" in r:
+                print(f"{r['arch']:24s} {r['shape']:12s} "
+                      f"{'SKIP' if 'skipped' in r else 'ERROR'}")
+            else:
+                print(f"{r['arch']:24s} {r['shape']:12s} "
+                      f"c={r['compute_s']:.4f}s m={r['memory_s']:.4f}s "
+                      f"x={r['collective_s']:.4f}s -> {r['bottleneck']:10s} "
+                      f"mfu<={r['mfu_bound']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2_130m \
+        --steps 100 --seq 128 --batch 8 [--mesh-data 1 --mesh-model 1] \
+        [--reduced] [--fail-at N]
+
+With ``--reduced`` (default on CPU), the arch's reduced config trains for
+real; the full config is for actual TPU slices.  --fail-at injects a
+SimulatedFailure for chaos drills; re-running the same command resumes
+from the last checkpoint and replays zero data.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from .. import arch as A
+from ..configs import reduced_arch
+from ..data import TokenStream
+from ..train import SimulatedFailure, TrainConfig, Trainer
+from .mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2_130m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="0 = no mesh (single device)")
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    spec = reduced_arch(args.arch) if args.reduced else A.get_arch(args.arch)
+    opt = dataclasses.replace(spec.optimizer, lr_peak=args.lr,
+                              lr_min=args.lr / 10, warmup_steps=10,
+                              decay_steps=args.steps)
+    spec = dataclasses.replace(spec, optimizer=opt)
+    shape = A.ShapeSpec("cli_train", "train", args.seq, args.batch)
+    data = TokenStream(vocab=spec.cfg.vocab, seq_len=args.seq,
+                       global_batch=args.batch)
+    mesh = (make_host_mesh(args.mesh_data, args.mesh_model)
+            if args.mesh_data else None)
+    cfg = TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, log_every=10)
+    tr = Trainer(spec, shape, data, cfg, mesh=mesh, failure_at=args.fail_at)
+    try:
+        final = tr.run()
+        print(f"[train] finished: {final}")
+    except SimulatedFailure as e:
+        print(f"[train] {e} — rerun the same command to resume")
+        raise SystemExit(42)
+
+
+if __name__ == "__main__":
+    main()

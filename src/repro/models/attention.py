@@ -1,0 +1,340 @@
+"""Grouped-query attention: prefill (tiled flash-style), train, and decode.
+
+One implementation serves every transformer in the zoo:
+
+  * GQA with an explicit group dim (``n_heads = n_kv_heads × group``);
+  * RoPE applied from runtime positions;
+  * causal, sliding-window (gemma-2 local) and bidirectional (encoder /
+    cross-attention) masking;
+  * attention-logit soft-capping (gemma-2);
+  * **tiled online-softmax** over both query and KV chunks for long
+    sequences — activation memory is O(S·chunk), never O(S²); the tile loop
+    is a ``lax.scan`` so HLO size is O(1) in sequence length;
+  * single-token decode against a (possibly sequence-sharded) KV cache —
+    the flash-decoding layout for long_500k (see repro.sharding).
+
+The tile sizes are hardware-aligned (multiples of the 128-lane MXU edge);
+on TPU the inner tile contraction is exactly the MXU-shaped matmul a flash
+kernel performs, so XLA's fusion recovers most of a hand-written kernel —
+EXPERIMENTS.md §Perf measures the residual gap on the compiled HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shd
+from .common import ParamSpec, dense_spec, rope, softcap
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    causal: bool = True
+    window: int | None = None          # sliding-window size (gemma-2 local)
+    logit_softcap: float | None = None
+    use_bias: bool = False
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+    @property
+    def group(self) -> int:
+        assert self.n_heads % self.n_kv_heads == 0
+        return self.n_heads // self.n_kv_heads
+
+
+def attn_specs(cfg: AttentionConfig, stacked: int | None = None) -> dict:
+    E, H, KH, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": dense_spec(E, H * Dh, (shd.EMBED, shd.HEADS), stacked),
+        "wk": dense_spec(E, KH * Dh, (shd.EMBED, shd.HEADS), stacked),
+        "wv": dense_spec(E, KH * Dh, (shd.EMBED, shd.HEADS), stacked),
+        "wo": dense_spec(H * Dh, E, (shd.HEADS, shd.EMBED), stacked),
+    }
+    if cfg.use_bias:
+        ln = (shd.LAYERS, shd.HEADS) if stacked else (shd.HEADS,)
+        sh = (stacked,) if stacked else ()
+        specs["bq"] = ParamSpec(sh + (H * Dh,), ln, init="zeros")
+        specs["bk"] = ParamSpec(sh + (KH * Dh,), ln, init="zeros")
+        specs["bv"] = ParamSpec(sh + (KH * Dh,), ln, init="zeros")
+        be = (shd.LAYERS, shd.EMBED) if stacked else (shd.EMBED,)
+        specs["bo"] = ParamSpec(sh + (E,), be, init="zeros")
+    return specs
+
+
+def _project_qkv(p, x, cfg: AttentionConfig, positions):
+    B, S, _ = x.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.use_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, KH, Dh)
+    v = v.reshape(B, S, KH, Dh)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _tile_mask(q_pos, k_pos, cfg: AttentionConfig):
+    """[Bq, Bk] bool mask for one (q-tile, kv-tile) pair.  KV padding rows
+    carry the int32-max position sentinel and are always masked."""
+    m = (k_pos[None, :] < jnp.iinfo(jnp.int32).max)
+    if cfg.causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if cfg.window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < cfg.window
+    return m
+
+
+def _attend_tiles(q, k, v, q_pos, k_pos, cfg: AttentionConfig):
+    """Tiled online-softmax attention.
+
+    q [B, Sq, H, Dh]; k, v [B, Sk, KH, Dh]; *_pos [Sq]/[Sk] int32 positions
+    (per-example position offsets are folded in by the caller for packed
+    batches — here positions are shared across the batch).
+    Returns [B, Sq, H, Dh].
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(Dh)
+
+    qc = min(cfg.q_chunk, Sq)
+    kc = min(cfg.kv_chunk, Sk)
+    nq = -(-Sq // qc)
+    nk = -(-Sk // kc)
+    # pad to tile multiples (masked out via positions = -inf sentinel)
+    def padto(a, n, axis):
+        widths = [(0, 0)] * a.ndim
+        widths[axis] = (0, n - a.shape[axis])
+        return jnp.pad(a, widths)
+
+    qp = padto(q, nq * qc, 1).reshape(B, nq, qc, H, Dh)
+    kp = padto(k, nk * kc, 1).reshape(B, nk, kc, KH, Dh)
+    vp = padto(v, nk * kc, 1).reshape(B, nk, kc, KH, Dh)
+    qpos = padto(q_pos, nq * qc, 0).reshape(nq, qc)
+    kpos = jnp.pad(k_pos, (0, nk * kc - Sk),
+                   constant_values=jnp.iinfo(jnp.int32).max).reshape(nk, kc)
+
+    qp = jnp.moveaxis(qp, 1, 0)      # [nq, B, qc, H, Dh]
+    kp = jnp.moveaxis(kp, 1, 0)      # [nk, B, kc, KH, Dh]
+    vp = jnp.moveaxis(vp, 1, 0)
+
+    def q_step(_, qi):
+        qt, qpos_t = qi                                  # [B, qc, H, Dh]
+        qg = qt.reshape(B, qc, KH, G, Dh)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kt, vt, kpos_t = ki                          # [B, kc, KH, Dh]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kt,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, cfg.logit_softcap)
+            mask = _tile_mask(qpos_t, kpos_t, cfg)       # [qc, kc]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vt.dtype), vt,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qc, Dh), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                          (kp, vp, kpos))
+        out = acc / jnp.maximum(l_f[..., None], 1e-30)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, qc, KH * G, Dh)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qp, qpos))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * qc, H, Dh)
+    return out[:, :Sq]
+
+
+def _ctx_parallel_axis(S: int):
+    """Mesh axis carrying activation sequence shards under DP2D, if any."""
+    from .. import sharding as shd
+    ctx = shd.active_context()
+    if ctx is None:
+        return None, None
+    mesh, rules = ctx
+    ax = rules.physical(shd.SEQ_ACT, mesh)
+    if not isinstance(ax, str) or S % mesh.shape[ax] != 0:
+        return None, None
+    return mesh, ax
+
+
+def _attend_ctx_parallel(q, k, v, q_pos, k_pos, cfg: AttentionConfig,
+                         mesh, axis: str):
+    """Context-parallel flash attention: shard_map over ``axis``.
+
+    q, k, v all arrive sequence-sharded over ``axis``; K/V are
+    all-gathered EXPLICITLY in bf16 inside the shard_map.  Two reasons
+    this beats letting GSPMD infer the layout (measured, §Perf):
+
+      * forward — GSPMD hoisted the f32 convert (feeding the fp32-
+        accumulating QK dot) above its gather, all-gathering fp32 KV
+        (2x bytes);
+      * backward — the transpose of an explicit ``all_gather`` is
+        ``psum_scatter``: dK/dV sync costs (n-1)/n · bf16 bytes instead
+        of the 2x-ring fp32 all-reduce GSPMD emitted (8x fewer bytes).
+
+    Every device runs the tile loop on its S/n query slice against the
+    gathered K/V; the causal mask handles per-shard query offsets because
+    tile positions travel with the data.
+    """
+    from .. import sharding as shd
+    from jax.sharding import PartitionSpec as P
+    b_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    batch_in = tuple(a for a in b_axes if q.shape[0] % mesh.shape[a] == 0)
+    bspec = batch_in if len(batch_in) != 1 else batch_in[0]
+
+    def local(ql, kl, vl, qpl, kpl):
+        kf = jax.lax.all_gather(kl, axis, axis=1, tiled=True)
+        vf = jax.lax.all_gather(vl, axis, axis=1, tiled=True)
+        kpf = jax.lax.all_gather(kpl, axis, axis=1, tiled=True)
+        return _attend_tiles(ql, kf, vf, qpl[0], kpf[0], cfg)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(bspec, axis), P(bspec, axis), P(bspec, axis),
+                  P(bspec, axis), P(bspec, axis)),
+        out_specs=P(bspec, axis),
+        check_vma=False)
+    # positions must be 2D [B, S] for clean batch sharding inside
+    return fn(q, k, v, q_pos, k_pos)
+
+
+def attention(p, x, positions, cfg: AttentionConfig,
+              kv_override: tuple | None = None):
+    """Full-sequence attention (train / prefill).  x [B, S, E] -> [B, S, E].
+
+    ``kv_override`` = (k, v, k_positions) enables cross-attention (whisper
+    decoder): q comes from x, K/V from the encoder sequence.
+
+    Under DP2D activation rules (SEQ_ACT -> mesh axis) the tile loop runs
+    context-parallel via shard_map — queries sequence-sharded, K/V
+    replicated, zero collectives inside the loop.  (The GSPMD-inferred
+    alternative emitted one all-reduce per KV tile: 65k collectives and a
+    5.2e12-byte step on starcoder2 prefill_32k; EXPERIMENTS.md §Perf.)
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    k_pos = positions[0]
+    if kv_override is not None:
+        k, v, k_pos = kv_override
+    mesh, ax = _ctx_parallel_axis(S)
+    if mesh is not None and kv_override is None and k.shape[1] == S:
+        k_pos2d = jnp.broadcast_to(k_pos[None], (B, k.shape[1]))
+        out = _attend_ctx_parallel(q, k, v, positions, k_pos2d, cfg,
+                                   mesh, ax)
+    else:
+        # Megatron path: pin head sharding (replicated when indivisible)
+        # so the tile scan never reshards its carries per KV tile
+        from .. import sharding as shd
+        q = shd.constrain(q, (shd.BATCH, None, shd.HEADS, None))
+        k = shd.constrain(k, (shd.BATCH, None, shd.KV_HEADS, None))
+        v = shd.constrain(v, (shd.BATCH, None, shd.KV_HEADS, None))
+        out = _attend_tiles(q, k, v, positions[0], k_pos, cfg)
+        out = shd.constrain(out, (shd.BATCH, shd.SEQ_ACT, shd.HEADS, None))
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"]
+    if cfg.use_bias:
+        out = out + p["bo"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+def cache_spec(cfg: AttentionConfig, batch: int, max_len: int,
+               long_context: bool = False) -> dict:
+    """ShapeDtypeStructs for one layer's KV cache.
+
+    Layout [B, S, KH, Dh]; under LONG_CONTEXT_RULES the S axis is sharded
+    over 'data' (flash-decoding).  Window layers cap the buffer at the
+    window size (rolling cache).
+    """
+    s = max_len if cfg.window is None else min(max_len, cfg.window)
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(shape, jnp.bfloat16),
+    }
+
+
+def cache_logical(cfg: AttentionConfig) -> tuple:
+    return (shd.BATCH, shd.SEQ, shd.KV_HEADS, shd.HEAD_DIM)
+
+
+def init_cache(cfg: AttentionConfig, batch: int, max_len: int) -> dict:
+    s = max_len if cfg.window is None else min(max_len, cfg.window)
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, jnp.bfloat16),
+            "v": jnp.zeros(shape, jnp.bfloat16)}
+
+
+def decode_attention(p, x, cache: dict, position: jnp.ndarray,
+                     cfg: AttentionConfig):
+    """One-token decode.  x [B, 1, E]; position [B] int32 (current index).
+
+    Returns (out [B, 1, E], updated cache).  The cache update is a dynamic
+    slice write at ``position % window`` for rolling local layers.
+    """
+    B = x.shape[0]
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = cfg.group
+    q, k_new, v_new = _project_qkv(p, x, cfg, position[:, None])
+
+    S = cache["k"].shape[1]
+    slot = position % S if cfg.window is not None else position
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v_cache = cache["v"].at[bidx, slot].set(v_new[:, 0])
+
+    # positions of cache slots, for masking + windowing
+    slots = jnp.arange(S, dtype=jnp.int32)[None, :]                  # [1, S]
+    if cfg.window is not None:
+        # rolling buffer: slot s holds position p where p % S == s, the
+        # largest such p ≤ current position
+        cur = position[:, None]
+        base = cur - ((cur - slots) % S)
+        kv_pos = jnp.where(base >= 0, base, -1)
+    else:
+        kv_pos = jnp.where(slots <= position[:, None], slots, -1)
+
+    qg = q.reshape(B, 1, KH, G, Dh)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(Dh)
+    s = softcap(s, cfg.logit_softcap)
+    valid = kv_pos >= 0
+    if cfg.causal:
+        valid &= kv_pos <= position[:, None]
+    if cfg.window is not None:
+        valid &= position[:, None] - kv_pos < cfg.window
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H * Dh).astype(x.dtype) @ p["wo"]
+    if cfg.use_bias:
+        out = out + p["bo"]
+    return out, {"k": k_cache, "v": v_cache}

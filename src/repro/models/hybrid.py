@@ -1,0 +1,314 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-shared attention block.
+
+Structure (arXiv:2411.15242, adapted):
+
+    n_layers Mamba2 (SSD) blocks; after every ``attn_period`` blocks the
+    *shared* full-attention transformer block runs (same weights at every
+    invocation — Zamba's parameter-sharing trick).  81 layers / period 6
+    gives 13 shared-attention invocations + a 3-layer Mamba tail.
+
+Scan layout (compile-time O(1) in depth, required for the 512-device
+dry-run):  outer ``lax.scan`` over groups; each group carries a stacked
+(period, ...) slice of Mamba params and runs an inner scan, then applies
+the shared attention block (weights closed over — broadcast, not scanned).
+The tail layers run in one more inner scan.
+
+States: every Mamba layer owns an SSD state; every shared-attn invocation
+owns its *own* KV cache (weights are shared, activations are not) — cache
+stacked (n_groups, B, S, KH, Dh).  Decode is O(1) per Mamba layer and
+O(S_cache) per attention invocation, which is why this arch (with
+mamba2-130m) owns the long_500k cell in the assignment matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shd
+from .attention import AttentionConfig, attn_specs, attention, decode_attention
+from .common import (ParamSpec, cross_entropy, embed_lookup, norm_spec,
+                     rms_norm)
+from .mlp import MLPConfig, mlp, mlp_specs
+from .ssm import (SSMConfig, ssm_decode, ssm_forward, ssm_init_state,
+                  ssm_specs, ssm_state_logical, ssm_state_spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    n_layers: int                 # total Mamba2 blocks
+    d_model: int
+    vocab: int
+    # shared attention block
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int                     # shared block MLP width
+    attn_period: int = 6
+    head_dim: int | None = None
+    rope_theta: float = 10000.0
+    act: str = "gelu"
+    gated_mlp: bool = True
+    # ssm
+    ssm_state: int = 64
+    ssm_head: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 2048
+    remat: bool = True
+    tie_embeddings: bool = True
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.attn_period
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers - self.n_groups * self.attn_period
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def ssm_cfg(self) -> SSMConfig:
+        return SSMConfig(self.d_model, d_state=self.ssm_state,
+                         d_head=self.ssm_head, expand=self.ssm_expand,
+                         chunk=self.ssm_chunk)
+
+    def attn_cfg(self) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.resolved_head_dim,
+            rope_theta=self.rope_theta, causal=True,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+
+    def mlp_cfg(self) -> MLPConfig:
+        return MLPConfig(self.d_model, self.d_ff, act=self.act,
+                         gated=self.gated_mlp)
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def _mamba_block_specs(cfg: HybridConfig, stacked) -> dict:
+    return {"ln": norm_spec(cfg.d_model, stacked),
+            "ssm": ssm_specs(cfg.ssm_cfg(), stacked)}
+
+
+def hybrid_specs(cfg: HybridConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((V, d), (shd.VOCAB, shd.TABLE), init="embed"),
+        "ln_final": norm_spec(d),
+    }
+    if cfg.n_groups:
+        # the ONE shared attention block (applied n_groups times)
+        specs["shared"] = {
+            "attn": attn_specs(cfg.attn_cfg()),
+            "ln_attn": norm_spec(d),
+            "mlp": mlp_specs(cfg.mlp_cfg()),
+            "ln_mlp": norm_spec(d),
+        }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((d, V), (shd.TABLE, shd.VOCAB))
+    if cfg.n_groups:
+        # stacked (n_groups, period, ...) — nested scan
+        g = _mamba_block_specs(cfg, cfg.n_groups * cfg.attn_period)
+        specs["groups"] = jax.tree.map(
+            lambda s: dataclasses.replace(
+                s, shape=(cfg.n_groups, cfg.attn_period) + s.shape[1:],
+                logical=(shd.LAYERS,) + s.logical,
+                fan_in_axes=(tuple(a + 1 for a in s.fan_in_axes)
+                             if s.fan_in_axes else None)),
+            g, is_leaf=lambda x: isinstance(x, ParamSpec))
+    if cfg.n_tail:
+        specs["tail"] = _mamba_block_specs(cfg, cfg.n_tail)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _mamba_block(p, h, cfg: HybridConfig, state=None):
+    h = shd.constrain(h, (shd.BATCH, shd.SEQ_ACT, None))
+    out, new_state = (ssm_forward(p["ssm"], rms_norm(h, p["ln"]),
+                                  cfg.ssm_cfg(), state))
+    return h + out, new_state
+
+
+def _shared_attn_block(p, h, positions, cfg: HybridConfig):
+    a = attention(p["attn"], rms_norm(h, p["ln_attn"]), positions,
+                  cfg.attn_cfg())
+    h = h + a
+    f = mlp(p["mlp"], rms_norm(h, p["ln_mlp"]), cfg.mlp_cfg())
+    return h + f
+
+
+def forward(params, tokens, positions, cfg: HybridConfig):
+    """tokens [B, S] -> hidden [B, S, E] (training; no state kept)."""
+    h = shd.constrain(embed_lookup(params["embed"], tokens),
+                      (shd.BATCH, shd.SEQ_ACT, None))
+    shared = params.get("shared")
+
+    def inner(h, layer_p):
+        h, _ = _mamba_block(layer_p, h, cfg)
+        return h, None
+
+    def group_body(h, group_p):
+        h, _ = jax.lax.scan(inner, h, group_p)
+        h = _shared_attn_block(shared, h, positions, cfg)
+        return h, None
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    if cfg.n_groups:
+        h, _ = jax.lax.scan(group_body, h, params["groups"])
+    if cfg.n_tail:
+        tail = jax.checkpoint(inner, prevent_cse=False) if cfg.remat else inner
+        h, _ = jax.lax.scan(tail, h, params["tail"])
+    return h
+
+
+def _unembed(params, h, cfg: HybridConfig):
+    h = rms_norm(h, params["ln_final"])
+    table = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return shd.constrain(h @ table, (shd.BATCH, None, shd.VOCAB))
+
+
+def loss_fn(params, tokens, labels, positions, cfg: HybridConfig):
+    h = forward(params, tokens, positions, cfg)
+    B, S, _ = h.shape
+    C = min(cfg.loss_chunk, S)
+    nchunk = S // C
+    if nchunk == 1:
+        ce = cross_entropy(_unembed(params, h, cfg), labels)
+    else:
+        hc = jnp.moveaxis(h.reshape(B, nchunk, C, -1), 1, 0)
+        yc = jnp.moveaxis(labels.reshape(B, nchunk, C), 1, 0)
+        losses = jax.lax.map(
+            jax.checkpoint(
+                lambda args: cross_entropy(_unembed(params, args[0], cfg),
+                                           args[1])), (hc, yc))
+        ce = jnp.mean(losses)
+    return ce, ce
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def state_structs(cfg: HybridConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree for the full decode state."""
+    scfg, acfg = cfg.ssm_cfg(), cfg.attn_cfg()
+    ssm = ssm_state_spec(scfg, batch)
+    kv = (batch, max_len, acfg.n_kv_heads, acfg.head_dim)
+
+    def stack(tree, lead):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(lead + s.shape, s.dtype), tree)
+
+    out = {}
+    if cfg.n_groups:
+        out["groups"] = {
+            "ssm": stack(ssm, (cfg.n_groups, cfg.attn_period)),
+            "kv": {"k": jax.ShapeDtypeStruct((cfg.n_groups,) + kv, jnp.bfloat16),
+                   "v": jax.ShapeDtypeStruct((cfg.n_groups,) + kv, jnp.bfloat16)},
+        }
+    if cfg.n_tail:
+        out["tail"] = stack(ssm, (cfg.n_tail,))
+    return out
+
+
+def state_logical(cfg: HybridConfig):
+    base = ssm_state_logical(cfg.ssm_cfg())
+    kvl = (shd.LAYERS, shd.BATCH, shd.SEQ, shd.KV_HEADS, shd.HEAD_DIM)
+    is_tup = lambda x: isinstance(x, tuple)
+    lead = lambda t, pre: jax.tree.map(lambda l: pre + l, t, is_leaf=is_tup)
+    out = {}
+    if cfg.n_groups:
+        out["groups"] = {"ssm": lead(base, (shd.LAYERS, None)),
+                         "kv": {"k": kvl, "v": kvl}}
+    if cfg.n_tail:
+        out["tail"] = lead(base, (shd.LAYERS,))
+    return out
+
+
+def init_state(cfg: HybridConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        state_structs(cfg, batch, max_len))
+
+
+def prefill(params, tokens, positions, cfg: HybridConfig, max_len: int):
+    """Full forward that also materializes SSM states and attention KV.
+
+    Returns (last-token logits [B, V], state tree).
+    """
+    from .attention import _project_qkv
+    h = jnp.take(params["embed"], tokens, axis=0)
+    B, S = tokens.shape
+    shared = params.get("shared")
+    acfg = cfg.attn_cfg()
+    state: dict[str, Any] = {}
+
+    def inner(h, layer_p):
+        h, st = _mamba_block(layer_p, h, cfg)
+        return h, st
+
+    def group_body(h, group_p):
+        h, ssm_states = jax.lax.scan(inner, h, group_p)
+        # shared attention with cache capture
+        x = rms_norm(h, shared["ln_attn"])
+        _, k, v = _project_qkv(shared["attn"], x, acfg, positions)
+        pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        kv = {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+        h = _shared_attn_block(shared, h, positions, cfg)
+        return h, {"ssm": ssm_states, "kv": kv}
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body, prevent_cse=False)
+    if cfg.n_groups:
+        h, gstate = jax.lax.scan(group_body, h, params["groups"])
+        state["groups"] = gstate
+    if cfg.n_tail:
+        h, tstate = jax.lax.scan(inner, h, params["tail"])
+        state["tail"] = tstate
+    logits = _unembed(params, h[:, -1:, :], cfg)[:, 0]
+    return logits, state
+
+
+def decode_step(params, state, token, position, cfg: HybridConfig):
+    """One-token decode.  token [B], position [B] -> (logits [B, V], state)."""
+    h = embed_lookup(params["embed"], token[:, None])
+    shared = params.get("shared")
+    new_state: dict[str, Any] = {}
+
+    def inner(h, xs):
+        layer_p, st = xs
+        x = rms_norm(h, layer_p["ln"])
+        out, st_new = ssm_decode(layer_p["ssm"], x, cfg.ssm_cfg(), st)
+        return h + out, st_new
+
+    def group_body(h, xs):
+        group_p, gstate = xs
+        h, ssm_new = jax.lax.scan(inner, h, (group_p, gstate["ssm"]))
+        a, kv_new = decode_attention(shared["attn"],
+                                     rms_norm(h, shared["ln_attn"]),
+                                     gstate["kv"], position, cfg.attn_cfg())
+        h = h + a
+        f = mlp(shared["mlp"], rms_norm(h, shared["ln_mlp"]), cfg.mlp_cfg())
+        return h + f, {"ssm": ssm_new, "kv": kv_new}
+
+    if cfg.n_groups:
+        h, new_state["groups"] = jax.lax.scan(
+            group_body, h, (params["groups"], state["groups"]))
+    if cfg.n_tail:
+        h, new_state["tail"] = jax.lax.scan(
+            inner, h, (params["tail"], state["tail"]))
+    logits = _unembed(params, h, cfg)[:, 0]
+    return logits, new_state

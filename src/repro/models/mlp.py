@@ -1,0 +1,176 @@
+"""Feed-forward layers: dense MLP variants and Mixture-of-Experts.
+
+Dense: plain 2-matmul MLP (gelu / squared-ReLU) or gated (GeGLU / SwiGLU).
+
+MoE: top-k token-choice routing with a GShard-style capacity-bounded
+dense-dispatch einsum — the formulation that lowers cleanly under GSPMD
+with experts sharded over the 'model' axis (dispatch/combine become
+all-to-alls in the compiled collective schedule).  Includes an optional
+shared expert (kimi-k2 / DeepSeek-style) and an auxiliary load-balancing
+loss.  The expert-parallel shard_map variant with explicit a2a overlap is
+the §Perf hillclimb (repro.perf.moe_a2a).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shd
+from .common import ParamSpec, activation, dense_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    act: str = "gelu"          # gelu | relu2 | silu | gelu_tanh
+    gated: bool = False        # GeGLU / SwiGLU
+    use_bias: bool = False
+
+
+def mlp_specs(cfg: MLPConfig, stacked: int | None = None) -> dict:
+    E, F = cfg.d_model, cfg.d_ff
+    specs = {"w_up": dense_spec(E, F, (shd.EMBED, shd.FF), stacked),
+             "w_down": dense_spec(F, E, (shd.FF, shd.EMBED), stacked)}
+    if cfg.gated:
+        specs["w_gate"] = dense_spec(E, F, (shd.EMBED, shd.FF), stacked)
+    if cfg.use_bias:
+        sh = (stacked,) if stacked else ()
+        lf = (shd.LAYERS, shd.FF) if stacked else (shd.FF,)
+        le = (shd.LAYERS, shd.EMBED) if stacked else (shd.EMBED,)
+        specs["b_up"] = ParamSpec(sh + (F,), lf, init="zeros")
+        specs["b_down"] = ParamSpec(sh + (E,), le, init="zeros")
+    return specs
+
+
+def mlp(p, x, cfg: MLPConfig):
+    act = activation(cfg.act)
+    h = x @ p["w_up"]
+    if cfg.use_bias:
+        h = h + p["b_up"]
+    if cfg.gated:
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    out = h @ p["w_down"]
+    if cfg.use_bias:
+        out = out + p["b_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    act: str = "silu"
+    gated: bool = True
+    capacity_factor: float = 1.25
+    shared_expert: bool = False       # kimi-k2 / DeepSeek-style
+    d_ff_shared: int | None = None
+    router_softcap: float | None = None
+
+
+def moe_specs(cfg: MoEConfig, stacked: int | None = None) -> dict:
+    E, F, X = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    pre = (stacked,) if stacked else ()
+    lpre = (shd.LAYERS,) if stacked else ()
+    specs = {
+        "router": dense_spec(E, X, (shd.EMBED, None), stacked),
+        "w_up": ParamSpec(pre + (X, E, F), lpre + (shd.EXPERTS, shd.EMBED, shd.FF),
+                          fan_in_axes=(len(pre) + 1,)),
+        "w_down": ParamSpec(pre + (X, F, E), lpre + (shd.EXPERTS, shd.FF, shd.EMBED),
+                            fan_in_axes=(len(pre) + 1,)),
+    }
+    if cfg.gated:
+        specs["w_gate"] = ParamSpec(pre + (X, E, F),
+                                    lpre + (shd.EXPERTS, shd.EMBED, shd.FF),
+                                    fan_in_axes=(len(pre) + 1,))
+    if cfg.shared_expert:
+        Fs = cfg.d_ff_shared or F
+        shared = MLPConfig(E, Fs, act=cfg.act, gated=cfg.gated)
+        specs["shared"] = mlp_specs(shared, stacked)
+    return specs
+
+
+def moe(p, x, cfg: MoEConfig, group_size: int = 512):
+    """Capacity-bounded top-k MoE (GShard grouped dispatch).
+
+    x [B, S, E] -> ([B, S, E], aux_loss).
+
+    Tokens are folded into groups of ``group_size``; each group routes its
+    tokens into per-expert capacity buffers C = ⌈cf·G_s·K/X⌉ via a one-hot
+    dispatch tensor [G, S_g, X, C].  With experts sharded over 'model' the
+    per-device dispatch slice is [G, S_g, X/tp, C] — bounded regardless of
+    the global token count — and GSPMD compiles the combine into the
+    expert-parallel psum.  Dropping is per-group (standard GShard).
+    """
+    B, S, E = x.shape
+    X, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    Sg = min(group_size, T)
+    assert T % Sg == 0, (T, Sg)
+    G = T // Sg
+    cap = max(1, -(-int(cfg.capacity_factor * Sg * K) // X))
+
+    xg = shd.constrain(x.reshape(G, Sg, E), (shd.BATCH, None, None))
+    logits = (xg @ p["router"]).astype(jnp.float32)            # [G, Sg, X]
+    if cfg.router_softcap is not None:
+        logits = cfg.router_softcap * jnp.tanh(logits / cfg.router_softcap)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    probs = shd.constrain(probs, (shd.BATCH, None, None))
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # [G, Sg, K]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # per-(group, expert) buffer slot for each (token, k) assignment
+    onehot = jax.nn.one_hot(expert_ids, X, dtype=jnp.int32)    # [G, Sg, K, X]
+    flat = onehot.reshape(G, Sg * K, X)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Sg, K, X)
+    pos = jnp.sum(pos * onehot, axis=-1)                       # [G, Sg, K]
+    keep = pos < cap
+    gate_vals = jnp.where(keep, gate_vals, 0.0)
+
+    disp = onehot.astype(x.dtype) * keep[..., None].astype(x.dtype)
+    pos_onehot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                                dtype=x.dtype)[..., :cap]       # [G, Sg, K, C]
+    dispatch = jnp.einsum("gskx,gskc->gsxc", disp, pos_onehot)
+    combine = jnp.einsum("gskx,gskc,gsk->gsxc", disp, pos_onehot,
+                         gate_vals.astype(x.dtype))
+    # dispatch/combine stay batch-sharded with experts sliced over 'model'
+    # (GSPMD otherwise all-gathered the full [G,Sg,X,C] mask: 1.5 GiB/layer
+    # on kimi-k2 — §Perf)
+    dispatch = shd.constrain(dispatch, (shd.BATCH, None, shd.EXPERTS, None))
+    combine = shd.constrain(combine, (shd.BATCH, None, shd.EXPERTS, None))
+
+    ex_in = jnp.einsum("gsxc,gse->gxce", dispatch, xg)          # [G, X, C, E]
+    ex_in = shd.constrain(ex_in, (shd.BATCH, shd.EXPERTS, None, None))
+    act = activation(cfg.act)
+    h = jnp.einsum("gxce,xef->gxcf", ex_in, p["w_up"])
+    if cfg.gated:
+        h = act(jnp.einsum("gxce,xef->gxcf", ex_in, p["w_gate"])) * h
+    else:
+        h = act(h)
+    ex_out = jnp.einsum("gxcf,xfe->gxce", h, p["w_down"])       # [G, X, C, E]
+    ex_out = shd.constrain(ex_out, (shd.BATCH, shd.EXPERTS, None, None))
+    out = jnp.einsum("gsxc,gxce->gse", combine, ex_out).reshape(B, S, E)
+
+    if cfg.shared_expert:
+        shared = MLPConfig(E, cfg.d_ff_shared or cfg.d_ff_expert,
+                           act=cfg.act, gated=cfg.gated)
+        out = out + mlp(p["shared"], x, shared)
+
+    # Switch-style load-balance auxiliary loss
+    me = jnp.mean(probs, axis=(0, 1))                           # [X]
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], X,
+                                 dtype=jnp.float32), axis=(0, 1))
+    aux = X * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,300 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Implements the minimal-but-complete SSD layer of arXiv:2405.21060:
+
+    in_proj -> (z gate | x | B | C | dt) ; short causal conv on (x, B, C);
+    multi-head selective state space  h' = exp(dt·A)·h + dt·B xᵀ,
+    y = C·h + D·x ;  out = (y * silu(z)) @ out_proj.
+
+The sequence scan uses the paper's *chunked dual form*: within a chunk the
+output is a masked attention-like quadratic term (MXU matmuls); across
+chunks a tiny recurrence over per-chunk states runs in a ``lax.scan``.
+Activation memory is O(S·chunk) and HLO size is O(1) in sequence length —
+the property that makes the long_500k decode/prefill cells lowerable.
+
+Decode carries an explicit state [B, H, P, N] (+ conv tail) — O(1) per
+token, the reason SSM/hybrid archs own the long_500k shape in the matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shd
+from .common import ParamSpec, dense_spec, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128          # N
+    d_head: int = 64            # P
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 256
+    n_groups: int = 1           # B/C groups (GVA-style)
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.d_head == 0
+        return self.d_inner // self.d_head
+
+
+def ssm_specs(cfg: SSMConfig, stacked: int | None = None) -> dict:
+    E, DI, N, H = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    G = cfg.n_groups
+    pre = (stacked,) if stacked else ()
+    lpre = (shd.LAYERS,) if stacked else ()
+    # z / x / B / C / dt as SEPARATE weights (and per-stream conv taps):
+    # the fused (E, 2DI+2GN+H) projection has split offsets that are not
+    # multiples of the 16-way FF shard size, so GSPMD all-gathered the
+    # full fp32 weight per scan step just to slice it (199 MiB/layer on
+    # zamba2 decode — EXPERIMENTS §Perf iteration 6).  Independent params
+    # shard cleanly and "split" for free; the depthwise conv is separable
+    # across channels, so per-stream taps are mathematically identical.
+    return {
+        "w_z": dense_spec(E, DI, (shd.EMBED, shd.FF), stacked),
+        "w_x": dense_spec(E, DI, (shd.EMBED, shd.FF), stacked),
+        "w_B": dense_spec(E, G * N, (shd.EMBED, None), stacked),
+        "w_C": dense_spec(E, G * N, (shd.EMBED, None), stacked),
+        "w_dt": dense_spec(E, H, (shd.EMBED, shd.HEADS), stacked),
+        "conv_wx": ParamSpec(pre + (cfg.d_conv, DI),
+                             lpre + (shd.CONV, shd.FF)),
+        "conv_wB": ParamSpec(pre + (cfg.d_conv, G * N),
+                             lpre + (shd.CONV, None)),
+        "conv_wC": ParamSpec(pre + (cfg.d_conv, G * N),
+                             lpre + (shd.CONV, None)),
+        "conv_bx": ParamSpec(pre + (DI,), lpre + (shd.FF,), init="zeros"),
+        "conv_bB": ParamSpec(pre + (G * N,), lpre + (None,), init="zeros"),
+        "conv_bC": ParamSpec(pre + (G * N,), lpre + (None,), init="zeros"),
+        "A_log": ParamSpec(pre + (H,), lpre + (shd.HEADS,), init="zeros"),
+        "D": ParamSpec(pre + (H,), lpre + (shd.HEADS,), init="ones"),
+        "dt_bias": ParamSpec(pre + (H,), lpre + (shd.HEADS,), init="zeros"),
+        "norm_w": ParamSpec(((stacked, DI) if stacked else (DI,)),
+                            ((shd.LAYERS, shd.FF) if stacked else (shd.FF,)),
+                            init="ones"),
+        "out_proj": dense_spec(DI, E, (shd.FF, shd.EMBED), stacked),
+    }
+
+
+def _split_proj(p, u, cfg: SSMConfig):
+    # feature dims keep their FF (-> 'model') sharding: constraining them
+    # to None forced GSPMD to gather the full fp32 weight per scan step
+    # to make a replicated output (98 MiB x2/layer on zamba2 decode)
+    z = shd.constrain(u @ p["w_z"], (shd.BATCH, shd.SEQ_ACT, shd.FF))
+    x = shd.constrain(u @ p["w_x"], (shd.BATCH, shd.SEQ_ACT, shd.FF))
+    Bm = u @ p["w_B"]
+    Cm = u @ p["w_C"]
+    dt = u @ p["w_dt"]
+    return z, x, Bm, Cm, dt
+
+
+def _conv_scan(w, b, xs, cfg: SSMConfig, conv_state=None):
+    """Short causal depthwise conv on one stream.  xs [B, S, D]; returns
+    (silu(conv(xs)), tail state [B, W-1, D])."""
+    W = cfg.d_conv
+    if conv_state is None:
+        pad = jnp.zeros((xs.shape[0], W - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xs], axis=1)
+    out = jnp.zeros_like(xs, dtype=jnp.float32)
+    for t in range(W):                      # W = 4 taps, unrolled
+        out = out + (xp[:, t: t + xs.shape[1]].astype(jnp.float32)
+                     * w[t].astype(jnp.float32))
+    out = out + b.astype(jnp.float32)
+    out = jax.nn.silu(out).astype(xs.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return out, new_state
+
+
+def _segsum(log_a):
+    """[..., L] -> [..., L, L] lower-tri cumulative sums Σ_{j<i≤k} log_a."""
+    L = log_a.shape[-1]
+    cum = jnp.cumsum(log_a, axis=-1)
+    # segsum(i, j) = Σ_{t=j+1..i} log_a_t = cum[i] - cum[j]
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, cfg: SSMConfig, initial_state=None):
+    """Chunked SSD scan.
+
+    x  [B, S, H, P]; dt [B, S, H] (post-softplus); A [H] (negative);
+    Bm, Cm [B, S, G, N].  Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    """
+    Bz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(cfg.chunk, S)
+    S_orig = S
+    if S % L:
+        # pad with dt=0 rows: decay exp(0)=1 and dt·Bx^T=0, so padding is
+        # state-neutral; padded outputs are sliced off below
+        pad = L - S % L
+        widths = lambda a: [(0, pad) if i == 1 else (0, 0)
+                            for i in range(a.ndim)]
+        x = jnp.pad(x, widths(x))
+        dt = jnp.pad(dt, widths(dt))
+        Bm = jnp.pad(Bm, widths(Bm))
+        Cm = jnp.pad(Cm, widths(Cm))
+        S = S + pad
+    nc = S // L
+    rep = H // G
+
+    xc = shd.constrain(x.reshape(Bz, nc, L, H, P),
+                       (shd.BATCH, None, None, shd.HEADS, None))
+    dtc = dt.reshape(Bz, nc, L, H)
+    Bc = Bm.reshape(Bz, nc, L, G, N)
+    Cc = Cm.reshape(Bz, nc, L, G, N)
+
+    dA = dtc * A[None, None, None, :]                    # [B, nc, L, H] (≤0)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (dual / attention-like) term
+    LT = jnp.exp(_segsum(jnp.moveaxis(dA, 2, -1)))       # [B, nc, H, L, L]
+    CB = jnp.einsum("bclgn,bcsgn->bcgls", Cc, Bc,
+                    preferred_element_type=jnp.float32)   # [B, nc, G, L, L]
+    CB = jnp.repeat(CB, rep, axis=2)                      # [B, nc, H, L, L]
+    scores = CB * LT * jnp.moveaxis(dtc, 2, -1)[..., None, :]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores,
+                        xc.astype(jnp.float32))
+
+    # per-chunk output states
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # [B, nc, L, H]
+    states = jnp.einsum("bclgn,bclh,bclhp->bchpn",
+                        Bc.astype(jnp.float32),
+                        (dtc * decay_states).astype(jnp.float32),
+                        xc.astype(jnp.float32))            # [B, nc, H, P, N]
+
+    # inter-chunk recurrence (tiny: nc steps over [B, H, P, N])
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # [B, nc, H]
+    if initial_state is None:
+        h0 = jnp.zeros((Bz, H, P, N), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def step(h, inp):
+        s, g = inp                                         # [B,H,P,N], [B,H]
+        h_new = h * g[..., None, None] + s
+        return h_new, h
+
+    hs_in = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    h_final, h_prevs = jax.lax.scan(step, h0, hs_in)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # [B, nc, H, P, N]
+
+    # contribution of the carried-in state to each position
+    state_decay = jnp.exp(dA_cum)                          # [B, nc, L, H]
+    Crep = jnp.repeat(Cc, rep, axis=3).astype(jnp.float32)  # [B,nc,L,H,N]
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Crep, h_prevs, state_decay)
+
+    y = (y_diag + y_off).reshape(Bz, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_forward(p, u, cfg: SSMConfig, initial=None):
+    """Full-sequence SSD block.  u [B, S, E] -> ([B, S, E], state)."""
+    Bz, S, E = u.shape
+    DI, N, H, P, G = (cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.d_head,
+                      cfg.n_groups)
+    z, x, Bm, Cm, dt = _split_proj(p, u, cfg)
+    cin = (lambda k: None) if initial is None else (lambda k: initial[k])
+    x, st_x = _conv_scan(p["conv_wx"], p["conv_bx"], x, cfg, cin("conv_x"))
+    Bm, st_B = _conv_scan(p["conv_wB"], p["conv_bB"], Bm, cfg, cin("conv_B"))
+    Cm, st_C = _conv_scan(p["conv_wC"], p["conv_bC"], Cm, cfg, cin("conv_C"))
+    x = x.reshape(Bz, S, H, P)
+    Bm = Bm.reshape(Bz, S, G, N)
+    Cm = Cm.reshape(Bz, S, G, N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    ssm_in = None if initial is None else initial["ssm"]
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, cfg, ssm_in)
+    y = y + x * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(Bz, S, DI) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm_w"])           # mamba2 gated norm
+    out = y @ p["out_proj"]
+    state = {"ssm": h.astype(jnp.float32), "conv_x": st_x,
+             "conv_B": st_B, "conv_C": st_C}
+    return out, state
+
+
+def ssm_state_spec(cfg: SSMConfig, batch: int) -> dict:
+    """ShapeDtypeStructs for the decode state of one SSD layer."""
+    gn = cfg.n_groups * cfg.d_state
+    conv = lambda d: jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, d),
+                                          jnp.bfloat16)
+    return {
+        "ssm": jax.ShapeDtypeStruct(
+            (batch, cfg.n_heads, cfg.d_head, cfg.d_state), jnp.float32),
+        "conv_x": conv(cfg.d_inner), "conv_B": conv(gn), "conv_C": conv(gn),
+    }
+
+
+def ssm_state_logical(cfg: SSMConfig) -> dict:
+    return {
+        "ssm": (shd.BATCH, shd.HEADS, shd.HEAD_DIM, shd.STATE),
+        "conv_x": (shd.BATCH, shd.CONV, shd.FF),
+        "conv_B": (shd.BATCH, shd.CONV, None),
+        "conv_C": (shd.BATCH, shd.CONV, None),
+    }
+
+
+def ssm_init_state(cfg: SSMConfig, batch: int) -> dict:
+    gn = cfg.n_groups * cfg.d_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_head, cfg.d_state),
+                         jnp.float32),
+        "conv_x": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner),
+                            jnp.bfloat16),
+        "conv_B": jnp.zeros((batch, cfg.d_conv - 1, gn), jnp.bfloat16),
+        "conv_C": jnp.zeros((batch, cfg.d_conv - 1, gn), jnp.bfloat16),
+    }
+
+
+def ssm_decode(p, u, cfg: SSMConfig, state: dict):
+    """One-token decode.  u [B, 1, E] -> ([B, 1, E], new state).  O(1)."""
+    Bz = u.shape[0]
+    DI, N, H, P, G = (cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.d_head,
+                      cfg.n_groups)
+    z, x, Bm, Cm, dt = _split_proj(p, u, cfg)
+
+    def conv1(w, b, xs, st):
+        """One-token depthwise conv over the [B, W-1, D] tail buffer."""
+        xp = jnp.concatenate([st, xs], axis=1)              # [B, W, D]
+        acc = jnp.zeros((Bz, xs.shape[-1]), jnp.float32)
+        for t in range(cfg.d_conv):
+            acc = acc + (xp[:, t].astype(jnp.float32)
+                         * w[t].astype(jnp.float32))
+        acc = jax.nn.silu(acc + b.astype(jnp.float32))
+        return acc.astype(u.dtype), xp[:, 1:]
+
+    x1, st_x = conv1(p["conv_wx"], p["conv_bx"], x, state["conv_x"])
+    Bm1, st_B = conv1(p["conv_wB"], p["conv_bB"], Bm, state["conv_B"])
+    Cm1, st_C = conv1(p["conv_wC"], p["conv_bC"], Cm, state["conv_C"])
+    x = x1.reshape(Bz, H, P)
+    Bm = Bm1.reshape(Bz, G, N)
+    Cm = Cm1.reshape(Bz, G, N)
+    rep = H // G
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # [B, H]
+
+    g = jnp.exp(dt1 * A[None, :])                               # [B, H]
+    Brep = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)      # [B, H, N]
+    Bx = jnp.einsum("bhn,bhp,bh->bhpn", Brep, x.astype(jnp.float32), dt1)
+    h = state["ssm"] * g[..., None, None] + Bx
+    Crep = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)      # [B, H, N]
+    y = jnp.einsum("bhpn,bhn->bhp", h, Crep)
+    y = y + x.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bz, 1, DI).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm_w"])           # mamba2 gated norm
+    out = y @ p["out_proj"]
+    return out, {"ssm": h, "conv_x": st_x, "conv_B": st_B, "conv_C": st_C}

@@ -1,0 +1,420 @@
+"""Decoder-only transformer LM — the workhorse for 7 of the 10 assigned
+architectures (dense GQA, squared-ReLU Nemotron family, gemma-2
+local/global + softcap, and both MoE variants).
+
+Engineering for the 512-device dry-run (DESIGN.md §6):
+  * scan-over-layers with stacked parameters — HLO size O(1) in depth;
+  * per-layer remat (``jax.checkpoint``) so train_4k activation memory is
+    one layer deep;
+  * chunked cross-entropy — the [B, S, V] logits tensor is never wider
+    than ``loss_chunk`` positions (V up to 256k);
+  * positions arrive as runtime inputs (no constant-folded RoPE tables).
+
+Layer patterns:
+  * "global"        — every layer causal full attention;
+  * "local_global"  — gemma-2 alternation; the scan body processes one
+    (local, global) *pair*, so the stacked depth is n_layers/2.
+MoE layers replace the dense MLP after ``first_dense`` layers (kimi-k2
+keeps layer 0 dense, DeepSeek-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding as shd
+from .attention import (AttentionConfig, attn_specs, attention, cache_logical,
+                        cache_spec, decode_attention, init_cache)
+from .common import (ParamSpec, count_params, cross_entropy, embed_lookup,
+                     init_params, norm_spec, param_structs, rms_norm, softcap)
+from .mlp import MLPConfig, MoEConfig, mlp, mlp_specs, moe, moe_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    act: str = "gelu"
+    gated_mlp: bool = False
+    use_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    # normalization / gemma-2 extras
+    norm_plus_one: bool = False      # (1 + w) RMSNorm weighting
+    post_block_norm: bool = False    # norm after attn/mlp residual branch
+    embed_scale: bool = False        # multiply embeddings by sqrt(d_model)
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    # attention pattern
+    layer_pattern: str = "global"    # global | local_global
+    window: int | None = None
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # MoE (n_experts == 0 ⇒ dense)
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    shared_expert: bool = False
+    d_ff_shared: int = 0             # 0 ⇒ same as d_ff_expert
+    first_dense: int = 0
+    moe_aux_weight: float = 0.01
+    # training
+    loss_chunk: int = 2048
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def attn_cfg(self, local: bool = False) -> AttentionConfig:
+        return AttentionConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.resolved_head_dim,
+            rope_theta=self.rope_theta, causal=True,
+            window=self.window if local else None,
+            logit_softcap=self.attn_softcap, use_bias=self.use_bias,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+
+    def mlp_cfg(self) -> MLPConfig:
+        return MLPConfig(self.d_model, self.d_ff, act=self.act,
+                         gated=self.gated_mlp, use_bias=self.use_bias)
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(self.d_model, self.d_ff_expert, self.n_experts,
+                         self.top_k, act=self.act, gated=self.gated_mlp,
+                         shared_expert=self.shared_expert,
+                         d_ff_shared=self.d_ff_shared or None)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: TransformerConfig, stacked: int | None, local: bool,
+                 use_moe: bool) -> dict:
+    d = cfg.d_model
+    specs = {
+        "attn": attn_specs(cfg.attn_cfg(local), stacked),
+        "ln_attn": norm_spec(d, stacked,
+                             init="zeros" if cfg.norm_plus_one else "ones"),
+        "ln_mlp": norm_spec(d, stacked,
+                            init="zeros" if cfg.norm_plus_one else "ones"),
+    }
+    if use_moe:
+        specs["moe"] = moe_specs(cfg.moe_cfg(), stacked)
+    else:
+        specs["mlp"] = mlp_specs(cfg.mlp_cfg(), stacked)
+    if cfg.post_block_norm:
+        specs["ln_attn_post"] = norm_spec(
+            d, stacked, init="zeros" if cfg.norm_plus_one else "ones")
+        specs["ln_mlp_post"] = norm_spec(
+            d, stacked, init="zeros" if cfg.norm_plus_one else "ones")
+    return specs
+
+
+def transformer_specs(cfg: TransformerConfig) -> dict:
+    d, V = cfg.d_model, cfg.vocab
+    n_dense0 = cfg.first_dense if cfg.is_moe else 0
+    n_stacked = cfg.n_layers - n_dense0
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((V, d), (shd.VOCAB, shd.TABLE), init="embed"),
+        "ln_final": norm_spec(d, init="zeros" if cfg.norm_plus_one else "ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((d, V), (shd.TABLE, shd.VOCAB))
+    if n_dense0:
+        specs["dense0"] = [
+            _block_specs(cfg, None, local=False, use_moe=False)
+            for _ in range(n_dense0)]
+    if cfg.layer_pattern == "local_global":
+        assert n_stacked % 2 == 0
+        specs["blocks"] = {
+            "local": _block_specs(cfg, n_stacked // 2, True, cfg.is_moe),
+            "global": _block_specs(cfg, n_stacked // 2, False, cfg.is_moe),
+        }
+    else:
+        specs["blocks"] = _block_specs(cfg, n_stacked, False, cfg.is_moe)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _norm(x, w, cfg):
+    return rms_norm(x, w, plus_one=cfg.norm_plus_one)
+
+
+def _block_fwd(p, h, positions, cfg: TransformerConfig, local: bool,
+               use_moe: bool):
+    """One pre-norm block.  Returns (h, aux_loss)."""
+    h = shd.constrain(h, (shd.BATCH, shd.SEQ_ACT, None))
+    a = attention(p["attn"], _norm(h, p["ln_attn"], cfg), positions,
+                  cfg.attn_cfg(local))
+    if cfg.post_block_norm:
+        a = _norm(a, p["ln_attn_post"], cfg)
+    h = h + a
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        f, aux = moe(p["moe"], _norm(h, p["ln_mlp"], cfg), cfg.moe_cfg())
+    else:
+        f = mlp(p["mlp"], _norm(h, p["ln_mlp"], cfg), cfg.mlp_cfg())
+    if cfg.post_block_norm:
+        f = _norm(f, p["ln_mlp_post"], cfg)
+    return h + f, aux
+
+
+def _embed(params, tokens, cfg: TransformerConfig):
+    h = embed_lookup(params["embed"], tokens)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), h.dtype)
+    return shd.constrain(h, (shd.BATCH, shd.SEQ_ACT, None))
+
+
+def _unembed(params, h, cfg: TransformerConfig):
+    h = _norm(h, params["ln_final"], cfg)
+    table = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = shd.constrain(h @ table, (shd.BATCH, None, shd.VOCAB))
+    return softcap(logits, cfg.final_softcap)
+
+
+def forward(params, tokens, positions, cfg: TransformerConfig):
+    """tokens [B, S] -> (hidden [B, S, E], aux_loss).  (No unembed.)"""
+    h = _embed(params, tokens, cfg)
+    return forward_hidden(params, h, positions, cfg)
+
+
+def forward_hidden(params, h, positions, cfg: TransformerConfig):
+    """Run the block stack on pre-embedded inputs (VLM prefix path)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for p0 in params.get("dense0", []):
+        h, _ = _block_fwd(p0, h, positions, cfg, local=False, use_moe=False)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        if cfg.layer_pattern == "local_global":
+            h, a1 = _block_fwd(layer_params["local"], h, positions, cfg,
+                               local=True, use_moe=cfg.is_moe)
+            h, a2 = _block_fwd(layer_params["global"], h, positions, cfg,
+                               local=False, use_moe=cfg.is_moe)
+            aux = aux + a1 + a2
+        else:
+            h, a = _block_fwd(layer_params, h, positions, cfg, local=False,
+                              use_moe=cfg.is_moe)
+            aux = aux + a
+        return (h, aux), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), params["blocks"])
+    return h, aux_total
+
+
+def loss_fn(params, tokens, labels, positions, cfg: TransformerConfig):
+    """Chunked-vocab-projection cross entropy (fp32 accumulate)."""
+    h, aux = forward(params, tokens, positions, cfg)
+    # chunk scan slices the sequence axis -> pull it back to replicated
+    # (DP2D leaves h sequence-sharded over 'model')
+    h = shd.constrain(h, (shd.BATCH, None, None))
+    B, S, _ = h.shape
+    C = min(cfg.loss_chunk, S)
+    assert S % C == 0
+    nchunk = S // C
+
+    def chunk_loss(h_c, y_c):
+        logits = _unembed(params, h_c, cfg)
+        return cross_entropy(logits, y_c)
+
+    if nchunk == 1:
+        ce = chunk_loss(h, labels)
+    else:
+        hc = jnp.moveaxis(h.reshape(B, nchunk, C, -1), 1, 0)
+        yc = jnp.moveaxis(labels.reshape(B, nchunk, C), 1, 0)
+        losses = jax.lax.map(jax.checkpoint(lambda args: chunk_loss(*args)),
+                             (hc, yc))
+        ce = jnp.mean(losses)
+    nl = max(cfg.n_layers, 1)
+    return ce + cfg.moe_aux_weight * aux / nl, ce
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _layer_attn_cfgs(cfg: TransformerConfig) -> list[tuple[str, bool]]:
+    """(scan-group, is_local) per stacked scan step."""
+    if cfg.layer_pattern == "local_global":
+        return [("local", True), ("global", False)]
+    return [("blocks", False)]
+
+
+def prefill(params, tokens, positions, cfg: TransformerConfig,
+            max_len: int | None = None):
+    """Full-sequence forward that also materializes the KV caches.
+
+    Returns (logits_last [B, V], caches).  Cache layout mirrors the param
+    stacking so decode can scan over (params, caches) together.
+    """
+    return prefill_hidden(params, _embed(params, tokens, cfg), positions,
+                          cfg, max_len)
+
+
+def prefill_hidden(params, h, positions, cfg: TransformerConfig,
+                   max_len: int | None = None):
+    """Prefill from pre-embedded inputs (VLM image-prefix path)."""
+    B, S, _ = h.shape
+    max_len = max_len or S
+    aux = jnp.zeros((), jnp.float32)
+
+    caches: dict[str, Any] = {"dense0": []}
+    for p0 in params.get("dense0", []):
+        cache = _prefill_cache(p0, _norm(h, p0["ln_attn"], cfg), positions,
+                               cfg, False, max_len)
+        h, _ = _block_fwd(p0, h, positions, cfg, False, use_moe=False)
+        caches["dense0"].append(cache)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        outs = {}
+        if cfg.layer_pattern == "local_global":
+            for key, local in _layer_attn_cfgs(cfg):
+                lp = layer_params[key]
+                outs[key] = _prefill_cache(
+                    lp, _norm(h, lp["ln_attn"], cfg), positions, cfg, local,
+                    max_len)
+                h, a = _block_fwd(lp, h, positions, cfg, local, cfg.is_moe)
+                aux = aux + a
+        else:
+            outs = _prefill_cache(
+                layer_params, _norm(h, layer_params["ln_attn"], cfg),
+                positions, cfg, False, max_len)
+            h, a = _block_fwd(layer_params, h, positions, cfg, False,
+                              cfg.is_moe)
+            aux = aux + a
+        return (h, aux), outs
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (h, aux), stacked_caches = jax.lax.scan(body, (h, aux), params["blocks"])
+    caches["blocks"] = stacked_caches
+    logits = _unembed(params, h[:, -1:, :], cfg)[:, 0]
+    return logits, caches
+
+
+def _prefill_cache(p, x_normed, positions, cfg, local, max_len):
+    """K/V of the whole sequence written into a max_len cache buffer."""
+    from .attention import _project_qkv
+    acfg = cfg.attn_cfg(local)
+    _, k, v = _project_qkv(p["attn"], x_normed, acfg, positions)
+    B, S = k.shape[0], k.shape[1]
+    buf = max_len if acfg.window is None else min(max_len, acfg.window)
+    if buf >= S:
+        pad = [(0, 0), (0, buf - S), (0, 0), (0, 0)]
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    # rolling window: keep the last `buf` positions at their slot indices
+    k_t, v_t = k[:, -buf:], v[:, -buf:]
+    slots = (positions[0, -buf:] % buf)
+    k_buf = jnp.zeros((B, buf) + k.shape[2:], k.dtype).at[:, slots].set(k_t)
+    v_buf = jnp.zeros((B, buf) + v.shape[2:], v.dtype).at[:, slots].set(v_t)
+    return {"k": k_buf, "v": v_buf}
+
+
+def decode_step(params, caches, token, position, cfg: TransformerConfig):
+    """One decode step.  token [B], position [B] -> (logits [B, V], caches)."""
+    h = _embed(params, token[:, None], cfg)
+
+    new_dense0 = []
+    for p0, c0 in zip(params.get("dense0", []), caches.get("dense0", [])):
+        h, c_new = _decode_block(p0, h, c0, position, cfg, False,
+                                 use_moe=False)
+        new_dense0.append(c_new)
+
+    def body(h, xs):
+        layer_params, layer_cache = xs
+        if cfg.layer_pattern == "local_global":
+            new_cache = {}
+            for key, local in _layer_attn_cfgs(cfg):
+                h, new_cache[key] = _decode_block(
+                    layer_params[key], h, layer_cache[key], position, cfg,
+                    local, cfg.is_moe)
+        else:
+            h, new_cache = _decode_block(layer_params, h, layer_cache,
+                                         position, cfg, False, cfg.is_moe)
+        return h, new_cache
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"],
+                                           caches["blocks"]))
+    logits = _unembed(params, h, cfg)[:, 0]
+    out_caches = {"dense0": new_dense0, "blocks": new_caches}
+    return logits, out_caches
+
+
+def _decode_block(p, h, cache, position, cfg, local, use_moe):
+    acfg = cfg.attn_cfg(local)
+    a, new_cache = decode_attention(p["attn"], _norm(h, p["ln_attn"], cfg),
+                                    cache, position, acfg)
+    if cfg.post_block_norm:
+        a = _norm(a, p["ln_attn_post"], cfg)
+    h = h + a
+    if use_moe:
+        f, _ = moe(p["moe"], _norm(h, p["ln_mlp"], cfg), cfg.moe_cfg(),
+                   group_size=h.shape[0] * h.shape[1])
+    else:
+        f = mlp(p["mlp"], _norm(h, p["ln_mlp"], cfg), cfg.mlp_cfg())
+    if cfg.post_block_norm:
+        f = _norm(f, p["ln_mlp_post"], cfg)
+    return h + f, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache specs (dry-run)
+# ---------------------------------------------------------------------------
+
+def cache_structs(cfg: TransformerConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree matching prefill's cache output layout."""
+    n_dense0 = cfg.first_dense if cfg.is_moe else 0
+    n_stacked = cfg.n_layers - n_dense0
+
+    def one(local, lead=()):
+        spec = cache_spec(cfg.attn_cfg(local), batch, max_len)
+        return {k: jax.ShapeDtypeStruct(lead + v.shape, v.dtype)
+                for k, v in spec.items()}
+
+    out = {"dense0": [one(False) for _ in range(n_dense0)]}
+    if cfg.layer_pattern == "local_global":
+        half = (n_stacked // 2,)
+        out["blocks"] = {"local": one(True, half), "global": one(False, half)}
+    else:
+        out["blocks"] = one(False, (n_stacked,))
+    return out
+
+
+def cache_logical_tree(cfg: TransformerConfig):
+    """Logical axis names per cache leaf (layer-stacked leaves get LAYERS)."""
+    n_dense0 = cfg.first_dense if cfg.is_moe else 0
+    base = cache_logical(cfg.attn_cfg())
+
+    def one(lead=()):
+        return {"k": lead + base, "v": lead + base}
+
+    out = {"dense0": [one() for _ in range(n_dense0)]}
+    if cfg.layer_pattern == "local_global":
+        out["blocks"] = {"local": one((shd.LAYERS,)),
+                         "global": one((shd.LAYERS,))}
+    else:
+        out["blocks"] = one((shd.LAYERS,))
+    return out

@@ -1,0 +1,69 @@
+"""LLaVA-NeXT-style VLM glue over the Mistral-7B transformer backbone.
+
+The anyres vision tower + projector are a **stub** per the assignment:
+``input_specs()`` supplies post-projector patch embeddings
+[B, n_patches, E].  This module splices them ahead of the text-token
+embeddings and reuses the decoder-only transformer unchanged:
+
+    h = concat(patch_embeds, embed(tokens))      # [B, P + S_text, E]
+    positions run 0..P+S_text-1 across the joint sequence
+    loss masks the image-prefix positions (labels = -1 there)
+
+Serving: prefill consumes the joint sequence; decode is pure-text and
+identical to the base transformer's decode_step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import cross_entropy
+from .transformer import (TransformerConfig, _embed, _unembed, forward_hidden,
+                          prefill_hidden)
+
+
+def splice(params, patches, tokens, cfg: TransformerConfig):
+    """[B, P, E] patches + [B, S_text] tokens -> (h [B, P+S, E], positions)."""
+    h_txt = _embed(params, tokens, cfg)
+    h = jnp.concatenate([patches.astype(h_txt.dtype), h_txt], axis=1)
+    B, S = h.shape[0], h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return h, positions
+
+
+def loss_fn(params, patches, tokens, labels, cfg: TransformerConfig):
+    """Next-token loss over text positions only.
+
+    labels [B, S_text] aligns with the text segment; the image prefix
+    contributes context but no loss terms.
+    """
+    from .. import sharding as shd
+    h, positions = splice(params, patches, tokens, cfg)
+    hidden, aux = forward_hidden(params, h, positions, cfg)
+    hidden = shd.constrain(hidden, (shd.BATCH, None, None))
+    n_patch = patches.shape[1]
+    h_txt = hidden[:, n_patch:, :]
+    B, S, _ = h_txt.shape
+    C = min(cfg.loss_chunk, S)
+    nchunk = max(S // C, 1)
+
+    def chunk_loss(h_c, y_c):
+        return cross_entropy(_unembed(params, h_c, cfg), y_c)
+
+    if nchunk == 1:
+        ce = chunk_loss(h_txt, labels)
+    else:
+        hc = jnp.moveaxis(h_txt.reshape(B, nchunk, C, -1), 1, 0)
+        yc = jnp.moveaxis(labels.reshape(B, nchunk, C), 1, 0)
+        ce = jnp.mean(jax.lax.map(
+            jax.checkpoint(lambda args: chunk_loss(*args)), (hc, yc)))
+    nl = max(cfg.n_layers, 1)
+    return ce + cfg.moe_aux_weight * aux / nl, ce
+
+
+def prefill(params, patches, tokens, cfg: TransformerConfig,
+            max_len: int | None = None):
+    """Joint image+text prefill.  Returns (last logits [B, V], caches)."""
+    h, positions = splice(params, patches, tokens, cfg)
+    return prefill_hidden(params, h, positions, cfg,
+                          max_len or h.shape[1])

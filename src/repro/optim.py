@@ -1,0 +1,300 @@
+"""Optimizers as pure pytree transforms, dry-run friendly.
+
+Two production optimizers:
+
+  * **AdamW** — fp32 first/second moments.  Moment tensors reuse the
+    parameter's *logical* sharding axes, and the train-step applies the
+    ZeRO-1 rule set (``repro.sharding.zero1_rules``) so every replicated
+    parameter axis is additionally sharded over 'data' — the optimizer
+    state for an N-param model occupies 8N/|data×model| bytes per chip.
+  * **Adafactor** — factored second moment (row+col fp32 vectors, no
+    momentum by default).  State is ~0.1% of AdamW's; it is the only way a
+    1T-param model (kimi-k2) trains inside v5e HBM (DESIGN.md §5).
+
+Both are expressed as ``init(params) -> state`` / ``update(grads, state,
+params) -> (new_params, new_state, stats)`` pure functions so the whole
+train step jits, donates, and lowers for the 512-device dry-run without
+any host-side state.
+
+Also here: warmup-cosine schedule, fp32 global-norm clipping, and the int8
+gradient codec used for the cross-pod (DCI-link) all-reduce.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .models.common import ParamSpec, is_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"            # adamw | adafactor | sgd
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    # adafactor
+    factored_min_dim: int = 128    # don't factor tiny tensors
+    decay_exponent: float = 0.8    # \hat{beta2}_t = 1 - t^-0.8
+
+
+# ---------------------------------------------------------------------------
+# schedule
+# ---------------------------------------------------------------------------
+
+def lr_schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to lr_min.  step: int32 scalar."""
+    stepf = step.astype(jnp.float32)
+    warm = cfg.lr_peak * stepf / max(cfg.warmup_steps, 1)
+    t = jnp.clip((stepf - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(math.pi * t))
+    return jnp.where(stepf < cfg.warmup_steps, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# gradient clipping
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_state_specs(spec_tree):
+    """ParamSpec tree for (m, v): same shapes/logical axes, fp32 storage.
+
+    The logical axes are reused verbatim — ZeRO-1 extra sharding is applied
+    by the *rule set* (sharding.zero1_rules maps the replicated axes to
+    'data'), not by editing the specs.
+    """
+    def fp32(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, init="zeros")
+    m = jax.tree.map(fp32, spec_tree, is_leaf=is_spec)
+    v = jax.tree.map(fp32, spec_tree, is_leaf=is_spec)
+    return {"m": m, "v": v, "step": ParamSpec((), (), init="zeros")}
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.float32)}
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1.0
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # no decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new, v_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+
+def _factorable(shape, min_dim) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def adafactor_state_specs(spec_tree, cfg: OptimizerConfig):
+    """Factored-v ParamSpec tree.  3D stacked params (L, I, O) factor over
+    the trailing two dims, keeping the layer-stack axis."""
+    def one(s: ParamSpec):
+        if _factorable(s.shape, cfg.factored_min_dim):
+            row = ParamSpec(s.shape[:-1], s.logical[:-1], init="zeros")
+            col = ParamSpec(s.shape[:-2] + s.shape[-1:],
+                            s.logical[:-2] + s.logical[-1:], init="zeros")
+            return {"vr": row, "vc": col}
+        return {"v": ParamSpec(s.shape, s.logical, init="zeros")}
+    return {"v": jax.tree.map(one, spec_tree, is_leaf=is_spec),
+            "step": ParamSpec((), (), init="zeros")}
+
+
+def adafactor_init(params, cfg: OptimizerConfig):
+    def one(p):
+        if _factorable(p.shape, cfg.factored_min_dim):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(one, params),
+            "step": jnp.zeros((), jnp.float32)}
+
+
+def adafactor_update(cfg: OptimizerConfig, grads, state, params):
+    step = state["step"] + 1.0
+    lr = lr_schedule(cfg, step)
+    beta2 = 1.0 - jnp.power(step, -cfg.decay_exponent)
+    is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+
+    def upd(g, v, p):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if "vr" in v:
+            vr = beta2 * v["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            # rank-1 reconstruction \hat v = vr vc / mean(vr)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (vr / denom)[..., None] * vc[..., None, :]
+            new_v = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta2 * v["v"] + (1 - beta2) * g2
+            new_v = {"v": vhat}
+        update = gf * jax.lax.rsqrt(vhat + 1e-30)
+        # update clipping (RMS ≤ 1), the adafactor stabilizer
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        if cfg.weight_decay and p.ndim >= 2:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return p_new, new_v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_state)[0]
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, v, p) for g, v, p in zip(flat_g, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    vdef = jax.tree.structure(state["v"], is_leaf=is_state)
+    new_v = jax.tree.unflatten(vdef, [o[1] for o in out])
+    return new_p, {"v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# unified front-end
+# ---------------------------------------------------------------------------
+
+class Optimizer:
+    """cfg-dispatched functional optimizer (jit/donate/lower friendly)."""
+
+    def __init__(self, cfg: OptimizerConfig):
+        self.cfg = cfg
+
+    def state_specs(self, spec_tree):
+        if self.cfg.kind == "adamw":
+            return adamw_state_specs(spec_tree)
+        if self.cfg.kind == "adafactor":
+            return adafactor_state_specs(spec_tree, self.cfg)
+        if self.cfg.kind == "sgd":
+            return {"step": ParamSpec((), (), init="zeros")}
+        raise ValueError(self.cfg.kind)
+
+    def init(self, params):
+        if self.cfg.kind == "adamw":
+            return adamw_init(params)
+        if self.cfg.kind == "adafactor":
+            return adafactor_init(params, self.cfg)
+        if self.cfg.kind == "sgd":
+            return {"step": jnp.zeros((), jnp.float32)}
+        raise ValueError(self.cfg.kind)
+
+    def update(self, grads, state, params):
+        """Returns (new_params, new_state, stats)."""
+        stats = {}
+        if self.cfg.clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, self.cfg.clip_norm)
+            stats["grad_norm"] = gn
+        if self.cfg.kind == "adamw":
+            new_p, new_s = adamw_update(self.cfg, grads, state, params)
+        elif self.cfg.kind == "adafactor":
+            new_p, new_s = adafactor_update(self.cfg, grads, state, params)
+        elif self.cfg.kind == "sgd":
+            step = state["step"] + 1.0
+            lr = lr_schedule(self.cfg, step)
+            new_p = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            new_s = {"step": step}
+        else:
+            raise ValueError(self.cfg.kind)
+        stats["lr"] = lr_schedule(self.cfg, new_s["step"])
+        return new_p, new_s, stats
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient codec — cross-pod all-reduce compression
+# ---------------------------------------------------------------------------
+# The pod axis crosses DCI links (~1/10 the ICI bandwidth).  Gradients are
+# quantized to int8 with a per-tensor fp32 scale before the cross-pod
+# reduce and dequantized after: 4x fewer bytes on the slow hop at <0.5%
+# relative RMS error (tests/test_optim.py quantifies).  Used by
+# repro.launch.train via `compressed_psum` inside shard_map.
+
+def int8_encode(x: jnp.ndarray, key: jax.Array | None = None):
+    """(int8 codes, fp32 scale).  Optional stochastic rounding."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
+    y = xf / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+
+
+def int8_decode(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale
+
+
+def compressed_psum(tree, axis_name: str):
+    """All-reduce a gradient pytree across ``axis_name`` in int8.
+
+    Codes are summed in int32 (exact — no overflow below 2^23 summands),
+    scales are shared via max so every participant dequantizes identically.
+    Returns the *mean* over the axis, matching jax.lax.pmean semantics.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-30) / 127.0
+        scale = jax.lax.pmax(scale, axis_name)
+        codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                         -127, 127).astype(jnp.int32)
+        total = jax.lax.psum(codes, axis_name)
+        return (total.astype(jnp.float32) * scale / n).astype(x.dtype)
+
+    return jax.tree.map(one, tree)

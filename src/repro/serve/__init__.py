@@ -1,0 +1,2 @@
+from .engine import (BatchedDecoder, Request,  # noqa: F401
+                     RetrievalAugmentedEngine)

@@ -1,0 +1,193 @@
+"""Serving: batched decode + label-hybrid retrieval (the RAG integration
+that makes ELI a first-class feature of the runtime).
+
+BatchedDecoder — continuous-batching-style slot engine around any arch's
+(prefill, decode) pair:
+
+  * fixed B decode slots (the compiled decode step has a static batch);
+  * requests prefill into a free slot (per-request cache splice via
+    dynamic_update_slice on the batch axis), decode advances *all* live
+    slots in one step — the standard serving amortization;
+  * per-slot stop conditions; finished slots are immediately reusable
+    (slot state is just cache rows + position).
+
+RetrievalAugmentedEngine — pairs a decoder with a LabelHybridEngine:
+every request carries (prompt tokens, query label set).  The engine
+embeds the prompt (mean of final hidden states via the model's own
+prefill), runs the ELI-selected filtered AKNN search, and splices the
+retrieved neighbor ids into the prompt as context pseudo-tokens.  The
+paper's property "only one sub-index is invoked per query" (§Exp-3) is
+what keeps the retrieval step one-shot per request here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import arch as A
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                    # [S] int32
+    max_new: int = 16
+    label_set: tuple[int, ...] = ()
+    rid: int = -1
+    # filled by the engine
+    generated: list[int] = dataclasses.field(default_factory=list)
+    neighbors: np.ndarray | None = None
+
+
+class BatchedDecoder:
+    """Slot-based batched decoding for one architecture."""
+
+    def __init__(self, spec: A.ArchSpec, params, batch_slots: int,
+                 max_len: int, greedy: bool = True):
+        assert spec.family in ("transformer", "hybrid"), spec.family
+        self.spec = spec
+        self.params = params
+        self.B = batch_slots
+        self.max_len = max_len
+        cfg = spec.cfg
+        self.vocab = cfg.vocab
+
+        self._prefill1 = jax.jit(A.make_prefill(spec, max_len))
+        self._decode = jax.jit(A.make_decode(spec))
+        # cache buffers for all slots; per-slot splice on the batch axis
+        shp = A.ShapeSpec("serve", "decode", max_len, batch_slots)
+        structs, _ = A.cache_structs(spec, shp)
+        self.cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  structs)
+        self.positions = np.zeros(batch_slots, np.int32)
+        self.last_token = np.zeros(batch_slots, np.int32)
+        self.live = np.zeros(batch_slots, bool)
+        self.slot_req: list[Request | None] = [None] * batch_slots
+
+    # -- slot management -------------------------------------------------------
+    def _splice(self, cache_b, slot: int):
+        """Write a batch-1 cache into slot ``slot`` of the slot cache."""
+        def one(full, piece):
+            # batch axis differs per family: transformer KV [L, B, S, H, D]
+            # vs hybrid {groups:{ssm:[G,P,B,...]}}; find the axis whose dim
+            # matches the slot count and the piece has size 1 there.
+            axis = next(i for i, (a, b) in
+                        enumerate(zip(full.shape, piece.shape))
+                        if a == self.B and b == 1)
+            idx = [0] * full.ndim
+            idx[axis] = slot
+            return jax.lax.dynamic_update_slice(full, piece.astype(full.dtype),
+                                                tuple(idx))
+        return jax.tree.map(one, self.cache, cache_b)
+
+    def admit(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot.  False if engine is full."""
+        free = np.flatnonzero(~self.live)
+        if free.size == 0:
+            return False
+        slot = int(free[0])
+        S = req.prompt.shape[0]
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        positions = jnp.arange(S, dtype=jnp.int32)[None]
+        logits, cache_b = self._prefill1(self.params,
+                                         {"tokens": tokens,
+                                          "positions": positions})
+        self.cache = self._splice(cache_b, slot)
+        tok = int(jnp.argmax(logits[0]))
+        req.generated.append(tok)
+        self.positions[slot] = S
+        self.last_token[slot] = tok
+        self.live[slot] = True
+        self.slot_req[slot] = req
+        return True
+
+    def step(self) -> list[Request]:
+        """One decode step for all live slots; returns finished requests."""
+        if not self.live.any():
+            return []
+        batch = {"token": jnp.asarray(self.last_token),
+                 "position": jnp.asarray(self.positions)}
+        logits, self.cache = self._decode(self.params, self.cache, batch)
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        done: list[Request] = []
+        for slot in np.flatnonzero(self.live):
+            req = self.slot_req[slot]
+            req.generated.append(int(next_tok[slot]))
+            self.positions[slot] += 1
+            self.last_token[slot] = next_tok[slot]
+            finished = (len(req.generated) >= req.max_new
+                        or self.positions[slot] + 1 >= self.max_len)
+            if finished:
+                self.live[slot] = False
+                self.slot_req[slot] = None
+                done.append(req)
+        return done
+
+    def run(self, requests: Sequence[Request]) -> list[Request]:
+        """Serve a request list to completion (admission + decode loop)."""
+        pending = list(requests)[::-1]
+        finished: list[Request] = []
+        while pending or self.live.any():
+            while pending and self.admit(pending[-1]):
+                pending.pop()
+            finished.extend(self.step())
+        return finished
+
+
+class RetrievalAugmentedEngine:
+    """ELI-backed RAG serving: retrieve label-filtered neighbors, then
+    generate."""
+
+    def __init__(self, decoder: BatchedDecoder, eli_engine,
+                 embed_fn: Callable[[np.ndarray], np.ndarray] | None = None,
+                 k: int = 5):
+        self.decoder = decoder
+        self.eli = eli_engine
+        self.k = k
+        self.embed_fn = embed_fn or self._default_embed
+        spec = decoder.spec
+        self._hidden = jax.jit(
+            lambda p, t, pos: self._mean_hidden(p, t, pos, spec))
+
+    @staticmethod
+    def _mean_hidden(params, tokens, positions, spec):
+        from ..models import hybrid as hy
+        from ..models import transformer as tf
+        if spec.family == "transformer":
+            h, _ = tf.forward(params, tokens, positions, spec.cfg)
+        else:
+            h = hy.forward(params, tokens, positions, spec.cfg)
+        return jnp.mean(h.astype(jnp.float32), axis=1)
+
+    def _default_embed(self, prompts: np.ndarray) -> np.ndarray:
+        """Mean final hidden state of the served model = query embedding."""
+        S = prompts.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                               prompts.shape)
+        h = self._hidden(self.decoder.params, jnp.asarray(prompts), pos)
+        h = np.asarray(h)
+        d = self.eli.vectors.shape[1]
+        if h.shape[1] < d:
+            h = np.pad(h, [(0, 0), (0, d - h.shape[1])])
+        return np.ascontiguousarray(h[:, :d], np.float32)
+
+    def serve(self, requests: Sequence[Request]) -> list[Request]:
+        # 1. retrieval (one ELI sub-index per request, paper Exp-3)
+        maxS = max(r.prompt.shape[0] for r in requests)
+        prompts = np.stack([np.pad(r.prompt, (0, maxS - r.prompt.shape[0]))
+                            for r in requests])
+        emb = self.embed_fn(prompts)
+        dists, ids = self.eli.search(emb, [r.label_set for r in requests],
+                                     self.k)
+        # 2. splice neighbor ids into the prompt as context pseudo-tokens
+        vocab = self.decoder.vocab
+        for i, r in enumerate(requests):
+            r.neighbors = ids[i]
+            ctx = (ids[i][ids[i] < len(self.eli.label_sets)] % vocab
+                   ).astype(np.int32)
+            r.prompt = np.concatenate([ctx, r.prompt]).astype(np.int32)
+        # 3. generate
+        return self.decoder.run(requests)

@@ -1,0 +1,247 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Every parameter/activation declares *logical* axis names; a ``ShardingRules``
+table maps them to physical mesh axes.  Meshes (repro.launch.mesh):
+
+    single-pod:  (data=16, model=16)              — 256 chips (v5e pod)
+    multi-pod:   (pod=2, data=16, model=16)       — 512 chips
+
+Mapping (Megatron-style TP on 'model', DP/ZeRO on 'data', pure DP across
+'pod' — the slower DCI links carry only gradient all-reduces):
+
+    vocab / ff / heads / kv_heads / experts  -> model
+    batch                                    -> (pod, data)
+    embed / layers / seq / state             -> replicated
+
+GSPMD handles non-divisible cases (e.g. 36 heads on a 16-way model axis)
+with implicit padding; DESIGN.md §5 records where that costs us and the
+hillclimb in EXPERIMENTS.md §Perf revisits the worst offenders.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# logical axis vocabulary
+BATCH = "batch"
+SEQ = "seq"
+SEQ_ACT = "seq_act"     # activation sequence axis.  None under Megatron
+                        # layouts; 'model' under DP2D (context parallelism:
+                        # shard_map flash attention over sequence shards)
+EMBED = "embed"
+TABLE = "table"         # embedding-table d_model dim: NEVER sharded.
+                        # (FSDP-sharding the table's d axis turns the tied
+                        # unembed into a partial-sum contraction — XLA
+                        # all-reduces full fp32 logits; Megatron-style
+                        # vocab-parallel [VOCAB->model, TABLE->None] costs
+                        # one tiny [B,S] all-reduce instead.)
+VOCAB = "vocab"
+FF = "ff"
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+EXPERTS = "experts"
+LAYERS = "layers"
+STATE = "state"         # SSM state dim
+CONV = "conv"           # conv kernel taps
+NOSHARD = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> physical mesh axis (or tuple of axes, or None)."""
+    rules: Mapping[str, object] = dataclasses.field(default_factory=lambda: {
+        BATCH: ("pod", "data"),
+        SEQ: None,
+        SEQ_ACT: None,
+        EMBED: None,
+        TABLE: None,
+        VOCAB: "model",
+        FF: "model",
+        HEADS: "model",
+        KV_HEADS: "model",
+        HEAD_DIM: None,
+        EXPERTS: "model",
+        LAYERS: None,
+        STATE: None,
+        CONV: None,
+    })
+
+    def physical(self, logical_name: str | None, mesh: Mesh):
+        if logical_name is None:
+            return None
+        ax = self.rules.get(logical_name)
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            present = tuple(a for a in ax if a in mesh.axis_names)
+            if not present:
+                return None
+            return present if len(present) > 1 else present[0]
+        return ax if ax in mesh.axis_names else None
+
+    def spec(self, logical: Sequence[str | None], mesh: Mesh,
+             shape: Sequence[int] | None = None) -> P:
+        """PartitionSpec for ``logical`` axis names.
+
+        With ``shape`` given, the spec is made *legal*: a mesh axis is kept
+        only if (a) it divides the dim evenly (jit in_shardings demand it)
+        and (b) it is not already consumed by an earlier dim (two dims may
+        name the same mesh axis, e.g. the SEQ->model flash-decoding layout
+        vs KV_HEADS->model — first dim wins, later dims fall back).
+        """
+        if shape is None:
+            return P(*(self.physical(name, mesh) for name in logical))
+        assert len(shape) == len(logical), (shape, logical)
+        used: set[str] = set()
+        parts = []
+        for dim, name in zip(shape, logical):
+            ph = self.physical(name, mesh)
+            axes = (ph,) if isinstance(ph, str) else (ph or ())
+            chosen: list[str] = []
+            prod = 1
+            for ax in axes:
+                if ax in used:
+                    continue
+                if dim % (prod * mesh.shape[ax]) == 0:
+                    chosen.append(ax)
+                    prod *= mesh.shape[ax]
+            used.update(chosen)
+            parts.append(tuple(chosen) if len(chosen) > 1
+                         else (chosen[0] if chosen else None))
+        return P(*parts)
+
+    def sharding(self, logical: Sequence[str | None], mesh: Mesh,
+                 shape: Sequence[int] | None = None) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(logical, mesh, shape))
+
+    def replace(self, **updates) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(updates)
+        return ShardingRules(rules=merged)
+
+
+DEFAULT_RULES = ShardingRules()
+
+# serving cache layout: flash-decoding.  KV-cache SEQ axis over 'model'
+# (softmax partials all-reduce tiny [B, H] stats; works for any kv_heads
+# count, unlike head sharding which dies at kv_heads < |model|); batch
+# stays on (pod, data).
+DECODE_RULES = DEFAULT_RULES.replace(**{SEQ: "model", KV_HEADS: None})
+
+# long-context decode (batch=1 cannot fill 'data'): spread the 500k-token
+# cache sequence axis over BOTH mesh axes.
+LONG_CONTEXT_RULES = DEFAULT_RULES.replace(
+    **{SEQ: ("data", "model"), KV_HEADS: None, BATCH: ("pod",)})
+
+# ZeRO-1: optimizer moments shard their (otherwise replicated) EMBED axis
+# over 'data' — applied to the *optimizer state* only; params stay
+# TP-sharded/DP-replicated and gradients all-reduce as usual.
+ZERO1_RULES = DEFAULT_RULES.replace(**{EMBED: "data"})
+
+# FSDP / ZeRO-3: parameters themselves also shard EMBED over data (and pod,
+# for the 1T-param kimi-k2 — the only way weights fit HBM).  XLA SPMD
+# inserts the per-scan-step all-gather, i.e. textbook FSDP prefetch.
+FSDP_RULES = DEFAULT_RULES.replace(**{EMBED: "data"})
+FSDP_POD_RULES = DEFAULT_RULES.replace(**{EMBED: ("pod", "data")})
+
+# DP2D ("2D data parallel", the beyond-paper §Perf layout): the 'model'
+# axis carries activation *sequence* shards instead of weight shards.
+# Weights: replicated over model, FSDP over data (EMBED axis); vocab stays
+# Megatron-sharded (vocab-parallel loss is comm-free but a [B,S] psum).
+# Activations: batch over (pod, data), sequence over model (shard_map
+# context-parallel attention — see models/attention.py).  Kills the
+# per-activation TP all-reduces entirely; comm becomes params AG + grad RS
+# (overlappable), measured 10-20x collective-term reduction on the dense
+# archs (EXPERIMENTS.md §Perf).
+DP2D_PARAM_RULES = DEFAULT_RULES.replace(**{
+    EMBED: "data", FF: None, HEADS: None, KV_HEADS: None})
+DP2D_ACT_RULES = DEFAULT_RULES.replace(**{SEQ_ACT: "model"})
+
+# DP_FLAT (train_4k on the dense archs): global batch 256 == single-pod
+# chip count, so the whole mesh becomes one flat DP axis — attention is
+# fully local (no CP gathers, no dK/dV sync) and the only collectives
+# left are the FSDP param all-gather + gradient reduce-scatter.  Axis
+# order ('data','model','pod'): on the multi-pod mesh batch 256 cannot
+# split 512 ways, so the divisibility fixup drops 'pod' and parameters
+# ZeRO-shard across pods instead (the DCI hop carries grad sync only).
+# EMBED spans ('data','model'): gradients arrive partial-summed over the
+# whole mesh and land on fully-sharded parameters, so XLA emits a single
+# reduce-scatter (1x param bytes) instead of a full all-reduce (2x) —
+# and per-device parameter memory drops 16x vs data-only sharding.
+DP_FLAT_PARAM_RULES = DEFAULT_RULES.replace(**{
+    BATCH: ("data", "model", "pod"), EMBED: ("data", "model"),
+    FF: None, HEADS: None, KV_HEADS: None})
+DP_FLAT_ACT_RULES = DEFAULT_RULES.replace(**{
+    BATCH: ("data", "model", "pod")})
+
+
+def tree_specs(spec_tree, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    """Map a tree of ParamSpec (with .logical) to a PartitionSpec tree."""
+    return jax.tree.map(lambda ps: rules.spec(ps.logical, mesh, ps.shape),
+                        spec_tree, is_leaf=lambda x: hasattr(x, "logical"))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    return jax.tree.map(lambda ps: rules.sharding(ps.logical, mesh, ps.shape),
+                        spec_tree, is_leaf=lambda x: hasattr(x, "logical"))
+
+
+def struct_shardings(struct_tree, logical_tree, mesh: Mesh,
+                     rules: ShardingRules = DEFAULT_RULES):
+    """Shardings for a (ShapeDtypeStruct tree, logical-axis tree) pair."""
+    return jax.tree.map(
+        lambda s, l: rules.sharding(l, mesh, s.shape),
+        struct_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (MaxText-style logical constraints)
+# ---------------------------------------------------------------------------
+# GSPMD's solver re-shards intermediates freely; measured on the 256-chip
+# mesh it replicated the batch dim through the layer stack and all-gathered
+# full fp32 logits (98 GiB/step on mamba2-130m).  Model code therefore pins
+# the handful of load-bearing intermediates via ``constrain(x, logical)``.
+# The mesh+rules arrive through a context set by the lowering entry points
+# (Cell.lower, Trainer); with no context active, constrain() is a no-op, so
+# single-device tests and tracing outside a mesh are unaffected.
+
+import contextlib
+import contextvars
+
+_ACT_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_context(mesh: Mesh, rules: ShardingRules = DEFAULT_RULES):
+    token = _ACT_CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT_CTX.reset(token)
+
+
+def constrain(x, logical: Sequence[str | None]):
+    """with_sharding_constraint by logical axis names (no-op w/o context)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(logical, mesh, x.shape))
+
+
+def active_context() -> tuple[Mesh, "ShardingRules"] | None:
+    """(mesh, rules) of the enclosing activation_context, or None."""
+    return _ACT_CTX.get()
+
+
+def batch_axes(mesh: Mesh, rules: "ShardingRules" = DEFAULT_RULES):
+    ph = rules.physical(BATCH, mesh)
+    return (ph,) if isinstance(ph, str) else (ph or ())

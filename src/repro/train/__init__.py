@@ -1,0 +1,1 @@
+from .loop import SimulatedFailure, Trainer, TrainConfig  # noqa: F401

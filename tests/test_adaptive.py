@@ -1,0 +1,103 @@
+"""Workload-adaptive selection (paper §7 future work): weighted greedy
+correctness, drift detection, and incremental reselection."""
+import numpy as np
+import pytest
+
+from repro.core import LabelWorkloadConfig, generate_label_sets, recall_at_k
+from repro.core.adaptive import (AdaptiveEngine, WorkloadMonitor,
+                                 weighted_select)
+from repro.core.engine import LabelHybridEngine, brute_force_filtered
+from repro.core.groups import EMPTY_KEY, GroupTable
+from repro.core.labels import encode_label_set, mask_key
+
+
+def K(*labels):
+    return mask_key(encode_label_set(labels))
+
+
+A, B, AB = K(0), K(1), K(0, 1)
+
+
+def toy_sizes():
+    # top 100; A=40 ⊃ AB=10; B=45 ⊃ AB
+    return {EMPTY_KEY: 100, A: 40, B: 45, AB: 10}
+
+
+def test_weighted_select_prefers_hot_queries():
+    sizes = toy_sizes()
+    hot_ab = {AB: 0.9, A: 0.05, B: 0.05}
+    sel = weighted_select(sizes, hot_ab, space_budget=15)
+    # budget only fits AB (10) — the hot query gets its own index
+    assert AB in sel.selected
+    assert sel.space <= 15
+    # expected cost: AB served at 10, others at 100
+    assert sel.expected_cost == pytest.approx(0.9 * 10 + 0.1 * 100, rel=1e-6)
+
+    cold_ab = {AB: 0.02, A: 0.49, B: 0.49}
+    sel2 = weighted_select(sizes, cold_ab, space_budget=50)
+    # the hot (heavy) queries win the first greedy round, not the cold one
+    assert sel2.rounds[0][0] == A
+    assert A in sel2.selected
+
+
+def test_weighted_select_respects_budget_and_improves_monotonically():
+    sizes = toy_sizes()
+    w = {A: 0.4, B: 0.4, AB: 0.2}
+    costs = []
+    for budget in (0, 10, 50, 95, 200):
+        sel = weighted_select(sizes, w, budget)
+        assert sel.space <= budget
+        costs.append(sel.expected_cost)
+    assert costs == sorted(costs, reverse=True)   # more space never hurts
+    # unlimited budget: every query served by its own index
+    assert costs[-1] == pytest.approx(0.4 * 40 + 0.4 * 45 + 0.2 * 10)
+
+
+def test_monitor_drift():
+    m = WorkloadMonitor(halflife=50)
+    m.observe([(0,)] * 100)
+    m.snapshot()
+    assert m.drift() == pytest.approx(0.0)
+    m.observe([(1,)] * 200)                      # workload flips
+    assert m.drift() > 0.5
+
+
+def test_adaptive_engine_reselects_and_stays_correct():
+    rng = np.random.default_rng(0)
+    n = 3000
+    x = rng.standard_normal((n, 16)).astype(np.float32)
+    ls = generate_label_sets(n, LabelWorkloadConfig(num_labels=8, seed=1))
+    eng = LabelHybridEngine.build(x, ls, mode="sis", space_budget=n,
+                                  backend="flat")
+    ada = AdaptiveEngine(eng, space_budget=n, drift_threshold=0.2,
+                         min_queries=50)
+
+    # phase 1 workload: mostly label (0,)
+    q = rng.standard_normal((60, 16)).astype(np.float32)
+    qls = [(0,)] * 60
+    ada.search(q, qls, 5)
+    ada.monitor.snapshot()
+
+    # phase 2: flips to (1, 2) — drift fires a reselection
+    qls2 = [(1, 2)] * 60
+    d, i = ada.search(q, qls2, 5)
+    assert ada.reselect_log, "drift should have triggered reselection"
+    rec = ada.reselect_log[-1]
+    assert rec["space"] <= n
+
+    # correctness after reselection: exact recall vs brute force
+    gt_d, gt_i = brute_force_filtered(x, ls, q, qls2, 5)
+    d3, i3 = ada.engine.search(q, qls2, 5)
+    assert recall_at_k(i3, gt_i, n) == pytest.approx(1.0)
+    # the hot key now has a dedicated (or small covering) index
+    hot = mask_key(encode_label_set((1, 2)))
+    serve = ada.engine.route((1, 2))
+    table = ada.engine.table.closure_sizes
+    assert table[serve] <= table[EMPTY_KEY]
+
+
+def test_uniform_weights_cover_everything_with_budget():
+    sizes = toy_sizes()
+    sel = weighted_select(sizes, {k: 1.0 for k in sizes}, space_budget=10**6)
+    for q in (A, B, AB):
+        assert sel.assignment[q] == q          # elastic factor 1 everywhere

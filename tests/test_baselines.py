@@ -1,0 +1,86 @@
+"""Baseline behavior tests: the qualitative orderings the paper reports
+must reproduce (Table 1 / Exp-1), and every baseline obeys the calling
+convention."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.baselines import (AcornBaseline, BASELINE_REGISTRY, NHQBaseline,
+                             OptimalBaseline, PostFilteringBaseline,
+                             PreFilteringBaseline, UNGBaseline)
+from repro.core import (LabelWorkloadConfig, brute_force_filtered,
+                        generate_label_sets, generate_query_label_sets,
+                        recall_at_k)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(3)
+    N, D, Q = 1000, 32, 24
+    x = rng.standard_normal((N, D)).astype(np.float32)
+    ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=10, seed=11))
+    q = rng.standard_normal((Q, D)).astype(np.float32)
+    qls = generate_query_label_sets(ls, Q, seed=12)
+    gt_d, gt_i = brute_force_filtered(x, ls, q, qls, 10)
+    return dict(x=x, ls=ls, q=q, qls=qls, gt_i=gt_i, N=N)
+
+
+@pytest.fixture(scope="module")
+def recalls(data):
+    out = {}
+    for name, cls in BASELINE_REGISTRY.items():
+        b = cls(data["x"], data["ls"])
+        _, i = b.search(data["q"], data["qls"], 10)
+        out[name] = recall_at_k(i, data["gt_i"], data["N"])
+    return out
+
+
+def test_optimal_is_exact(recalls):
+    assert recalls["optimal"] == pytest.approx(1.0)
+
+
+def test_postfilter_beats_prefilter(recalls):
+    """Paper §2.2: PreFiltering loses reachability at low selectivity."""
+    assert recalls["postfilter"] >= recalls["prefilter"]
+
+
+def test_acorn_gamma_beats_acorn1(recalls):
+    """ACORN-γ's denser graph repairs PreFiltering connectivity (paper §1)."""
+    assert recalls["acorn_gamma"] >= recalls["acorn1"]
+
+
+def test_ung_completeness_quality(recalls):
+    """UNG guarantees completeness — recall should be near PostFiltering."""
+    assert recalls["ung"] > 0.7
+
+
+def test_nhq_below_sota(recalls):
+    """NHQ's soft filter has no completeness guarantee (paper Table 1)."""
+    assert recalls["nhq"] <= recalls["optimal"]
+
+
+def test_ung_results_pass_filter(data):
+    b = UNGBaseline(data["x"], data["ls"])
+    _, ids = b.search(data["q"], data["qls"], 10)
+    for qi, qls in enumerate(data["qls"]):
+        need = set(qls)
+        for v in ids[qi]:
+            if v < data["N"]:
+                assert need <= set(data["ls"][v])
+
+
+def test_acorn_gamma_is_denser(data):
+    a1 = AcornBaseline(data["x"], data["ls"], gamma=1)
+    ag = AcornBaseline(data["x"], data["ls"], gamma=4)
+    assert ag.index.adjacency.shape[1] > a1.index.adjacency.shape[1]
+
+
+def test_nhq_weight_zero_ignores_labels(data):
+    """w=0 degenerates NHQ into plain AKNN — label-blind results."""
+    b = NHQBaseline(data["x"], data["ls"], weight=0.0)
+    gt_d, gt_free = brute_force_filtered(
+        data["x"], data["ls"], data["q"], [()] * len(data["qls"]), 10)
+    _, i = b.search(data["q"], data["qls"], 10)
+    free_recall = recall_at_k(i, gt_free, data["N"])
+    assert free_recall > 0.85

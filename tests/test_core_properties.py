@@ -1,0 +1,172 @@
+"""Property-based tests (hypothesis) for the ELI core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EMPTY_KEY,
+    GroupTable,
+    LabelWorkloadConfig,
+    achievable_ratios,
+    contains,
+    coverage_pairs,
+    decode_label_set,
+    elastic_factor,
+    encode_label_set,
+    encode_many,
+    estimate_closure_size,
+    generate_label_sets,
+    generate_query_label_sets,
+    greedy_eis,
+    key_contains,
+    key_subsets,
+    mask_key,
+    min_elastic_factor,
+    sampled_group_table,
+    sis,
+    verify_selection,
+)
+
+label_set = st.frozensets(st.integers(0, 9), max_size=5).map(lambda s: tuple(sorted(s)))
+label_sets = st.lists(label_set, min_size=1, max_size=60)
+
+
+@given(label_set)
+def test_bitmask_roundtrip(ls):
+    assert decode_label_set(encode_label_set(ls)) == ls
+
+
+@given(label_set, label_set)
+def test_key_contains_matches_set_semantics(a, b):
+    ka, kb = mask_key(encode_label_set(a)), mask_key(encode_label_set(b))
+    assert key_contains(ka, kb) == set(b).issubset(set(a))
+
+
+@given(label_set)
+def test_key_subsets_enumerates_powerset(ls):
+    subs = list(key_subsets(mask_key(encode_label_set(ls))))
+    assert len(subs) == 2 ** len(ls)
+    assert len(set(subs)) == len(subs)
+    for s in subs:
+        assert key_contains(mask_key(encode_label_set(ls)), s)
+
+
+@given(label_sets)
+@settings(max_examples=50, deadline=None)
+def test_closure_sizes_match_bruteforce(lsets):
+    table = GroupTable.build(lsets)
+    masks = encode_many(lsets)
+    for key, size in table.closure_sizes.items():
+        qmask = np.array(key, dtype=np.uint64)
+        brute = int(contains(masks, qmask).sum())
+        assert size == brute
+        members = table.closure_members(key)
+        assert len(members) == brute
+
+
+@given(label_sets, st.floats(0.05, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_greedy_always_feasible(lsets, c):
+    table = GroupTable.build(lsets)
+    res = greedy_eis(table.closure_sizes, c)
+    assert EMPTY_KEY in res.selected
+    assert not verify_selection(list(table.closure_sizes), table.closure_sizes,
+                                res.selected, c)
+
+
+@given(label_sets, st.floats(0.05, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_coverage_pairs_match_definition(lsets, c):
+    table = GroupTable.build(lsets)
+    sizes = table.closure_sizes
+    cover = coverage_pairs(sizes, c)
+    # brute force over all pairs
+    for jkey, jsize in sizes.items():
+        expect = sorted(
+            ikey for ikey, isize in sizes.items()
+            if key_contains(ikey, jkey) and jsize > 0 and isize / jsize >= c
+        )
+        assert sorted(cover[jkey]) == expect
+
+
+@given(label_sets)
+@settings(max_examples=30, deadline=None)
+def test_elastic_factor_monotone_in_selection(lsets):
+    """Adding an index to the selection never hurts any query's factor."""
+    table = GroupTable.build(lsets)
+    sizes = table.closure_sizes
+    keys = sorted(sizes)
+    small = {EMPTY_KEY: sizes[EMPTY_KEY]}
+    big = dict(small)
+    for k in keys[: len(keys) // 2]:
+        big[k] = sizes[k]
+    for qk in keys:
+        f_small, _ = elastic_factor(qk, sizes[qk], small)
+        f_big, _ = elastic_factor(qk, sizes[qk], big)
+        assert f_big >= f_small - 1e-12
+
+
+@given(label_sets, st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_sis_respects_budget_and_feasible(lsets, budget):
+    table = GroupTable.build(lsets)
+    res = sis(table.closure_sizes, budget)
+    assert res.eis.cost <= budget or res.c == 0.0
+    achieved = min_elastic_factor(list(table.closure_sizes),
+                                  table.closure_sizes, res.eis.selected)
+    assert achieved >= res.c - 1e-12
+
+
+@given(label_sets)
+@settings(max_examples=20, deadline=None)
+def test_sis_monotone_in_budget(lsets):
+    table = GroupTable.build(lsets)
+    budgets = [0, 5, 20, 100, 10_000]
+    cs = [sis(table.closure_sizes, b).c for b in budgets]
+    assert all(b >= a - 1e-12 for a, b in zip(cs, cs[1:]))
+    assert cs[-1] <= 1.0 + 1e-12
+
+
+@given(label_sets)
+@settings(max_examples=20, deadline=None)
+def test_achievable_ratios_bounded(lsets):
+    table = GroupTable.build(lsets)
+    ratios = achievable_ratios(table.closure_sizes)
+    assert ratios == sorted(ratios)
+    assert all(0 < r <= 1.0 for r in ratios)
+
+
+def test_estimator_converges():
+    cfg = LabelWorkloadConfig(num_labels=12, seed=3)
+    lsets = generate_label_sets(5000, cfg)
+    exact = GroupTable.build(lsets)
+    est = sampled_group_table(lsets, sample_size=2000, seed=0)
+    # compare on the 20 largest closures (small ones are noise-dominated)
+    top = sorted(exact.closure_sizes, key=exact.closure_sizes.get, reverse=True)[:20]
+    for k in top:
+        e, t = est.closure_sizes.get(k, 0), exact.closure_sizes[k]
+        assert abs(e - t) / t < 0.35
+
+
+def test_estimate_single_closure():
+    cfg = LabelWorkloadConfig(num_labels=8, seed=4)
+    lsets = generate_label_sets(4000, cfg)
+    exact = GroupTable.build(lsets)
+    qk = max(exact.closure_sizes, key=lambda k: exact.closure_sizes[k] if k != EMPTY_KEY else 0)
+    q = decode_label_set(np.array(qk, dtype=np.uint64))
+    est = estimate_closure_size(lsets, q, sample_size=1500, seed=1)
+    assert abs(est - exact.closure_sizes[qk]) / exact.closure_sizes[qk] < 0.3
+
+
+def test_workload_generators_all_distributions():
+    for dist in ("zipf", "uniform", "poisson", "multinormal"):
+        cfg = LabelWorkloadConfig(num_labels=16, distribution=dist, seed=7)
+        lsets = generate_label_sets(500, cfg)
+        assert len(lsets) == 500
+        assert all(all(0 <= l < 16 for l in ls) for ls in lsets)
+        qs = generate_query_label_sets(lsets, 100, seed=2)
+        assert len(qs) == 100
+        # queries drawn from base sets have non-empty filtered sets
+        table = GroupTable.build(lsets, query_keys=[mask_key(encode_label_set(q)) for q in qs])
+        for q in qs:
+            qk = mask_key(encode_label_set(q))
+            assert table.closure_sizes.get(qk, 0) > 0 or q == ()

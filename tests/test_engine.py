@@ -1,0 +1,121 @@
+"""End-to-end engine tests: selection feasibility, routing, recall,
+space/efficiency tradeoff direction, sampled estimation, distributed shard
+search equivalence."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (EMPTY_KEY, LabelHybridEngine, LabelWorkloadConfig,
+                        brute_force_filtered, encode_label_set,
+                        generate_label_sets, generate_query_label_sets,
+                        mask_key, min_elastic_factor, recall_at_k,
+                        verify_selection)
+from repro.index import DistributedFlatIndex
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(7)
+    N, D, Q = 1200, 32, 24
+    x = rng.standard_normal((N, D)).astype(np.float32)
+    ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=10, seed=5))
+    q = rng.standard_normal((Q, D)).astype(np.float32)
+    qls = generate_query_label_sets(ls, Q, seed=6)
+    gt_d, gt_i = brute_force_filtered(x, ls, q, qls, 10)
+    return dict(x=x, ls=ls, q=q, qls=qls, gt_d=gt_d, gt_i=gt_i, N=N)
+
+
+def test_eis_engine_exact_with_flat(data):
+    eng = LabelHybridEngine.build(data["x"], data["ls"], mode="eis", c=0.2)
+    d, i = eng.search(data["q"], data["qls"], 10)
+    assert recall_at_k(i, data["gt_i"], data["N"]) == pytest.approx(1.0)
+
+
+def test_eis_selection_meets_bound(data):
+    eng = LabelHybridEngine.build(data["x"], data["ls"], mode="eis", c=0.3)
+    qkeys = [k for k in eng.table.closure_sizes if k != EMPTY_KEY]
+    assert verify_selection(qkeys, eng.table.closure_sizes,
+                            eng.selection.selected, 0.3) == []
+    assert eng.stats().achieved_c >= 0.3 - 1e-9
+
+
+def test_sis_respects_budget_and_monotone_space(data):
+    small = LabelHybridEngine.build(data["x"], data["ls"], mode="sis",
+                                    space_budget=len(data["ls"]) // 2)
+    big = LabelHybridEngine.build(data["x"], data["ls"], mode="sis",
+                                  space_budget=len(data["ls"]) * 2)
+    assert small.selection.cost <= len(data["ls"]) // 2
+    assert big.selection.cost <= len(data["ls"]) * 2
+    # more space ⇒ no worse elastic factor bound (paper §5 monotonicity)
+    assert big.sis_result.c >= small.sis_result.c - 1e-12
+
+
+def test_sis_engine_recall(data):
+    eng = LabelHybridEngine.build(data["x"], data["ls"], mode="sis",
+                                  space_budget=len(data["ls"]))
+    d, i = eng.search(data["q"], data["qls"], 10)
+    assert recall_at_k(i, data["gt_i"], data["N"]) == pytest.approx(1.0)
+
+
+def test_routing_picks_max_elastic_factor(data):
+    eng = LabelHybridEngine.build(data["x"], data["ls"], mode="eis", c=0.2)
+    for qls in data["qls"][:10]:
+        key = eng.route(tuple(qls))
+        qkey = mask_key(encode_label_set(qls))
+        qsize = eng.table.closure_sizes.get(qkey)
+        if qsize is None or qsize == 0:
+            continue
+        # routed index must actually contain the query's closure
+        from repro.core import key_contains
+        assert key_contains(qkey, key)
+        # and achieve the query's best factor among selected indices
+        best = max(qsize / s for k2, s in eng.selection.selected.items()
+                   if key_contains(qkey, k2))
+        got = qsize / eng.selection.selected[key]
+        assert got == pytest.approx(best)
+
+
+def test_unseen_query_key_routes_to_superset(data):
+    eng = LabelHybridEngine.build(data["x"], data["ls"], mode="eis", c=0.2)
+    # an unseen combination: pick two labels that do not co-occur
+    key = eng.route((0, 1, 2, 3, 4, 5))
+    from repro.core import key_contains
+    assert key_contains(mask_key(encode_label_set((0, 1, 2, 3, 4, 5))), key)
+
+
+def test_search_ids_are_global_and_pass_filter(data):
+    eng = LabelHybridEngine.build(data["x"], data["ls"], mode="eis", c=0.2)
+    _, ids = eng.search(data["q"], data["qls"], 10)
+    for qi, qls in enumerate(data["qls"]):
+        need = set(qls)
+        for v in ids[qi]:
+            if v >= data["N"]:
+                continue
+            assert need <= set(data["ls"][v])
+
+
+def test_sampled_estimator_engine_still_exact_search(data):
+    eng = LabelHybridEngine.build(data["x"], data["ls"], mode="eis", c=0.2,
+                                  sample_size=300)
+    d, i = eng.search(data["q"], data["qls"], 10)
+    # estimation affects selection quality, not correctness of flat search
+    assert recall_at_k(i, data["gt_i"], data["N"]) == pytest.approx(1.0)
+
+
+def test_higher_c_costs_more_space(data):
+    lo = LabelHybridEngine.build(data["x"], data["ls"], mode="eis", c=0.1)
+    hi = LabelHybridEngine.build(data["x"], data["ls"], mode="eis", c=0.5)
+    assert hi.selection.cost >= lo.selection.cost
+
+
+def test_distributed_flat_matches_single_device(data):
+    mesh = jax.make_mesh((1,), ("data",))
+    from repro.core import encode_many, masks_to_int32_words
+    lx = masks_to_int32_words(encode_many(data["ls"]))
+    lq = masks_to_int32_words(encode_many(data["qls"]))
+    dist = DistributedFlatIndex(data["x"], lx, mesh)
+    d, i = dist.search(data["q"], lq, 10)
+    np.testing.assert_array_equal(i, data["gt_i"])

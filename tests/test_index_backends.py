@@ -1,0 +1,125 @@
+"""Backend contract tests: every registered index returns correct filtered
+top-k (flat exactly; ivf/graph to a recall floor), plus graph-specific
+behaviors (ef scaling, pre vs post strategies)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (LabelWorkloadConfig, encode_many, generate_label_sets,
+                        generate_query_label_sets, masks_to_int32_words,
+                        brute_force_filtered, recall_at_k)
+from repro.index import INDEX_REGISTRY, FlatIndex, GraphIndex, IVFIndex
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(42)
+    N, D, Q = 900, 24, 16
+    x = rng.standard_normal((N, D)).astype(np.float32)
+    ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=8, seed=1))
+    lx = masks_to_int32_words(encode_many(ls))
+    q = rng.standard_normal((Q, D)).astype(np.float32)
+    qls = generate_query_label_sets(ls, Q, seed=2)
+    lq = masks_to_int32_words(encode_many(qls))
+    gt_d, gt_i = brute_force_filtered(x, ls, q, qls, 10)
+    return dict(x=x, ls=ls, lx=lx, q=q, qls=qls, lq=lq, gt_d=gt_d, gt_i=gt_i,
+                N=N)
+
+
+def test_registry_contains_all_backends():
+    assert {"flat", "ivf", "graph"} <= set(INDEX_REGISTRY)
+
+
+def test_flat_exact(data):
+    idx = FlatIndex(data["x"], data["lx"])
+    d, i = idx.search(data["q"], data["lq"], 10)
+    np.testing.assert_array_equal(i, data["gt_i"])
+    finite = np.isfinite(data["gt_d"])
+    np.testing.assert_allclose(d[finite], data["gt_d"][finite], rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_ivf_recall_floor(data):
+    idx = IVFIndex(data["x"], data["lx"], nprobe=16)
+    d, i = idx.search(data["q"], data["lq"], 10)
+    assert recall_at_k(i, data["gt_i"], data["N"]) > 0.7
+
+
+def test_ivf_full_probe_is_exact(data):
+    idx = IVFIndex(data["x"], data["lx"], n_clusters=4, nprobe=4)
+    d, i = idx.search(data["q"], data["lq"], 10)
+    assert recall_at_k(i, data["gt_i"], data["N"]) == pytest.approx(1.0)
+
+
+def test_graph_recall_and_ef_scaling(data):
+    idx = GraphIndex(data["x"], data["lx"], M=12)
+    recalls = []
+    for ef in (16, 64, 160):
+        d, i = idx.search(data["q"], data["lq"], 10, ef=ef)
+        recalls.append(recall_at_k(i, data["gt_i"], data["N"]))
+    assert recalls[-1] >= recalls[0] - 1e-9      # more beam, no worse
+    assert recalls[-1] > 0.9
+
+
+def test_graph_pre_vs_post(data):
+    """PreFiltering must never beat PostFiltering on the same graph —
+    the paper's core observation about the two strategies."""
+    idx = GraphIndex(data["x"], data["lx"], M=12, ef_search=64)
+    _, i_post = idx.search(data["q"], data["lq"], 10, strategy="post")
+    _, i_pre = idx.search(data["q"], data["lq"], 10, strategy="pre")
+    r_post = recall_at_k(i_post, data["gt_i"], data["N"])
+    r_pre = recall_at_k(i_pre, data["gt_i"], data["N"])
+    assert r_post >= r_pre - 0.02
+    assert r_post > 0.8
+
+
+def test_graph_results_all_pass_filter(data):
+    idx = GraphIndex(data["x"], data["lx"], M=12)
+    _, ids = idx.search(data["q"], data["lq"], 10)
+    lx64 = data["lx"].astype(np.int64)
+    lq64 = data["lq"].astype(np.int64)
+    for qi in range(ids.shape[0]):
+        for v in ids[qi]:
+            if v >= data["N"]:
+                continue
+            assert np.all((lq64[qi] & lx64[v]) == lq64[qi])
+
+
+def test_graph_degree_bound(data):
+    """Paper §3.2 Remark: node degree bounded by M ⇒ space ∝ #vectors."""
+    idx = GraphIndex(data["x"], data["lx"], M=12)
+    assert idx.adjacency.shape == (data["N"], 12)
+
+
+def test_graph_hop_counter_monotone_in_k(data):
+    """Lemma 3.2: accumulating more passing results costs more hops."""
+    idx = GraphIndex(data["x"], data["lx"], M=12)
+    idx.search(data["q"], data["lq"], 1, ef=64)
+    h1 = idx.last_stats.hops.mean()
+    idx.search(data["q"], data["lq"], 10, ef=64)
+    h10 = idx.last_stats.hops.mean()
+    assert h10 >= h1
+
+
+def test_empty_query_label_set_unfiltered(data):
+    """L_q = ∅ must behave as plain AKNN on every backend."""
+    lq0 = masks_to_int32_words(encode_many([()] * data["q"].shape[0]))
+    gt_d, gt_i = brute_force_filtered(data["x"], data["ls"], data["q"],
+                                      [()] * data["q"].shape[0], 10)
+    flat = FlatIndex(data["x"], data["lx"])
+    _, i = flat.search(data["q"], lq0, 10)
+    np.testing.assert_array_equal(i, gt_i)
+
+
+def test_impossible_label_returns_empty(data):
+    """A label no entry has ⇒ all slots empty (id == N), dist == inf."""
+    qls = [(7, 6, 5, 4, 3, 2, 1, 0)] * 4   # full universe — likely nobody
+    has_all = [ls for ls in data["ls"] if set(range(8)) <= set(ls)]
+    if has_all:
+        pytest.skip("dataset actually contains the full label set")
+    lq = masks_to_int32_words(encode_many(qls))
+    flat = FlatIndex(data["x"], data["lx"])
+    d, i = flat.search(data["q"][:4], lq, 5)
+    assert np.all(i == data["N"])
+    assert np.all(np.isinf(d))

@@ -1,0 +1,124 @@
+"""Per-kernel allclose tests: Pallas (interpret mode on CPU) vs ref.py oracle.
+
+Sweeps shapes/dtypes per the deliverable contract.  Index agreement is
+checked *semantically* (the oracle distance at the kernel's index must match
+the oracle's distance) so float-associativity tie flips can't cause flakes.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.labels import LabelWorkloadConfig, encode_many, generate_label_sets
+from repro.kernels import ops, ref
+
+
+def make_case(n, d, q, num_labels=8, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(dtype)
+    qv = rng.standard_normal((q, d)).astype(dtype)
+    lsets = generate_label_sets(n, LabelWorkloadConfig(num_labels=num_labels, seed=seed))
+    lx = ops.prepare_label_words(encode_many(lsets))
+    # query label sets: subsets of random base rows -> non-trivial selectivity
+    qsets = [lsets[rng.integers(n)][: rng.integers(0, 3)] for _ in range(q)]
+    lq = ops.prepare_label_words(encode_many(qsets))
+    return jnp.asarray(qv), jnp.asarray(x), jnp.asarray(lq), jnp.asarray(lx)
+
+
+SHAPES = [
+    (64, 16, 3),      # tiny, ragged everything
+    (200, 64, 8),     # non-multiple N
+    (512, 128, 8),    # exact blocks
+    (1000, 96, 5),    # ragged N and D
+    (1537, 200, 9),   # prime-ish N, ragged Q
+]
+
+
+@pytest.mark.parametrize("n,d,q", SHAPES)
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_masked_distance_matches_ref(n, d, q, metric):
+    qv, x, lq, lx = make_case(n, d, q, seed=n + d)
+    got = ops.masked_distance(qv, x, lq, lx, metric=metric, block_q=8, block_n=256)
+    want = ref.masked_distance(qv, x, lq, lx, metric)
+    finite = np.isfinite(np.asarray(want))
+    assert np.array_equal(np.isfinite(np.asarray(got)), finite)
+    np.testing.assert_allclose(np.asarray(got)[finite], np.asarray(want)[finite],
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d,q", SHAPES)
+@pytest.mark.parametrize("k", [1, 10, 100])
+@pytest.mark.parametrize("metric", ["l2"])
+def test_filtered_topk_matches_ref(n, d, q, k, metric):
+    qv, x, lq, lx = make_case(n, d, q, seed=7 * n + k)
+    gv, gi = ops.filtered_topk(qv, x, lq, lx, k=k, metric=metric,
+                               block_q=8, block_n=256)
+    wv, wi = ref.filtered_topk(qv, x, lq, lx, k, metric)
+    gv, gi = np.asarray(gv), np.asarray(gi)
+    wv, wi = np.asarray(wv), np.asarray(wi)
+    finite = np.isfinite(wv)
+    assert np.array_equal(np.isfinite(gv), finite)
+    np.testing.assert_allclose(gv[finite], wv[finite], rtol=1e-5, atol=1e-4)
+    # semantic index check: oracle distance at kernel index == oracle value
+    dfull = np.asarray(ref.masked_distance(qv, x, lq, lx, metric))
+    for qi in range(gv.shape[0]):
+        for j in range(k):
+            if finite[qi, j]:
+                np.testing.assert_allclose(dfull[qi, gi[qi, j]], wv[qi, j],
+                                           rtol=1e-5, atol=1e-4)
+            else:
+                assert gi[qi, j] == n  # sentinel
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_filtered_topk_ip_and_dtypes(metric):
+    for dtype in (np.float32, np.float16):
+        qv, x, lq, lx = make_case(300, 32, 4, seed=11, dtype=dtype)
+        gv, gi = ops.filtered_topk(qv, x, lq, lx, k=5, metric=metric, block_n=128)
+        wv, wi = ref.filtered_topk(qv, x, lq, lx, 5, metric)
+        tol = 1e-2 if dtype == np.float16 else 1e-4
+        finite = np.isfinite(np.asarray(wv))
+        np.testing.assert_allclose(np.asarray(gv)[finite], np.asarray(wv)[finite],
+                                   rtol=tol, atol=tol)
+
+
+def test_filtered_topk_empty_filter():
+    """A query label no db row has -> all sentinels."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((100, 16)).astype(np.float32))
+    qv = jnp.asarray(rng.standard_normal((2, 16)).astype(np.float32))
+    lx = jnp.asarray(np.zeros((100, ops.LABEL_WORDS), np.int32))
+    lq = jnp.asarray(np.full((2, ops.LABEL_WORDS), 0, np.int32).copy())
+    lq = lq.at[:, 0].set(1 << 5)
+    gv, gi = ops.filtered_topk(qv, x, lq, lx, k=3)
+    assert np.all(np.isinf(np.asarray(gv)))
+    assert np.all(np.asarray(gi) == 100)
+
+
+def test_topk_no_filter_equals_lax_topk():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((777, 24)).astype(np.float32))
+    qv = jnp.asarray(rng.standard_normal((3, 24)).astype(np.float32))
+    lz = jnp.zeros((777, ops.LABEL_WORDS), jnp.int32)
+    lqz = jnp.zeros((3, ops.LABEL_WORDS), jnp.int32)
+    gv, gi = ops.filtered_topk(qv, x, lqz, lz, k=10, block_n=128)
+    d = np.asarray(ref.distances(qv, x))
+    order = np.argsort(d, axis=1)[:, :10]
+    np.testing.assert_allclose(np.asarray(gv),
+                               np.take_along_axis(d, order, axis=1),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("b", [1, 7, 64])
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_gather_distance_matches_ref(b, metric):
+    rng = np.random.default_rng(b)
+    x = jnp.asarray(rng.standard_normal((500, 48)).astype(np.float32))
+    qr = jnp.asarray(rng.standard_normal(48).astype(np.float32))
+    ids = rng.integers(0, 500, size=b).astype(np.int32)
+    ids[0] = -1 if b > 1 else ids[0]  # padding case
+    got = ops.gather_distance(qr, x, jnp.asarray(ids), metric=metric)
+    want = ref.gather_distance(qr, x, jnp.asarray(ids), metric)
+    finite = np.isfinite(np.asarray(want))
+    assert np.array_equal(np.isfinite(np.asarray(got)), finite)
+    np.testing.assert_allclose(np.asarray(got)[finite], np.asarray(want)[finite],
+                               rtol=1e-5, atol=1e-4)

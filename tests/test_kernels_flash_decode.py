@@ -1,0 +1,54 @@
+"""flash_decode kernel vs ref oracle: shape/dtype sweep in interpret mode
+(assignment rule: per-kernel sweep + allclose vs the pure-jnp oracle)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def make_case(B, S, KH, G, Dh, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    H = KH * G
+    q = jnp.asarray(rng.standard_normal((B, H, Dh)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, KH, Dh)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, KH, Dh)), dtype)
+    lengths = jnp.asarray(rng.integers(1, S + 1, size=B), jnp.int32)
+    return q, k, v, lengths
+
+
+@pytest.mark.parametrize("B,S,KH,G,Dh", [
+    (2, 256, 2, 4, 64),        # GQA
+    (1, 512, 1, 8, 128),       # MQA, aligned dims
+    (3, 384, 4, 1, 32),        # MHA, non-pow2 seq (padding path)
+    (2, 128, 8, 2, 16),        # many kv heads
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_matches_ref(B, S, KH, G, Dh, dtype):
+    q, k, v, lengths = make_case(B, S, KH, G, Dh, dtype)
+    got = ops.flash_decode(q, k, v, lengths, block_s=128)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_decode_respects_lengths():
+    """Slots past `length` must not contribute: poisoning them is a no-op."""
+    q, k, v, lengths = make_case(2, 256, 2, 2, 32, jnp.float32, seed=3)
+    lengths = jnp.asarray([100, 17], jnp.int32)
+    base = ops.flash_decode(q, k, v, lengths, block_s=128)
+    k2 = k.at[0, 100:].set(1e4).at[1, 17:].set(-1e4)
+    v2 = v.at[0, 100:].set(1e4).at[1, 17:].set(-1e4)
+    poisoned = ops.flash_decode(q, k2, v2, lengths, block_s=128)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
+                               atol=1e-5)
+
+
+def test_flash_decode_single_block():
+    q, k, v, lengths = make_case(1, 128, 2, 2, 64, jnp.float32, seed=5)
+    got = ops.flash_decode(q, k, v, lengths, block_s=128)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)

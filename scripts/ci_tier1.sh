@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP.md): the full test suite must be green.
+# Usage: scripts/ci_tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -q "$@"

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from . import sharding as shd
+from .compat import tree_flatten_with_path
 from .models import encdec as ed
 from .models import hybrid as hy
 from .models import transformer as tf
@@ -210,7 +211,7 @@ def count_active_params(arch: ArchSpec) -> int:
     """MoE-aware active parameter count (per-token), for 6·N_active·D."""
     cfg = arch.cfg
     specs = param_specs(arch)
-    flat = jax.tree.flatten_with_path(specs, is_leaf=is_spec)[0]
+    flat = tree_flatten_with_path(specs, is_leaf=is_spec)[0]
     total = 0
     for path, s in flat:
         n = math.prod(s.shape)

@@ -44,9 +44,11 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from .compat import tree_flatten_with_path
+
 
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    flat = tree_flatten_with_path(tree)[0]
     out = []
     for kp, leaf in flat:
         name = ".".join(

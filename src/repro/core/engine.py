@@ -27,7 +27,8 @@ from .eis import EISResult, greedy_eis
 from .elastic import elastic_factor, min_elastic_factor
 from .estimator import sampled_group_table
 from .groups import EMPTY_KEY, GroupTable, observed_query_keys
-from .labels import encode_label_set, encode_many, key_contains, mask_key, masks_to_int32_words
+from .labels import (encode_label_set, encode_many, key_contains,
+                     key_to_mask, mask_key, masks_to_int32_words)
 from .sis import SISResult, sis
 
 
@@ -46,6 +47,11 @@ class EngineStats:
 
 class LabelHybridEngine:
     """Build-once, search-many ELI engine over a pluggable index backend."""
+
+    # bound on memoized fallback routes for query keys outside the selection
+    # workload (a long-lived server fed diverse label combinations must not
+    # grow host memory without limit; overflow keys are re-routed per batch)
+    _ROUTE_CACHE_MAX = 65536
 
     def __init__(self, vectors: np.ndarray, label_sets: Sequence[tuple[int, ...]],
                  table: GroupTable, selection: EISResult,
@@ -75,6 +81,17 @@ class LabelHybridEngine:
                 **backend_params)
         self._build_seconds = time.perf_counter() - t0
         self._select_seconds = select_seconds
+
+        # Routing table for the batched executor: the selected keys (in dict
+        # order — route()'s tie-break order) as a dense uint64 mask matrix,
+        # enabling one vectorized superset-matching pass per batch instead of
+        # a per-query Python loop.  _route_cache memoizes fallback routing of
+        # query keys outside the selection workload.
+        self._skeys = list(selection.selected)   # always holds EMPTY_KEY
+        self._skey_masks = np.stack([key_to_mask(k) for k in self._skeys])
+        self._skey_sizes = np.array(
+            [selection.selected[k] for k in self._skeys], dtype=np.int64)
+        self._route_cache: dict[tuple[int, ...], tuple[int, ...]] = {}
 
     # -- construction --------------------------------------------------------
     @staticmethod
@@ -130,12 +147,126 @@ class LabelHybridEngine:
                 best, best_size = skey, size
         return best
 
+    def route_many(self, query_label_sets: Sequence[tuple[int, ...]],
+                   qmasks: np.ndarray | None = None) -> list[tuple[int, ...]]:
+        """Vectorized :meth:`route` for a query batch.
+
+        Assignment hits resolve through the selection table; the unseen
+        remainder is deduplicated and routed in ONE superset-matching pass
+        over the selected-key mask matrix (``(qmask & skey) == skey`` per
+        uint64 word), picking the smallest containing index — identical to
+        route()'s strict-< scan, argmin's first-minimum tie-break matching
+        dict iteration order.  Results are memoized per key.
+
+        ``qmasks``: optional pre-encoded ``encode_many(query_label_sets)``
+        (callers that already encoded the batch skip a second pass).
+        """
+        if qmasks is None:
+            qmasks = encode_many(query_label_sets)
+        qkeys = [mask_key(m) for m in qmasks]
+        routed: list[tuple[int, ...] | None] = [None] * len(qkeys)
+        unseen: dict[tuple[int, ...], list[int]] = {}
+        for qi, qkey in enumerate(qkeys):
+            hit = self.selection.assignment.get(qkey)
+            if hit is None:
+                hit = self._route_cache.get(qkey)
+            if hit is not None:
+                routed[qi] = hit
+            else:
+                unseen.setdefault(qkey, []).append(qi)
+        if unseen:
+            um = np.stack([key_to_mask(kk) for kk in unseen])     # [U, W]
+            sm = self._skey_masks[None, :, :]                     # [1, M, W]
+            cand = np.all((um[:, None, :] & sm) == sm, axis=2)    # [U, M]
+            sizes = np.where(cand, self._skey_sizes[None, :],
+                             np.iinfo(np.int64).max)
+            best = np.argmin(sizes, axis=1)
+            best_size = sizes[np.arange(len(unseen)), best]
+            top_size = self.rows[EMPTY_KEY].size
+            for u, (qkey, qids) in enumerate(unseen.items()):
+                chosen = (self._skeys[int(best[u])]
+                          if best_size[u] < top_size else EMPTY_KEY)
+                if len(self._route_cache) < self._ROUTE_CACHE_MAX:
+                    self._route_cache[qkey] = chosen
+                for qi in qids:
+                    routed[qi] = chosen
+        return routed
+
     # -- search ----------------------------------------------------------------
     def search(self, queries: np.ndarray,
                query_label_sets: Sequence[tuple[int, ...]], k: int,
                **search_params) -> tuple[np.ndarray, np.ndarray]:
         """Filtered top-k for a query batch.  Returns (dists, GLOBAL ids);
-        id == N ⇒ empty slot."""
+        id == N ⇒ empty slot.
+
+        Delegates to the batched executor (:meth:`search_batched`) — the
+        serving hot path; :meth:`search_looped` keeps the per-key reference
+        loop for parity testing.
+        """
+        return self.search_batched(queries, query_label_sets, k,
+                                   **search_params)
+
+    def search_batched(self, queries: np.ndarray,
+                       query_label_sets: Sequence[tuple[int, ...]], k: int,
+                       *, min_bucket: int = 1,
+                       **search_params) -> tuple[np.ndarray, np.ndarray]:
+        """Batched multi-index executor.
+
+        1. routes the whole batch in one vectorized pass (route_many),
+        2. groups queries per selected index,
+        3. pads each group to a power-of-two bucket (≥ ``min_bucket``) and
+           dispatches through the backend's jit-cached per-(index, k, bucket)
+           search fn, so repeated serving batches hit the XLA executable
+           cache instead of retracing per group size.
+
+        Bit-identical to :meth:`search_looped`: each query row's filtered
+        top-k is independent of its batch neighbors, and pad rows are sliced
+        off before the id mapping.  Backends without ``search_padded`` fall
+        back to their plain ``search`` per group.
+        """
+        queries = np.asarray(queries, dtype=np.float32)
+        Q = queries.shape[0]
+        n = len(self.label_sets)
+        out_d = np.full((Q, k), np.inf, dtype=np.float32)
+        out_i = np.full((Q, k), n, dtype=np.int32)
+        if Q == 0:
+            return out_d, out_i
+
+        qmasks = encode_many(query_label_sets)
+        qwords = masks_to_int32_words(qmasks)
+        by_key: dict[tuple[int, ...], list[int]] = {}
+        for qi, key in enumerate(self.route_many(query_label_sets, qmasks)):
+            by_key.setdefault(key, []).append(qi)
+
+        for key, qids in by_key.items():
+            index = self.indexes[key]
+            rows = self.rows[key]
+            g = len(qids)
+            searcher = getattr(index, "search_padded", None)
+            if searcher is None:
+                d, li = index.search(queries[qids], qwords[qids], k,
+                                     **search_params)
+                d, li = np.asarray(d), np.asarray(li)
+            else:
+                bucket = 1 << (max(g, min_bucket) - 1).bit_length()
+                qp = np.zeros((bucket, queries.shape[1]), dtype=np.float32)
+                qp[:g] = queries[qids]
+                lp = np.zeros((bucket, qwords.shape[1]), dtype=np.int32)
+                lp[:g] = qwords[qids]
+                d, li = searcher(qp, lp, k, **search_params)
+                d, li = np.asarray(d)[:g], np.asarray(li)[:g]
+            empty = li >= rows.size
+            gi = np.where(empty, n, rows[np.clip(li, 0, rows.size - 1)])
+            out_d[qids] = d
+            out_i[qids] = gi.astype(np.int32)
+        return out_d, out_i
+
+    def search_looped(self, queries: np.ndarray,
+                      query_label_sets: Sequence[tuple[int, ...]], k: int,
+                      **search_params) -> tuple[np.ndarray, np.ndarray]:
+        """Reference executor: per-key Python loop, one un-bucketed backend
+        call per selected index (the pre-batching code path, kept as the
+        parity oracle for :meth:`search_batched`)."""
         queries = np.asarray(queries, dtype=np.float32)
         Q = queries.shape[0]
         n = len(self.label_sets)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..kernels import ref
 
 
@@ -61,7 +62,7 @@ def sharded_filtered_topk(mesh: Mesh, *, axis: str = "data", k: int = 10,
         neg, pos = jax.lax.top_k(-av, k)
         return -neg, jnp.take_along_axis(ai, pos, axis=1)
 
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(), P(axis), P(), P(axis)),
         out_specs=(P(), P()),

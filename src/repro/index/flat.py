@@ -30,6 +30,10 @@ class FlatIndex:
         self.kernel_backend = kernel_backend
         self.block_n = block_n
         self.num_vectors, self.dim = vectors.shape
+        # per-(k, bucket) dispatch table for the batched executor; the
+        # compiled-executable cache itself lives in the module-level jit
+        # (keyed on shapes/static args), shared across all indexes
+        self._bucket_fns: dict[tuple[int, int], object] = {}
 
     @classmethod
     def build(cls, vectors, label_words, metric: str = "l2", **params):
@@ -49,6 +53,40 @@ class FlatIndex:
                                            backend=self.kernel_backend)
         return np.asarray(vals), np.asarray(idxs)
 
+    def search_padded(self, queries: np.ndarray,
+                      query_label_words: np.ndarray,
+                      k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Bucket-shaped search for the batched executor (core.engine).
+
+        ``queries`` arrives padded to a power-of-two bucket; the caller
+        slices the pad rows off (each row's top-k is independent, so padding
+        cannot perturb real rows).  Dispatches through a per-``(k, bucket)``
+        jit-cached function: repeated serving batches that land in the same
+        bucket reuse the compiled XLA executable instead of retracing.
+        Returns device arrays [bucket, k].
+        """
+        bucket = queries.shape[0]
+        fn = self._bucket_fns.get((k, bucket))
+        if fn is None:
+            if self.kernel_backend == "ref":
+                # dispatch through the module-level jit so indexes with
+                # coinciding (bucket, rows, dim) shapes share one compiled
+                # executable instead of retracing per index
+                def fn(q, lq, _k=k):
+                    return _padded_topk_jit(q, self.vectors, lq,
+                                            self.label_words, _k, self.metric)
+            else:
+                def fn(q, lq, _k=k):
+                    return ops.filtered_topk(q, self.vectors, lq,
+                                             self.label_words, k=_k,
+                                             metric=self.metric,
+                                             block_n=self.block_n,
+                                             backend=self.kernel_backend)
+            self._bucket_fns[(k, bucket)] = fn
+        q = jnp.asarray(queries, dtype=jnp.float32)
+        lq = jnp.asarray(query_label_words, dtype=jnp.int32)
+        return fn(q, lq)
+
     @property
     def nbytes(self) -> int:
         return self.vectors.nbytes + self.label_words.nbytes
@@ -59,3 +97,23 @@ def _ref_topk(q, x, lq, lx, k: int, metric: str):
 
 
 _ref_topk_jit = jax.jit(_ref_topk, static_argnums=(4, 5))
+
+
+def _padded_filtered_topk(q, x, lq, lx, k: int, metric: str):
+    """`ref.filtered_topk` semantics via ``lax.top_k`` — the executor's hot
+    path.  Distances are computed by the same oracle code, and XLA's TopK
+    breaks value ties toward the lower index exactly like the oracle's
+    stable argsort, so the (vals, idxs) output is bit-identical while the
+    selection drops from an O(n log n) full sort to top-k."""
+    d = ref.masked_distance(q, x, lq, lx, metric)
+    n = x.shape[0]
+    if k > n:  # fewer rows than requested: pad the distance matrix
+        d = jnp.pad(d, ((0, 0), (0, k - n)), constant_values=jnp.inf)
+    neg, idxs = jax.lax.top_k(-d, k)
+    vals = -neg
+    idxs = jnp.where(jnp.isinf(vals), n, idxs)
+    vals = jnp.where(jnp.isinf(vals), jnp.float32(jnp.inf), vals)
+    return vals, idxs.astype(jnp.int32)
+
+
+_padded_topk_jit = jax.jit(_padded_filtered_topk, static_argnums=(4, 5))

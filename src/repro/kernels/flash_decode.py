@@ -40,6 +40,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -139,7 +141,7 @@ def flash_decode_pallas(q, k_cache, v_cache, lengths, *, block_s: int = 512,
             pltpu.VMEM((H, 1), jnp.float32),     # l (running denom)
             pltpu.VMEM((H, Dh), jnp.float32),    # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, q, k_cache, v_cache)

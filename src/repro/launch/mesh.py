@@ -15,7 +15,8 @@ the slower inter-pod links and carries only gradient all-reduce traffic
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -30,13 +31,11 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"need {n} devices, have {len(devices)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             f"(repro.launch.dryrun does this for you)")
-    return jax.make_mesh(shape, axes, devices=devices,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes, devices=devices)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = data * model
-    return jax.make_mesh((data, model), ("data", "model"),
-                         devices=jax.devices()[:n],
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((data, model), ("data", "model"),
+                     devices=jax.devices()[:n])

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import sharding as shd
+from ..compat import shard_map
 from .common import ParamSpec, dense_spec, rope, softcap
 
 NEG_INF = -1e30
@@ -213,7 +214,7 @@ def _attend_ctx_parallel(q, k, v, q_pos, k_pos, cfg: AttentionConfig,
         kpf = jax.lax.all_gather(kpl, axis, axis=1, tiled=True)
         return _attend_tiles(ql, kf, vf, qpl[0], kpf[0], cfg)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(bspec, axis), P(bspec, axis), P(bspec, axis),
                   P(bspec, axis), P(bspec, axis)),

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import sharding as shd
+from ..compat import shard_map
 
 PARAM_DTYPE = jnp.bfloat16
 COMPUTE_DTYPE = jnp.bfloat16
@@ -166,7 +167,7 @@ def embed_lookup(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
                 part = jnp.where(ok[..., None], part, 0).astype(tbl.dtype)
                 return jax.lax.psum(part, ax)
 
-            return jax.shard_map(
+            return shard_map(
                 local, mesh=mesh,
                 in_specs=(P(ax, None), P(bspec, None)),
                 out_specs=P(bspec, None, None),

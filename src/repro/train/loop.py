@@ -39,6 +39,7 @@ import numpy as np
 from .. import arch as A
 from .. import sharding as shd
 from ..checkpoint import Checkpointer
+from ..compat import tree_flatten_with_path
 from ..data import TokenStream
 from ..models.common import init_params, param_structs
 from ..optim import Optimizer
@@ -184,7 +185,7 @@ class Trainer:
         h = hashlib.sha256()
         for _, leaf in sorted(
                 ((".".join(map(str, p)), l) for p, l in
-                 jax.tree_util.tree_flatten_with_path(
+                 tree_flatten_with_path(
                      {"p": self.params, "o": self.opt_state})[0]),
                 key=lambda kv: kv[0]):
             h.update(np.ascontiguousarray(jax.device_get(leaf)).tobytes())

@@ -1,0 +1,57 @@
+"""Grep-based enforcement of the repro.compat policy (ROADMAP.md): every
+version-drifting JAX API is spelled exactly once, inside src/repro/compat.py.
+Any other module must import the shim, never the raw API."""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+SHIM = REPO / "src" / "repro" / "compat.py"
+
+# one entry per drifting API: (human name, compiled pattern)
+FORBIDDEN = [
+    ("jax shard_map spelling",
+     re.compile(r"jax\s*\.\s*shard_map")),
+    ("experimental shard_map import",
+     re.compile(r"jax\.experimental(\.|\s+import\s+)shard_map")),
+    ("jax.tree flatten_with_path spelling",
+     re.compile(r"jax\s*\.\s*tree\s*\.\s*flatten_with_path")),
+    ("jax.tree_util flatten_with_path spelling",
+     re.compile(r"jax\s*\.\s*tree_util\s*\.\s*tree_flatten_with_path")),
+    ("Pallas TPU CompilerParams spelling",
+     re.compile(r"\bT?P?U?CompilerParams\b")),
+    ("jax.sharding AxisType spelling",
+     re.compile(r"jax\.sharding(\.|\s+import\s+.*\b)AxisType")),
+    ("make_mesh axis_types kwarg",
+     re.compile(r"axis_types\s*=")),
+]
+
+
+def _python_files():
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        yield from sorted((REPO / sub).rglob("*.py"))
+
+
+def test_drifting_jax_apis_only_in_compat():
+    offenders = []
+    for path in _python_files():
+        if path in (SHIM, Path(__file__).resolve()):
+            continue
+        for lineno, line in enumerate(
+                path.read_text(encoding="utf-8").splitlines(), 1):
+            for name, pat in FORBIDDEN:
+                if pat.search(line):
+                    offenders.append(
+                        f"{path.relative_to(REPO)}:{lineno} [{name}] "
+                        f"{line.strip()}")
+    assert not offenders, (
+        "version-drifting JAX APIs must go through repro.compat "
+        "(see ROADMAP.md policy):\n" + "\n".join(offenders))
+
+
+def test_shim_exports_every_covered_api():
+    from repro import compat
+    for sym in ("shard_map", "tree_flatten_with_path",
+                "tpu_compiler_params", "make_mesh"):
+        assert callable(getattr(compat, sym)), sym

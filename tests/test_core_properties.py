@@ -1,5 +1,9 @@
 """Property-based tests (hypothesis) for the ELI core invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is an optional test "
+                    "dependency (see requirements-test.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

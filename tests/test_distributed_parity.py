@@ -18,18 +18,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 
 from repro import arch as A
+from repro import compat
 from repro import sharding as shd
 from repro.configs import reduced_arch
 from repro.models.common import init_params
 from repro.optim import Optimizer
 
 results = {}
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     devices=jax.devices()[:8],
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = compat.make_mesh((2, 4), ("data", "model"),
+                        devices=jax.devices()[:8])
 
 for arch_id in ("gemma2_9b", "starcoder2_7b", "phi35_moe_42b"):
     spec = reduced_arch(arch_id)
@@ -125,6 +124,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.optim import compressed_psum
 
 mesh = jax.make_mesh((4,), ("pod",), devices=jax.devices()[:4])
@@ -133,8 +133,8 @@ x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 64)), jnp.float32)
 def f(x):
     return compressed_psum({"g": x}, "pod")["g"]
 
-y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                          out_specs=P("pod")))(x)
+y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
+                      out_specs=P("pod")))(x)
 want = np.broadcast_to(np.asarray(x).mean(0, keepdims=True), x.shape)
 rel = float(np.linalg.norm(np.asarray(y) - want) / np.linalg.norm(want))
 print("RESULT" + json.dumps({"rel": rel}))

@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map, tree_flatten_with_path
 from repro.models.common import ParamSpec
 from repro.optim import (Optimizer, OptimizerConfig, adafactor_state_specs,
                          adamw_state_specs, compressed_psum, global_norm,
@@ -85,7 +86,7 @@ def test_state_specs_match_init_structure():
         live = opt.init(params)
         spec = spec_fn(specs)
         live_paths = {tuple(str(p) for p, _ in
-                      jax.tree_util.tree_flatten_with_path(live)[0][0:]),}
+                      tree_flatten_with_path(live)[0][0:]),}
         assert (jax.tree.structure(jax.tree.map(lambda s: 0, spec,
                                                 is_leaf=lambda x: isinstance(x, ParamSpec)))
                 == jax.tree.structure(jax.tree.map(lambda x: 0, live))), kind
@@ -125,8 +126,8 @@ def test_compressed_psum_matches_mean():
     def f(x):
         return compressed_psum({"g": x}, "pod")["g"]
 
-    y = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                              out_specs=P("pod")))(x)
+    y = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
+                          out_specs=P("pod")))(x)
     want = np.broadcast_to(np.asarray(x).mean(0, keepdims=True), x.shape)
     got = np.asarray(y)
     rel = np.linalg.norm(got - want) / np.linalg.norm(want)

@@ -3,9 +3,12 @@ legality fixup must always produce jit-acceptable PartitionSpecs."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import AxisType
 
+pytest.importorskip("hypothesis", reason="hypothesis is an optional test "
+                    "dependency (see requirements-test.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro import compat
 from repro import sharding as shd
 
 
@@ -13,9 +16,8 @@ from repro import sharding as shd
 def mesh():
     # 1 real device: mesh (1, 1) — axis membership logic is what we test;
     # divisibility math is exercised via a fake mesh-shape table below.
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         devices=jax.devices()[:1],
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"),
+                            devices=jax.devices()[:1])
 
 
 class FakeMesh:

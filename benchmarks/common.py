@@ -7,7 +7,9 @@ path is exercised by the dry-run + roofline instead (EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 
@@ -40,6 +42,46 @@ def measure(searcher, qv, qls, k, gt_i, n, repeats=3):
         d, i = searcher.search(qv, qls, k)
     dt = (time.perf_counter() - t0) / repeats
     return (len(qls) / dt, recall_at_k(i, gt_i, n), dt / len(qls) * 1e6)
+
+
+def measure_modes(eng, qv, qls, k, gt_i, n, repeats=3):
+    """Cold/warm QPS for both executors of a LabelHybridEngine.
+
+    Cold = first call of that executor on this engine (routing-table
+    warmup plus tracing/compilation of every touched search program not
+    already in the process-wide XLA cache — batched runs first, so its
+    cold number is the true fresh-engine cost); warm = steady-state mean
+    over ``repeats`` — the serving number.  Returns a machine-readable
+    dict (see ``emit_json``).
+    """
+    out = {}
+    for mode in ("batched", "looped"):
+        fn = getattr(eng, f"search_{mode}")
+        t0 = time.perf_counter()
+        d, i = fn(qv, qls, k)
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            d, i = fn(qv, qls, k)
+        warm = (time.perf_counter() - t0) / repeats
+        out[mode] = {
+            "cold_s": cold, "warm_s": warm,
+            "qps_cold": len(qls) / cold, "qps_warm": len(qls) / warm,
+            "us_per_query_warm": warm / len(qls) * 1e6,
+            "recall": recall_at_k(i, gt_i, n),
+        }
+    out["speedup_warm"] = (out["looped"]["warm_s"]
+                           / max(out["batched"]["warm_s"], 1e-12))
+    return out
+
+
+def emit_json(payload: dict, name: str, out_dir: str | Path = "."):
+    """Write ``BENCH_<name>.json`` — the machine-readable perf artifact
+    (CI and later sessions diff these to track the perf trajectory)."""
+    path = Path(out_dir) / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", flush=True)
+    return path
 
 
 def emit(rows: list[dict], name: str):

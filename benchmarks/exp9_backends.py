@@ -1,31 +1,55 @@
 """Exp-9 (Table 1 "Index Flexibility" claim): the SAME ELI selection runs
-over all three index backends — flat (MXU scan), IVF (nprobe clusters),
-graph (Vamana beam search) — recall/QPS per backend at fixed c=0.2.
-The selection algorithm, routing, and sub-index membership are identical;
-only the physical index changes (paper §1: "not constrained by index type").
+over all four registered index backends — flat (MXU scan), IVF (nprobe
+clusters), graph (Vamana beam search), distributed (shard_map scan + top-k
+merge) — recall/QPS per backend at fixed c=0.2.  The selection algorithm,
+routing, and sub-index membership are identical; only the physical index
+changes (paper §1: "not constrained by index type").
+
+Every backend is measured through BOTH executors — the bucketed
+jit-cached ``search_batched`` hot path and the per-key ``search_looped``
+reference — cold (first call, tracing + compilation included) and warm
+(steady state).  The full grid lands in ``BENCH_exp9.json`` so the perf
+trajectory is machine-readable across sessions.
 """
-from repro.core.engine import LabelHybridEngine
+from repro.core import LabelHybridEngine
 
-from .common import emit, ground_truth, make_dataset, measure
+from .common import emit, emit_json, ground_truth, make_dataset, measure_modes
+
+BACKENDS = (
+    ("flat", {}),
+    ("ivf", {"n_clusters": 32, "nprobe": 8}),
+    ("graph", {"M": 12, "ef_search": 64}),
+    ("distributed", {}),
+)
 
 
-def run(n=4_000, k=10):
+def run(n=4_000, k=10, out_dir="."):
     x, ls, qv, qls = make_dataset(n=n, n_labels=12, q=80, seed=7)
     gt_d, gt_i = ground_truth(x, ls, qv, qls, k)
-    rows = []
-    for backend, params in (("flat", {}),
-                            ("ivf", {"n_clusters": 32, "nprobe": 8}),
-                            ("graph", {"M": 12, "ef_search": 64})):
+    rows, payload = [], {"n": n, "k": k, "q": len(qls), "backends": {}}
+    for backend, params in BACKENDS:
         eng = LabelHybridEngine.build(x, ls, mode="eis", c=0.2,
                                       backend=backend, **params)
-        qps, rec, us = measure(eng, qv, qls, k, gt_i, n)
+        modes = measure_modes(eng, qv, qls, k, gt_i, n)
         st = eng.stats()
-        rows.append({"name": f"exp9/{backend}", "us_per_call": f"{us:.1f}",
-                     "qps": f"{qps:.0f}", "recall": f"{rec:.4f}",
+        payload["backends"][backend] = {
+            **modes, "params": params, "n_indexes": st.n_selected,
+            "achieved_c": st.achieved_c, "build_seconds": st.build_seconds,
+            "nbytes": st.nbytes,
+        }
+        bat = modes["batched"]
+        rows.append({"name": f"exp9/{backend}",
+                     "us_per_call": f"{bat['us_per_query_warm']:.1f}",
+                     "qps_warm": f"{bat['qps_warm']:.0f}",
+                     "qps_cold": f"{bat['qps_cold']:.0f}",
+                     "qps_warm_looped": f"{modes['looped']['qps_warm']:.0f}",
+                     "speedup_vs_loop": f"{modes['speedup_warm']:.2f}",
+                     "recall": f"{bat['recall']:.4f}",
                      "n_indexes": st.n_selected,
                      "achieved_c": f"{st.achieved_c:.3f}"})
     # selection identity: same keys regardless of backend
     emit(rows, "exp9")
+    emit_json(payload, "exp9", out_dir)
     return rows
 
 

@@ -1,7 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verify (ROADMAP.md): the full test suite must be green.
 # Usage: scripts/ci_tier1.sh [extra pytest args]
+#
+# -p no:randomly  pins collection/execution order (the cross-backend
+#                 search_padded parity suite shares module-scoped engines;
+#                 stable ordering keeps its timings comparable run-to-run)
+# --durations=10  timing guard: slow backend traces (graph beam-search
+#                 compiles, 10k fixtures) stay visible in Actions logs
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q "$@"
+exec python -m pytest -q -p no:randomly --durations=10 "$@"

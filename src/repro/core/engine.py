@@ -17,12 +17,14 @@ the same max-elastic-factor rule, evaluated lazily.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Mapping, Sequence
 
 import numpy as np
 
-from ..index.base import get_index_builder
+from ..index.base import (fallback_search_padded, get_index_builder,
+                          pad_to_bucket)
 from .eis import EISResult, greedy_eis
 from .elastic import elastic_factor, min_elastic_factor
 from .estimator import sampled_group_table
@@ -219,10 +221,15 @@ class LabelHybridEngine:
            search fn, so repeated serving batches hit the XLA executable
            cache instead of retracing per group size.
 
-        Bit-identical to :meth:`search_looped`: each query row's filtered
-        top-k is independent of its batch neighbors, and pad rows are sliced
-        off before the id mapping.  Backends without ``search_padded`` fall
-        back to their plain ``search`` per group.
+        Every registered backend (flat / ivf / graph / distributed) ships a
+        native bucketed ``search_padded`` (see ``index.base`` for the
+        contract), so routed groups stay jit-cached end to end regardless
+        of index type — the paper's Table 1 "Index Flexibility" claim in
+        executable form.  Bit-identical to :meth:`search_looped`: each
+        query row's filtered top-k is independent of its batch neighbors,
+        and pad rows are sliced off before the id mapping.  Third-party
+        backends without ``search_padded`` go through the same pad-and-
+        slice path via :func:`index.base.fallback_search_padded`.
         """
         queries = np.asarray(queries, dtype=np.float32)
         Q = queries.shape[0]
@@ -241,20 +248,12 @@ class LabelHybridEngine:
         for key, qids in by_key.items():
             index = self.indexes[key]
             rows = self.rows[key]
-            g = len(qids)
             searcher = getattr(index, "search_padded", None)
-            if searcher is None:
-                d, li = index.search(queries[qids], qwords[qids], k,
-                                     **search_params)
-                d, li = np.asarray(d), np.asarray(li)
-            else:
-                bucket = 1 << (max(g, min_bucket) - 1).bit_length()
-                qp = np.zeros((bucket, queries.shape[1]), dtype=np.float32)
-                qp[:g] = queries[qids]
-                lp = np.zeros((bucket, qwords.shape[1]), dtype=np.int32)
-                lp[:g] = qwords[qids]
-                d, li = searcher(qp, lp, k, **search_params)
-                d, li = np.asarray(d)[:g], np.asarray(li)[:g]
+            if searcher is None:    # third-party backend outside the registry
+                searcher = functools.partial(fallback_search_padded, index)
+            d, li = pad_to_bucket(searcher, queries[qids], qwords[qids], k,
+                                  rows.size, min_bucket=min_bucket,
+                                  **search_params)
             empty = li >= rows.size
             gi = np.where(empty, n, rows[np.clip(li, 0, rows.size - 1)])
             out_d[qids] = d

@@ -1,14 +1,19 @@
 """Physical AKNN index backends (the paper's "modular index" layer).
 
 ELI is index-agnostic (paper Table 1): any backend implementing the
-``VectorIndex`` protocol (incremental filtered top-k) plugs into the
-selection engine.  Shipped backends:
+``VectorIndex`` protocol (incremental filtered top-k, plus the bucketed
+``search_padded`` contract documented in ``base`` — one traced program per
+(index, k, bucket)) plugs into the selection engine.  Shipped backends:
 
-  flat  — fused filtered scan (primary TPU backend; Pallas kernels)
-  ivf   — k-means inverted file + incremental probe expansion
-  graph — degree-bounded proximity graph, batched lax.while_loop beam search
+  flat        — fused filtered scan (primary TPU backend; Pallas kernels)
+  ivf         — k-means inverted file + incremental probe expansion
+  graph       — degree-bounded proximity graph, batched lax.while_loop
+                beam search
+  distributed — flat scan sharded over a device mesh (shard_map + top-k
+                merge collective)
 """
-from .base import INDEX_REGISTRY, VectorIndex, get_index_builder, register_index  # noqa: F401
+from .base import (INDEX_REGISTRY, VectorIndex, bucket_cache,  # noqa: F401
+                   fallback_search_padded, get_index_builder, register_index)
 from .flat import FlatIndex  # noqa: F401
 from .ivf import IVFIndex  # noqa: F401
 from .graph import GraphIndex, SearchStats, build_vamana  # noqa: F401

@@ -16,6 +16,34 @@ Contract:
     (dists [Q, k] f32 asc, ids [Q, k] int32 LOCAL row ids; id == n ⇒ empty
     slot).  Must keep searching (k+1 semantics) until k passing rows are
     accumulated or the index is exhausted — Lemma 3.2's cost model.
+  * ``search_padded(queries, query_label_words, k)`` — the batched
+    executor's hot path (``LabelHybridEngine.search_batched``).  Same
+    semantics as ``search`` with a **static-shape** calling convention:
+
+      - ``queries``/``query_label_words`` arrive padded to a power-of-two
+        *bucket* (the executor zero-pads each routed group and slices the
+        pad rows off afterwards — each row's filtered top-k is independent
+        of its batch neighbors, so padding cannot perturb real rows);
+      - the implementation must trace/compile **once per (index, k,
+        bucket)** and reuse the compiled executable for every later batch
+        that lands in the same bucket — no per-call retracing, no
+        data-dependent output shapes;
+      - incremental (k+1) continuation is preserved *inside* the traced
+        program (e.g. IVF expresses the probe-doubling waves of Lemma 3.2
+        as static wave boundaries; the graph backend runs its beam search
+        as a fixed-shape ``lax.while_loop``);
+      - returns device arrays [bucket, k]; empty slots carry
+        (dist == +inf, id == n) exactly like ``search``.
+
+    Per-instance dispatch tables MUST be keyed by (k, bucket) *within the
+    instance* (see :func:`bucket_cache`) so two indexes — or two engines
+    with different k living in one process — never cross-contaminate
+    compiled-function caches; the shared XLA executable cache underneath
+    is keyed on shapes + static arguments and is safe to share.
+
+    Backends registered without a native implementation get
+    :func:`fallback_search_padded` (correct, but re-dispatches through
+    plain ``search`` and inherits its tracing behavior).
   * ``num_vectors`` — the paper's cost measure (space ∝ #vectors, degree
     bounded by a constant for graphs).
 """
@@ -35,9 +63,61 @@ class VectorIndex(Protocol):
                k: int) -> tuple[np.ndarray, np.ndarray]:
         ...
 
+    def search_padded(self, queries: np.ndarray,
+                      query_label_words: np.ndarray,
+                      k: int) -> tuple[np.ndarray, np.ndarray]:
+        ...
+
     @property
     def nbytes(self) -> int:
         ...
+
+
+def bucket_cache(index) -> dict:
+    """The per-instance ``(k, bucket) -> callable`` dispatch table.
+
+    Living on the instance makes index identity part of the cache key by
+    construction — the bug class where two indexes (or two engines with
+    different k) share one keyed-only-on-bucket table cannot occur.
+    Created lazily so third-party ``VectorIndex`` implementations need no
+    cooperating ``__init__``.
+    """
+    cache = getattr(index, "_bucket_fns", None)
+    if cache is None:
+        cache = {}
+        index._bucket_fns = cache
+    return cache
+
+
+def pad_to_bucket(search_padded, queries, query_label_words, k, n,
+                  min_bucket: int = 1, **search_params):
+    """Dispatch a raw (un-bucketed) batch through ``search_padded`` under
+    the executor's power-of-two bucket convention: zero-pad to the bucket
+    (≥ ``min_bucket``), search, slice the pad rows off.  The single home
+    of the convention — the batched executor and the backends' plain
+    ``search`` methods both route through it, so direct callers with
+    jittery batch sizes reuse the same traced (index, k, bucket) programs
+    instead of compiling one executable per distinct batch size."""
+    g = queries.shape[0]
+    if g == 0:
+        return (np.full((0, k), np.inf, np.float32),
+                np.full((0, k), n, np.int32))
+    bucket = 1 << (max(g, min_bucket) - 1).bit_length()
+    qp = np.zeros((bucket, queries.shape[1]), dtype=np.float32)
+    qp[:g] = queries
+    lp = np.zeros((bucket, query_label_words.shape[1]), dtype=np.int32)
+    lp[:g] = query_label_words
+    d, i = search_padded(qp, lp, k, **search_params)
+    return np.asarray(d)[:g], np.asarray(i)[:g]
+
+
+def fallback_search_padded(self, queries, query_label_words, k,
+                           **search_params):
+    """Default ``search_padded`` for backends without a native bucketed
+    path: delegates to ``search`` on the whole bucket.  Correct under the
+    executor's pad-and-slice convention (pad rows are searched and thrown
+    away) but only as jit-stable as the backend's ``search`` itself."""
+    return self.search(queries, query_label_words, k, **search_params)
 
 
 INDEX_REGISTRY: dict[str, Callable[..., VectorIndex]] = {}
@@ -47,6 +127,8 @@ def register_index(name: str):
     def deco(cls):
         INDEX_REGISTRY[name] = cls
         cls.backend_name = name
+        if getattr(cls, "search_padded", None) is None:
+            cls.search_padded = fallback_search_padded
         return cls
     return deco
 

@@ -27,8 +27,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import compat
 from ..compat import shard_map
 from ..kernels import ref
+from .base import bucket_cache, pad_to_bucket, register_index
 
 
 def _local_topk(q, x, lq, lx, k: int, metric: str, row_offset):
@@ -70,6 +72,20 @@ def sharded_filtered_topk(mesh: Mesh, *, axis: str = "data", k: int = 10,
     return jax.jit(shard_fn)
 
 
+_DEFAULT_MESHES: dict[str, Mesh] = {}
+
+
+def _default_mesh(axis: str) -> Mesh:
+    """One shared 1-D mesh over every local device (memoized so all
+    default-built indexes hit the same shard_map/jit caches)."""
+    mesh = _DEFAULT_MESHES.get(axis)
+    if mesh is None:
+        mesh = compat.make_mesh((len(jax.devices()),), (axis,))
+        _DEFAULT_MESHES[axis] = mesh
+    return mesh
+
+
+@register_index("distributed")
 class DistributedFlatIndex:
     """Flat index sharded over a mesh axis (production serving path).
 
@@ -103,6 +119,15 @@ class DistributedFlatIndex:
         self.lx = jax.device_put(jnp.asarray(label_words, jnp.int32), x_sharding)
         self._fns: dict[int, callable] = {}
 
+    @classmethod
+    def build(cls, vectors, label_words, metric: str = "l2",
+              mesh: Mesh | None = None, axis: str = "data", **params):
+        """Registry entry point; ``mesh=None`` shards over all local
+        devices (a 1-device mesh on a single host — the same code path,
+        collective included, that a production pod runs)."""
+        return cls(vectors, label_words, mesh or _default_mesh(axis),
+                   axis=axis, metric=metric, **params)
+
     def _fn(self, k: int):
         if k not in self._fns:
             self._fns[k] = sharded_filtered_topk(
@@ -111,17 +136,41 @@ class DistributedFlatIndex:
 
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
                k: int) -> tuple[np.ndarray, np.ndarray]:
+        # bucket the batch so direct callers reuse the executor's traced
+        # (index, k, bucket) shard_map programs (shape stability)
+        return pad_to_bucket(self.search_padded, queries,
+                             query_label_words, k, self.num_vectors)
+
+    def search_padded(self, queries: np.ndarray,
+                      query_label_words: np.ndarray,
+                      k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Bucket-shaped sharded search (``index.base`` contract).
+
+        The bucketed batch is replicated over the mesh, each shard runs the
+        fused filtered scan on its local rows, and the [Q, k] per-shard
+        partials are all-gathered and merged with ``lax.top_k`` — one
+        shard_map trace per (index, k, bucket).
+        """
+        cache = bucket_cache(self)
+        bucket = queries.shape[0]
+        fn = cache.get((k, bucket))
+        if fn is None:
+            sharded = self._fn(k)
+
+            def fn(q, lq):
+                vals, gids = sharded(q, self.x, lq, self.lx)
+                # padded rows never pass the containment filter for
+                # non-empty queries; for empty queries they score as
+                # ordinary zeros — mask by id range (padding lives past the
+                # true row count of the last shard).
+                bad = gids >= self.num_vectors
+                vals = jnp.where(bad, jnp.float32(jnp.inf), vals)
+                gids = jnp.where(bad, self.num_vectors, gids)
+                return vals, gids.astype(jnp.int32)
+            cache[(k, bucket)] = fn
         q = jnp.asarray(queries, jnp.float32)
         lq = jnp.asarray(query_label_words, jnp.int32)
-        vals, gids = self._fn(k)(q, self.x, lq, self.lx)
-        vals, gids = np.asarray(vals), np.asarray(gids)
-        # padded rows never pass the containment filter for non-empty
-        # queries; for empty queries they score as ordinary zeros — mask by
-        # id range (padding lives past the true row count of the last shard).
-        bad = (gids >= self.num_vectors)
-        vals = np.where(bad, np.inf, vals)
-        gids = np.where(bad, self.num_vectors, gids).astype(np.int32)
-        return vals, gids
+        return fn(q, lq)
 
     @property
     def nbytes(self) -> int:

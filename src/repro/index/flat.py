@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops, ref
-from .base import register_index
+from .base import bucket_cache, register_index
 
 
 @register_index("flat")
@@ -30,10 +30,6 @@ class FlatIndex:
         self.kernel_backend = kernel_backend
         self.block_n = block_n
         self.num_vectors, self.dim = vectors.shape
-        # per-(k, bucket) dispatch table for the batched executor; the
-        # compiled-executable cache itself lives in the module-level jit
-        # (keyed on shapes/static args), shared across all indexes
-        self._bucket_fns: dict[tuple[int, int], object] = {}
 
     @classmethod
     def build(cls, vectors, label_words, metric: str = "l2", **params):
@@ -65,9 +61,12 @@ class FlatIndex:
         bucket reuse the compiled XLA executable instead of retracing.
         Returns device arrays [bucket, k].
         """
+        cache = bucket_cache(self)
         bucket = queries.shape[0]
-        fn = self._bucket_fns.get((k, bucket))
+        fn = cache.get((k, bucket))
         if fn is None:
+            # the compiled-executable cache itself lives in the module-level
+            # jit (keyed on shapes/static args), shared across all indexes
             if self.kernel_backend == "ref":
                 # dispatch through the module-level jit so indexes with
                 # coinciding (bucket, rows, dim) shapes share one compiled
@@ -82,7 +81,7 @@ class FlatIndex:
                                              metric=self.metric,
                                              block_n=self.block_n,
                                              backend=self.kernel_backend)
-            self._bucket_fns[(k, bucket)] = fn
+            cache[(k, bucket)] = fn
         q = jnp.asarray(queries, dtype=jnp.float32)
         lq = jnp.asarray(query_label_words, dtype=jnp.int32)
         return fn(q, lq)

@@ -31,7 +31,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .base import register_index
+from .base import bucket_cache, register_index
 
 INF = float("inf")
 
@@ -260,6 +260,10 @@ class GraphIndex:
         self.adjacency = adjacency
         self.medoid = int(medoid if medoid is not None else 0)
         self.last_stats: SearchStats | None = None
+        # device-resident copies shared by every traced search program
+        self._adj_dev = jnp.asarray(self.adjacency)
+        self._xb_dev = jnp.asarray(self.vectors)
+        self._lxw_dev = jnp.asarray(self.label_words)
 
     @classmethod
     def build(cls, vectors, label_words, metric: str = "l2", **params):
@@ -268,23 +272,73 @@ class GraphIndex:
     def default_entries(self, n_queries: int) -> np.ndarray:
         return np.full((n_queries, 1), self.medoid, dtype=np.int32)
 
+    def _max_steps(self) -> int:
+        return 4 * self.num_vectors // max(self.M, 1) + 64
+
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
                k: int, ef: int | None = None, entries: np.ndarray | None = None,
                strategy: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+        # bucket the batch to the executor's power-of-two convention so
+        # direct callers reuse traced programs across jittery batch sizes;
+        # pad lanes get entry -1 (no valid seed), which fails the loop
+        # condition on the first check — zero wasted hops
+        q = np.asarray(queries, dtype=np.float32)
+        lw = np.asarray(query_label_words, dtype=np.int32)
+        g = q.shape[0]
+        if g == 0:
+            empty = np.zeros(0, np.int32)
+            self.last_stats = SearchStats(hops=empty, dist_comps=empty)
+            return (np.full((0, k), np.inf, np.float32),
+                    np.full((0, k), self.num_vectors, np.int32))
+        bucket = 1 << (g - 1).bit_length()
+        qp = np.zeros((bucket, q.shape[1]), np.float32)
+        qp[:g] = q
+        lp = np.zeros((bucket, lw.shape[1]), np.int32)
+        lp[:g] = lw
+        if entries is None:
+            entries = self.default_entries(g)
+        ent = np.full((bucket, entries.shape[1]), -1, np.int32)
+        ent[:g] = entries
+        ef = max(ef or self.ef_search, k)
+        d, i, hops, dc = _beam_search_batch(
+            self._adj_dev, self._xb_dev, self._lxw_dev,
+            jnp.asarray(qp), jnp.asarray(lp), jnp.asarray(ent),
+            k=k, ef=ef, strategy=strategy or self.strategy,
+            max_steps=self._max_steps(), metric=self.metric)
+        self.last_stats = SearchStats(hops=np.asarray(hops)[:g],
+                                      dist_comps=np.asarray(dc)[:g])
+        return np.asarray(d)[:g], np.asarray(i)[:g]
+
+    def search_padded(self, queries: np.ndarray,
+                      query_label_words: np.ndarray,
+                      k: int, ef: int | None = None,
+                      strategy: str | None = None
+                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Bucket-shaped beam search (``index.base`` contract).
+
+        The beam loop is already a fixed-shape ``lax.while_loop`` vmapped
+        over the batch (a vmapped while_loop freezes finished lanes via
+        select, so each lane's result is independent of its batch
+        neighbors — pad rows cannot perturb real rows); bucketing the batch
+        axis makes it trace once per (index, k, bucket[, ef, strategy]).
+        """
+        cache = bucket_cache(self)
+        bucket = queries.shape[0]
+        ef = max(ef or self.ef_search, k)
+        strategy = strategy or self.strategy
+        fn = cache.get((k, bucket, ef, strategy))
+        if fn is None:
+            def fn(q, lq, _k=k, _ef=ef, _s=strategy):
+                entries = jnp.full((q.shape[0], 1), self.medoid, jnp.int32)
+                d, i, _, _ = _beam_search_batch(
+                    self._adj_dev, self._xb_dev, self._lxw_dev, q, lq,
+                    entries, k=_k, ef=_ef, strategy=_s,
+                    max_steps=self._max_steps(), metric=self.metric)
+                return d, i
+            cache[(k, bucket, ef, strategy)] = fn
         q = jnp.asarray(queries, dtype=jnp.float32)
         lq = jnp.asarray(query_label_words, dtype=jnp.int32)
-        ef = max(ef or self.ef_search, k)
-        if entries is None:
-            entries = self.default_entries(q.shape[0])
-        d, i, hops, dc = _beam_search_batch(
-            jnp.asarray(self.adjacency), jnp.asarray(self.vectors),
-            jnp.asarray(self.label_words), q, lq, jnp.asarray(entries),
-            k=k, ef=ef, strategy=strategy or self.strategy,
-            max_steps=4 * self.num_vectors // max(self.M, 1) + 64,
-            metric=self.metric)
-        self.last_stats = SearchStats(hops=np.asarray(hops),
-                                      dist_comps=np.asarray(dc))
-        return np.asarray(d), np.asarray(i)
+        return fn(q, lq)
 
     @property
     def nbytes(self) -> int:

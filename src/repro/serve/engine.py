@@ -143,10 +143,15 @@ class RetrievalAugmentedEngine:
 
     def __init__(self, decoder: BatchedDecoder, eli_engine,
                  embed_fn: Callable[[np.ndarray], np.ndarray] | None = None,
-                 k: int = 5):
+                 k: int = 5, min_bucket: int = 8):
         self.decoder = decoder
         self.eli = eli_engine
         self.k = k
+        # floor for the executor's power-of-two group buckets: serving
+        # traffic arrives in jittery per-index group sizes, and a floor
+        # collapses the small-group tail onto one compiled (index, k,
+        # bucket) program per backend instead of one per {1, 2, 4}
+        self.min_bucket = min_bucket
         self.embed_fn = embed_fn or self._default_embed
         spec = decoder.spec
         self._hidden = jax.jit(
@@ -178,13 +183,16 @@ class RetrievalAugmentedEngine:
         # 1. retrieval (one ELI sub-index per request, paper Exp-3) through
         #    the batched executor: the whole request batch is routed in one
         #    vectorized pass and grouped per sub-index, so retrieval costs
-        #    one jit-cached search per touched index, not one per request
+        #    one jit-cached search per touched index, not one per request —
+        #    for ANY registered backend (flat/ivf/graph/distributed all
+        #    implement the bucketed search_padded contract)
         maxS = max(r.prompt.shape[0] for r in requests)
         prompts = np.stack([np.pad(r.prompt, (0, maxS - r.prompt.shape[0]))
                             for r in requests])
         emb = self.embed_fn(prompts)
         dists, ids = self.eli.search_batched(
-            emb, [r.label_set for r in requests], self.k)
+            emb, [r.label_set for r in requests], self.k,
+            min_bucket=self.min_bucket)
         # 2. splice neighbor ids into the prompt as context pseudo-tokens
         vocab = self.decoder.vocab
         for i, r in enumerate(requests):

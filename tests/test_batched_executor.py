@@ -96,3 +96,40 @@ def test_empty_and_single_query_batches(fix):
     dl, il = eng.search_looped(fix["qv"][:1], fix["qls"][:1], K)
     np.testing.assert_array_equal(i1, il)
     np.testing.assert_array_equal(d1, dl)
+
+
+def test_bucket_caches_isolated_across_engines_and_k():
+    """Regression for the bucket-cache bug class (ISSUE 2): two engines
+    with different k sharing one process must not cross-contaminate
+    dispatch caches — the key must pin index identity (by living on the
+    instance, see index.base.bucket_cache), k, and bucket."""
+    from repro.core import generate_label_sets, generate_query_label_sets
+
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((600, 16)).astype(np.float32)
+    ls = generate_label_sets(600, LabelWorkloadConfig(num_labels=8, seed=9))
+    qv = rng.standard_normal((40, 16)).astype(np.float32)
+    qls = generate_query_label_sets(ls, 40, seed=10)
+    e1 = LabelHybridEngine.build(x, ls, mode="eis", c=0.2, backend="flat")
+    e2 = LabelHybridEngine.build(x, ls, mode="eis", c=0.2, backend="flat")
+    # interleave the two engines so a shared/global cache would collide on
+    # identical (bucket, shapes) with different k or different index data
+    d1, i1 = e1.search_batched(qv, qls, 3)
+    d2, i2 = e2.search_batched(qv, qls, 7)
+    d1b, i1b = e1.search_batched(qv, qls, 3)
+    np.testing.assert_array_equal(i1, i1b)
+    np.testing.assert_array_equal(d1, d1b)
+    seen = 0
+    for key in e1.indexes:
+        c1 = getattr(e1.indexes[key], "_bucket_fns", None)
+        c2 = getattr(e2.indexes[key], "_bucket_fns", None)
+        if not c1 and not c2:
+            continue
+        seen += 1
+        assert c1 is not c2                      # per-instance tables
+        assert all(kk[0] == 3 for kk in c1), c1  # each pins its own k
+        assert all(kk[0] == 7 for kk in c2), c2
+    assert seen                                  # bucketed path was taken
+    # and both engines still agree with their reference loops
+    np.testing.assert_array_equal(i1, e1.search_looped(qv, qls, 3)[1])
+    np.testing.assert_array_equal(i2, e2.search_looped(qv, qls, 7)[1])

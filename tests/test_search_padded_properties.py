@@ -1,0 +1,82 @@
+"""Property-based tests (hypothesis) for the batched executor contract.
+
+For ANY random query label workload routed through ``route_many`` and ANY
+registered backend, the bucketed executor must uphold the ``VectorIndex``
+output invariants (index.base): a returned global id is either the empty
+sentinel n (with dist == +inf) or a row whose label set contains the
+query's; distances come back ascending per row.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is an optional test "
+                    "dependency (see requirements-test.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LabelHybridEngine, LabelWorkloadConfig,
+                        generate_label_sets)
+
+N, D = 400, 12
+BACKENDS = {
+    "flat": {},
+    "ivf": {"nprobe": 2},
+    "graph": {"M": 8, "n_cand": 16, "ef_search": 24},
+    "distributed": {},
+}
+
+_rng = np.random.default_rng(23)
+_X = _rng.standard_normal((N, D)).astype(np.float32)
+# 8-label universe in the data; queries may use labels up to 11 (absent
+# labels ⇒ guaranteed-empty result sets, exercising the sentinel padding)
+_LS = generate_label_sets(N, LabelWorkloadConfig(num_labels=8, seed=13))
+_ENGINES: dict[str, LabelHybridEngine] = {}
+
+
+def _engine(backend: str) -> LabelHybridEngine:
+    if backend not in _ENGINES:
+        _ENGINES[backend] = LabelHybridEngine.build(
+            _X, _LS, mode="eis", c=0.25, backend=backend,
+            **BACKENDS[backend])
+    return _ENGINES[backend]
+
+
+query_label_set = st.frozensets(st.integers(0, 11), max_size=5).map(
+    lambda s: tuple(sorted(s)))
+workloads = st.lists(query_label_set, min_size=1, max_size=12)
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+@given(qls=workloads, k=st.sampled_from([1, 3, 5]), seed=st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_batched_results_pass_filter_and_pad_with_n(backend, qls, k, seed):
+    eng = _engine(backend)
+    qv = np.random.default_rng(seed).standard_normal(
+        (len(qls), D)).astype(np.float32)
+    d, ids = eng.search_batched(qv, qls, k)
+    assert d.shape == (len(qls), k) and ids.shape == (len(qls), k)
+    assert np.all((ids >= 0) & (ids <= N))
+    for qi, q in enumerate(qls):
+        need = set(q)
+        for slot in range(k):
+            v = int(ids[qi, slot])
+            if v == N:                            # empty slot convention
+                assert np.isinf(d[qi, slot])
+            else:                                 # never a non-passing row
+                assert need <= set(_LS[v]), (backend, q, v, _LS[v])
+        finite = d[qi][np.isfinite(d[qi])]
+        assert np.all(np.diff(finite) >= 0)       # ascending distances
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+@given(qls=workloads, seed=st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_batched_equals_looped_on_random_workloads(backend, qls, seed):
+    eng = _engine(backend)
+    qv = np.random.default_rng(seed).standard_normal(
+        (len(qls), D)).astype(np.float32)
+    d_b, i_b = eng.search_batched(qv, qls, 3)
+    d_l, i_l = eng.search_looped(qv, qls, 3)
+    np.testing.assert_array_equal(i_b, i_l)
+    np.testing.assert_array_equal(d_b, d_l)

@@ -1,40 +1,62 @@
-"""Exp-2 (Tables 5/6) — index construction time and size."""
+"""Exp-2 (Tables 5/6) — index construction time and size.
+
+Emits machine-readable ``BENCH_exp2.json`` (via ``common.emit_json``) so
+the arena's memory/build-time win is recorded in the perf trajectory
+alongside ``BENCH_exp9.json``: per engine we log build/select seconds,
+stored entries, and the nbytes split (shared arena + CSR segment table vs
+per-index private storage — see ``EngineStats``).
+"""
 import time
 
 from repro.baselines import BASELINE_REGISTRY
 from repro.core.engine import LabelHybridEngine
 
-from .common import emit, make_dataset
+from .common import emit, emit_json, make_dataset
 
 
-def run(n=6_000, L=16):
+def _eli_row(name: str, eng, wall_s: float) -> tuple[dict, dict]:
+    st = eng.stats()
+    row = {"name": f"exp2/{name}", "us_per_call": "",
+           "build_s": f"{wall_s:.2f}",
+           "select_s": f"{st.select_seconds:.3f}",
+           "entries": st.total_entries, "mb": f"{st.nbytes/2**20:.1f}",
+           "n_indexes": st.n_selected,
+           "achieved_c": f"{st.achieved_c:.3f}"}
+    payload = {"wall_s": wall_s, "select_s": st.select_seconds,
+               "index_build_s": st.build_seconds,
+               "entries": st.total_entries, "n_indexes": st.n_selected,
+               "achieved_c": st.achieved_c, "nbytes": st.nbytes,
+               "arena_nbytes": st.arena_nbytes,
+               "segment_nbytes": st.segment_nbytes}
+    return row, payload
+
+
+def run(n=6_000, L=16, out_dir="."):
     x, ls, qv, qls = make_dataset(n=n, n_labels=L, q=8)
-    rows = []
+    rows, payload = [], {"n": n, "n_labels": L, "engines": {},
+                         "baselines": {}}
     t0 = time.perf_counter()
     eng = LabelHybridEngine.build(x, ls, mode="eis", c=0.2, backend="flat")
-    st = eng.stats()
-    rows.append({"name": "exp2/ELI-0.2", "us_per_call": "",
-                 "build_s": f"{time.perf_counter() - t0:.2f}",
-                 "select_s": f"{st.select_seconds:.3f}",
-                 "entries": st.total_entries, "mb": f"{st.nbytes/2**20:.1f}",
-                 "n_indexes": st.n_selected,
-                 "achieved_c": f"{st.achieved_c:.3f}"})
+    row, p = _eli_row("ELI-0.2", eng, time.perf_counter() - t0)
+    rows.append(row)
+    payload["engines"]["ELI-0.2"] = p
+
     t0 = time.perf_counter()
     eng2 = LabelHybridEngine.build(x, ls, mode="sis", space_budget=2 * n,
                                    backend="flat")
-    st2 = eng2.stats()
-    rows.append({"name": "exp2/ELI-2.0", "us_per_call": "",
-                 "build_s": f"{time.perf_counter() - t0:.2f}",
-                 "entries": st2.total_entries,
-                 "mb": f"{st2.nbytes/2**20:.1f}",
-                 "achieved_c": f"{st2.achieved_c:.3f}"})
+    row, p = _eli_row("ELI-2.0", eng2, time.perf_counter() - t0)
+    rows.append(row)
+    payload["engines"]["ELI-2.0"] = p
+
     for bname in ("postfilter", "acorn1", "acorn_gamma", "ung", "optimal"):
         t0 = time.perf_counter()
         b = BASELINE_REGISTRY[bname](x, ls)
+        dt = time.perf_counter() - t0
         rows.append({"name": f"exp2/{bname}", "us_per_call": "",
-                     "build_s": f"{time.perf_counter() - t0:.2f}",
-                     "mb": f"{b.nbytes/2**20:.1f}"})
+                     "build_s": f"{dt:.2f}", "mb": f"{b.nbytes/2**20:.1f}"})
+        payload["baselines"][bname] = {"build_s": dt, "nbytes": b.nbytes}
     emit(rows, "exp2")
+    emit_json(payload, "exp2", out_dir)
     return rows
 
 

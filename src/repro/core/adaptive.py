@@ -36,8 +36,6 @@ import time
 from collections import Counter
 from typing import Mapping, Sequence
 
-import numpy as np
-
 from .eis import EISResult, assign_queries
 from .elastic import elastic_factor
 from .groups import EMPTY_KEY, coverage_pairs
@@ -169,21 +167,15 @@ class AdaptiveEngine:
         old = set(eng.selection.selected)
         new = set(sel.selected)
         added, dropped = new - old, old - new
-        # incremental build: only the delta touches physical indexes
-        from ..index.base import get_index_builder
-        builder = get_index_builder(eng.backend)
-        for key in added:
-            rows = (np.arange(len(eng.label_sets), dtype=np.int64)
-                    if key == EMPTY_KEY else eng.table.closure_members(key))
-            eng.rows[key] = rows
-            eng.indexes[key] = builder.build(
-                eng.vectors[rows], eng.label_words[rows], metric=eng.metric)
-        for key in dropped:
-            eng.indexes.pop(key, None)
-            eng.rows.pop(key, None)
-        eng.selection = EISResult(
+        # incremental swap through the engine's single rebuild path
+        # (apply_selection): retained private-storage indexes are reused,
+        # added keys build, dropped keys vanish with the old tables; the
+        # segment table and the vectorized routing tables are refreshed
+        # atomically (the pre-arena code patched eng.indexes/eng.rows by
+        # hand and left the route mask matrix stale)
+        eng.apply_selection(EISResult(
             selected=dict(sel.selected), cost=sel.space,
-            rounds=sel.rounds, c=0.0, assignment=sel.assignment)
+            rounds=sel.rounds, c=0.0, assignment=sel.assignment))
         self.monitor.snapshot()
         rec = {"added": len(added), "dropped": len(dropped),
                "space": sel.space, "expected_cost": sel.expected_cost,

@@ -7,7 +7,17 @@ Pipeline (paper §3-§5):
   3. materialize one physical index per selected label-set key over its
      closure S(L) (any registered backend: flat / ivf / graph / distributed),
   4. route each query to its assigned index (max elastic factor) and run a
-     PostFiltering top-k inside it; local ids map back to global rows.
+     PostFiltering top-k inside it; ids come back global.
+
+Storage (DESIGN.md §3): selected indexes are *closures over one dataset*,
+so the engine keeps the dataset in a device-resident :class:`Arena`
+(vectors + label words uploaded once) and represents every selected index
+as a row-id segment of one concatenated CSR table (``rows_concat`` +
+per-key offsets), built at selection time.  Arena-native backends (those
+with a ``build_view`` capability — flat) materialize zero-copy views;
+backends with private storage (ivf's cluster-major reorder, graph's
+adjacency, distributed's sharded copy) fall back to ``build`` on the
+copied rows, exactly as before.
 
 The engine is the artifact behind every benchmark figure and the serving
 integration (repro.serve).  Routing of query label sets *outside* the
@@ -23,8 +33,10 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from ..index.base import (fallback_search_padded, get_index_builder,
-                          pad_to_bucket)
+from ..index.base import (Arena, as_row_ids, check_global_id_contract,
+                          dispatch_padded, fallback_search_padded,
+                          get_index_builder, pow2_bucket)
+from ..kernels import ops as _kernel_ops
 from .eis import EISResult, greedy_eis
 from .elastic import elastic_factor, min_elastic_factor
 from .estimator import sampled_group_table
@@ -44,7 +56,9 @@ class EngineStats:
     achieved_c: float            # min elastic factor over the workload
     select_seconds: float
     build_seconds: float
-    nbytes: int
+    nbytes: int                  # arena + segment table + private storage
+    arena_nbytes: int = 0        # shared-arena share of nbytes (0 = no arena)
+    segment_nbytes: int = 0      # CSR row-id table share of nbytes
 
 
 class LabelHybridEngine:
@@ -70,19 +84,80 @@ class LabelHybridEngine:
         masks = encode_many(self.label_sets)
         self.label_words = masks_to_int32_words(masks)
 
+        check_global_id_contract(len(self.label_sets))
         t0 = time.perf_counter()
         builder = get_index_builder(backend)
+        self.backend_params = dict(backend_params)
+        self._arena_native = hasattr(builder, "build_view")
+        self._seg_backend = backend_params.get("kernel_backend", "ref")
+
+        # Arena: the dataset's vectors/label words uploaded ONCE; views
+        # reference them per segment.  Private-storage backends skip the
+        # upload (their build copies rows as before).
+        self.arena: Arena | None = (
+            Arena.from_host(self.vectors, self.label_words)
+            if self._arena_native else None)
         self.indexes: dict[tuple[int, ...], object] = {}
         self.rows: dict[tuple[int, ...], np.ndarray] = {}
-        for key in selection.selected:
-            rows = (np.arange(len(self.label_sets), dtype=np.int64)
-                    if key == EMPTY_KEY else table.closure_members(key))
-            self.rows[key] = rows
-            self.indexes[key] = builder.build(
-                self.vectors[rows], self.label_words[rows], metric=metric,
-                **backend_params)
+        self.segments: dict[tuple[int, ...], tuple[int, int]] = {}
+        self.apply_selection(selection)
         self._build_seconds = time.perf_counter() - t0
         self._select_seconds = select_seconds
+
+    def apply_selection(self, selection: EISResult) -> None:
+        """(Re)materialize the engine for ``selection`` — the single home
+        of segment-table + index + routing-table construction.
+
+        Builds the CSR segment table (every selected index is an int32
+        row-id segment of ONE concatenated ``rows_concat``), materializes
+        arena views (zero-copy) or private-storage indexes (retained
+        instances are reused — the incremental path of
+        ``core.adaptive.AdaptiveEngine.reselect``), and refreshes the
+        vectorized routing tables + fallback-route cache, which must never
+        outlive the selection they were derived from.
+        """
+        import jax.numpy as jnp
+
+        n = check_global_id_contract(len(self.label_sets))
+        builder = get_index_builder(self.backend)
+        old_rows, old_indexes = self.rows, self.indexes
+        self.selection = selection
+        self.indexes, self.rows, self.segments = {}, {}, {}
+        parts, off = [], 0
+        for key in selection.selected:
+            rows = old_rows.get(key)
+            if rows is None:
+                rows = (np.arange(n, dtype=np.int64)
+                        if key == EMPTY_KEY else
+                        self.table.closure_members(key))
+                rows = as_row_ids(rows, n)   # int32 + sentinel contract
+            self.rows[key] = rows
+            self.segments[key] = (off, rows.size)
+            parts.append(rows)
+            off += rows.size
+        self.rows_concat = (np.concatenate(parts) if parts
+                            else np.zeros(0, np.int32))
+        # the device copy of the CSR table feeds the segmented kernel and
+        # the views; private-storage backends never read it on device, so
+        # they skip the upload (and its HBM) entirely
+        self._rows_concat_dev = (jnp.asarray(self.rows_concat)
+                                 if self._arena_native else None)
+
+        if self._arena_native and self.arena is not None:
+            # views are zero-copy: re-materializing ALL of them on a new
+            # selection costs a few µs each, no vector traffic
+            for key, (start, length) in self.segments.items():
+                self.indexes[key] = builder.build_view(
+                    self.arena, self._rows_concat_dev, start, length,
+                    metric=self.metric, **self.backend_params)
+        else:
+            for key, rows in self.rows.items():
+                index = old_indexes.get(key)
+                if index is None:
+                    index = builder.build(
+                        self.vectors[rows], self.label_words[rows],
+                        metric=self.metric, **self.backend_params)
+                self.indexes[key] = index
 
         # Routing table for the batched executor: the selected keys (in dict
         # order — route()'s tie-break order) as a dense uint64 mask matrix,
@@ -212,28 +287,37 @@ class LabelHybridEngine:
                        query_label_sets: Sequence[tuple[int, ...]], k: int,
                        *, min_bucket: int = 1,
                        **search_params) -> tuple[np.ndarray, np.ndarray]:
-        """Batched multi-index executor.
+        """Batched multi-index executor (single-dispatch segmented form).
 
         1. routes the whole batch in one vectorized pass (route_many),
-        2. groups queries per selected index,
-        3. pads each group to a power-of-two bucket (≥ ``min_bucket``) and
-           dispatches through the backend's jit-cached per-(index, k, bucket)
-           search fn, so repeated serving batches hit the XLA executable
-           cache instead of retracing per group size.
+        2. **arena-native backends** (flat): queries are sorted by routed
+           key and partitioned by their segment's power-of-two candidate
+           span; each span tier becomes ONE call into the jit-cached
+           segmented program (``kernels.ops.segmented_topk``) — every query
+           carries its ``(start, len)`` segment of the engine's CSR row
+           table, candidate rows are gathered from the shared arena, the
+           label filter and ``lax.top_k`` are fused, and global ids come
+           back from the device directly.  A 143-index selection costs
+           O(#span tiers) ≈ O(log N) kernel launches per batch, not 143 —
+           warm QPS no longer scales with the number of routed groups;
+        3. **private-storage backends** (ivf / graph / distributed /
+           third-party): per-group dispatch through the backend's jit-cached
+           per-(index, k, bucket) ``search_padded`` as before, but the host
+           defers materialization + the local→global id map until every
+           group's device work is queued (single synchronization point),
+           instead of blocking per group like the looped oracle.
 
-        Every registered backend (flat / ivf / graph / distributed) ships a
-        native bucketed ``search_padded`` (see ``index.base`` for the
-        contract), so routed groups stay jit-cached end to end regardless
-        of index type — the paper's Table 1 "Index Flexibility" claim in
-        executable form.  Bit-identical to :meth:`search_looped`: each
-        query row's filtered top-k is independent of its batch neighbors,
-        and pad rows are sliced off before the id mapping.  Third-party
-        backends without ``search_padded`` go through the same pad-and-
-        slice path via :func:`index.base.fallback_search_padded`.
+        Bit-identical to :meth:`search_looped` on every backend: each query
+        row's filtered top-k is independent of its batch neighbors, pad
+        rows are sliced off, and the arena path runs byte-for-byte the same
+        kernel as the views behind the looped executor (pinned by
+        ``tests/test_search_padded_parity.py``).
         """
         queries = np.asarray(queries, dtype=np.float32)
         Q = queries.shape[0]
-        n = len(self.label_sets)
+        # sentinel/dtype contract: ids int32, empty slot == n (asserted
+        # here so third-party callers hit it before any device work)
+        n = check_global_id_contract(len(self.label_sets))
         out_d = np.full((Q, k), np.inf, dtype=np.float32)
         out_i = np.full((Q, k), n, dtype=np.int32)
         if Q == 0:
@@ -241,23 +325,72 @@ class LabelHybridEngine:
 
         qmasks = encode_many(query_label_sets)
         qwords = masks_to_int32_words(qmasks)
-        by_key: dict[tuple[int, ...], list[int]] = {}
-        for qi, key in enumerate(self.route_many(query_label_sets, qmasks)):
-            by_key.setdefault(key, []).append(qi)
+        routed = self.route_many(query_label_sets, qmasks)
+        pend: list[tuple[list[int], object, object, int]] = []
 
+        if self._arena_native and self.arena is not None:
+            if search_params:
+                raise TypeError(f"arena-native backend {self.backend!r} "
+                                f"takes no search params; got "
+                                f"{sorted(search_params)}")
+            # partition by candidate-span tier; sort each tier by segment
+            # start so same-key queries stay adjacent (gather locality)
+            tiers: dict[int, list[int]] = {}
+            for qi, key in enumerate(routed):
+                tiers.setdefault(pow2_bucket(self.segments[key][1]),
+                                 []).append(qi)
+            for lmax in sorted(tiers):
+                qids = sorted(tiers[lmax],
+                              key=lambda qi: self.segments[routed[qi]][0])
+                g = len(qids)
+                bucket = pow2_bucket(g, min_bucket)
+                qp = np.zeros((bucket, queries.shape[1]), np.float32)
+                qp[:g] = queries[qids]
+                lp = np.zeros((bucket, qwords.shape[1]), np.int32)
+                lp[:g] = qwords[qids]
+                seg = np.zeros((2, bucket), np.int32)   # starts / lens
+                seg[:, :g] = np.array(
+                    [self.segments[routed[qi]] for qi in qids], np.int32).T
+                vals, _, gi = _kernel_ops.segmented_topk(
+                    qp, lp, self.arena.vectors, self.arena.label_words,
+                    self.arena.norms, self._rows_concat_dev, seg[0], seg[1],
+                    k=k, lmax=lmax, metric=self.metric,
+                    backend=self._seg_backend)
+                # global ids resolved inside the traced program (sentinel n
+                # included): no host remap, and warmup covers the full path
+                pend.append((qids, vals, gi, g))
+            # single synchronization point: every tier is already queued
+            for qids, d, gi, g in pend:
+                out_d[qids] = np.asarray(d)[:g]
+                out_i[qids] = np.asarray(gi)[:g]
+            return out_d, out_i
+
+        by_key: dict[tuple[int, ...], list[int]] = {}
+        for qi, key in enumerate(routed):
+            by_key.setdefault(key, []).append(qi)
         for key, qids in by_key.items():
             index = self.indexes[key]
-            rows = self.rows[key]
             searcher = getattr(index, "search_padded", None)
-            if searcher is None:    # third-party backend outside the registry
+            if searcher is None:       # third-party, outside the registry
                 searcher = functools.partial(fallback_search_padded, index)
-            d, li = pad_to_bucket(searcher, queries[qids], qwords[qids], k,
-                                  rows.size, min_bucket=min_bucket,
-                                  **search_params)
-            empty = li >= rows.size
-            gi = np.where(empty, n, rows[np.clip(li, 0, rows.size - 1)])
-            out_d[qids] = d
-            out_i[qids] = gi.astype(np.int32)
+            d, li = dispatch_padded(searcher, queries[qids], qwords[qids],
+                                    k, min_bucket=min_bucket,
+                                    **search_params)
+            pend.append((qids, d, li, len(qids)))
+
+        # deferred sync: every group's device work is queued before the
+        # first host materialization, so XLA executes groups while the
+        # host maps the finished ones (the looped oracle blocks per group)
+        for qids, d, li, g in pend:
+            rows = self.rows[routed[qids[0]]]
+            li = np.asarray(li)[:g]
+            if rows.size:
+                empty = li >= rows.size
+                gi = np.where(empty, n, rows[np.clip(li, 0, rows.size - 1)])
+                out_i[qids] = gi.astype(np.int32)
+            # rows.size == 0 (empty dataset edge): out_i already holds the
+            # sentinel n everywhere, nothing to map
+            out_d[qids] = np.asarray(d)[:g]
         return out_d, out_i
 
     def search_looped(self, queries: np.ndarray,
@@ -289,11 +422,74 @@ class LabelHybridEngine:
             out_i[qids] = gi.astype(np.int32)
         return out_d, out_i
 
+    # -- warmup ----------------------------------------------------------------
+    def warmup(self, ks: Sequence[int], buckets: Sequence[int],
+               **search_params) -> dict:
+        """Pre-trace the per-(k, bucket) dispatch tables ahead of traffic.
+
+        Cold serving latency is dominated by tracing + XLA compilation of
+        every search program the first batch touches (exp9 measured 11.8 s
+        on the distributed backend's first batched call).  ``warmup`` runs
+        each program once on zero queries so first real batches hit the
+        executable cache:
+
+          * arena-native backends: the segmented program for every
+            (k ∈ ks, Q-bucket ∈ buckets, candidate-span tier) triple — span
+            tiers are known at build time from the segment table, and the
+            same executables also serve the per-view looped path;
+          * private-storage backends: every selected index's
+            ``search_padded`` per (k, bucket).
+
+        ``buckets`` are Q-buckets (rounded up to powers of two); a server
+        passes the buckets its batch-size distribution produces.  Returns
+        ``{"seconds", "programs"}``.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        D = self.vectors.shape[1]
+        W = self.label_words.shape[1]
+        outs: list[object] = []
+        span_tiers = sorted({pow2_bucket(length)
+                             for _, length in self.segments.values()})
+        for k in ks:
+            for b in buckets:
+                bucket = pow2_bucket(b)
+                qz = np.zeros((bucket, D), np.float32)
+                lz = np.zeros((bucket, W), np.int32)
+                if self._arena_native and self.arena is not None:
+                    zero = jnp.zeros(bucket, jnp.int32)
+                    for lmax in span_tiers:
+                        vals, _, _ = _kernel_ops.segmented_topk(
+                            qz, lz, self.arena.vectors,
+                            self.arena.label_words, self.arena.norms,
+                            self._rows_concat_dev, zero, zero, k=k,
+                            lmax=lmax, metric=self.metric,
+                            backend=self._seg_backend)
+                        outs.append(vals)
+                else:
+                    for index in self.indexes.values():
+                        searcher = getattr(index, "search_padded", None)
+                        if searcher is None:
+                            searcher = functools.partial(
+                                fallback_search_padded, index)
+                        d, _ = searcher(qz, lz, k, **search_params)
+                        outs.append(d)
+        for o in outs:
+            jax.block_until_ready(jnp.asarray(o))
+        return {"seconds": time.perf_counter() - t0, "programs": len(outs)}
+
     # -- reporting --------------------------------------------------------------
     def stats(self) -> EngineStats:
         qkeys = [k for k in self.table.closure_sizes if k != EMPTY_KEY]
         achieved = min_elastic_factor(qkeys, self.table.closure_sizes,
                                       self.selection.selected)
+        arena_nbytes = self.arena.nbytes if self.arena is not None else 0
+        # the CSR table is device-resident only on arena-native backends;
+        # private-storage accounting stays comparable to pre-arena runs
+        segment_nbytes = (int(self._rows_concat_dev.nbytes)
+                          if self._rows_concat_dev is not None else 0)
         return EngineStats(
             n=len(self.label_sets),
             n_candidates=len(self.table.closure_sizes),
@@ -303,7 +499,12 @@ class LabelHybridEngine:
             achieved_c=achieved,
             select_seconds=self._select_seconds,
             build_seconds=self._build_seconds,
-            nbytes=sum(ix.nbytes for ix in self.indexes.values()),
+            # arena + CSR segment table counted once; views report nbytes=0,
+            # private-storage backends report their copies as before
+            nbytes=(arena_nbytes + segment_nbytes
+                    + sum(ix.nbytes for ix in self.indexes.values())),
+            arena_nbytes=arena_nbytes,
+            segment_nbytes=segment_nbytes,
         )
 
 

@@ -46,12 +46,94 @@ Contract:
     plain ``search`` and inherits its tracing behavior).
   * ``num_vectors`` — the paper's cost measure (space ∝ #vectors, degree
     bounded by a constant for graphs).
+  * ``build_view(arena, rows_concat, start, length, *, metric, **params)``
+    — OPTIONAL classmethod capability (DESIGN.md §3): an **arena-native**
+    backend materializes a selected index as a *view* over the engine's
+    shared :class:`Arena` — an ``(start, length)`` segment of the engine's
+    concatenated row-id table — instead of copying its closure's vectors.
+    Views satisfy the full ``VectorIndex`` protocol (their ``search`` /
+    ``search_padded`` return LOCAL ids exactly like a materialized index)
+    but own no vector storage: ``nbytes == 0``, the arena and the segment
+    table are counted once at the engine.  Backends without ``build_view``
+    keep private storage and the engine falls back to ``build`` on the
+    copied rows — the paper's index-flexibility contract is unchanged.
+
+Global-id contract (the executor's sentinel/dtype rules) lives here too:
+row ids are int32, the empty-slot sentinel is the dataset cardinality
+``n`` itself, and therefore ``n`` must be representable as int32 — see
+:func:`check_global_id_contract` / :func:`as_row_ids`, the single home of
+that rule (engine, benchmarks, and backends all import it).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Protocol
 
 import numpy as np
+
+ROW_ID_DTYPE = np.int32
+
+
+def check_global_id_contract(n: int) -> int:
+    """Assert the sentinel/dtype contract: ids AND the empty sentinel ``n``
+    must fit int32 (the device id dtype).  Returns ``n`` for chaining."""
+    if not 0 <= n < np.iinfo(ROW_ID_DTYPE).max:
+        raise OverflowError(
+            f"dataset cardinality {n} breaks the int32 global-id contract "
+            f"(the empty-slot sentinel is n itself and must be "
+            f"representable); shard the dataset or widen ROW_ID_DTYPE")
+    return n
+
+
+def as_row_ids(rows: np.ndarray, n: int) -> np.ndarray:
+    """Coerce an arena row-id array to the contract dtype, checking range.
+
+    The pre-arena engine stored ``rows`` as int64 and downcast search
+    results with a bare ``astype(np.int32)`` — a silent overflow for
+    n ≥ 2^31.  Every row table now passes through here instead."""
+    check_global_id_contract(n)
+    rows = np.ascontiguousarray(rows)
+    if rows.size and (rows.min() < 0 or rows.max() >= n):
+        raise ValueError(f"row ids outside [0, {n})")
+    return rows.astype(ROW_ID_DTYPE, copy=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Arena:
+    """Device-resident shared index storage (DESIGN.md §3).
+
+    The dataset's vectors and label words are uploaded ONCE; every selected
+    index references them through a row-id segment instead of holding a
+    copy, so engine device memory is N·D·4 + N·W·4 (+ N·4 norms) + Σ|I|·4
+    bytes instead of Σ|I|·(D+W)·4.  ``norms`` are the precomputed squared
+    row norms consumed by the l2 distance form ``qn - 2·ip + xn`` — gathered
+    per candidate, bit-identical to recomputing from the gathered row.
+    """
+    vectors: object        # jnp [N, D] f32
+    label_words: object    # jnp [N, W] i32
+    norms: object          # jnp [N] f32
+
+    @classmethod
+    def from_host(cls, vectors: np.ndarray, label_words: np.ndarray) -> "Arena":
+        import jax.numpy as jnp
+        check_global_id_contract(vectors.shape[0])
+        x = jnp.asarray(np.ascontiguousarray(vectors, dtype=np.float32))
+        lw = jnp.asarray(np.ascontiguousarray(label_words, dtype=np.int32))
+        return cls(vectors=x, label_words=lw,
+                   norms=jnp.sum(x * x, axis=1))
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.vectors.nbytes + self.label_words.nbytes
+                   + self.norms.nbytes)
 
 
 class VectorIndex(Protocol):
@@ -89,6 +171,30 @@ def bucket_cache(index) -> dict:
     return cache
 
 
+def pow2_bucket(g: int, min_bucket: int = 1) -> int:
+    """The executor's power-of-two bucket for a group of ``g`` rows."""
+    return 1 << (max(g, min_bucket, 1) - 1).bit_length()
+
+
+def dispatch_padded(search_padded, queries, query_label_words, k,
+                    min_bucket: int = 1, **search_params):
+    """Zero-pad a raw group to its power-of-two bucket and dispatch.
+
+    Returns the backend's (d, i) — typically still-device arrays of shape
+    [bucket, k] — WITHOUT slicing or host synchronization, so the batched
+    executor can queue every routed group before blocking once (the
+    deferred-sync half of the single-dispatch story; see
+    ``LabelHybridEngine.search_batched``).  ``pad_to_bucket`` wraps this
+    with the slice-and-materialize convention for direct callers."""
+    g = queries.shape[0]
+    bucket = pow2_bucket(g, min_bucket)
+    qp = np.zeros((bucket, queries.shape[1]), dtype=np.float32)
+    qp[:g] = queries
+    lp = np.zeros((bucket, query_label_words.shape[1]), dtype=np.int32)
+    lp[:g] = query_label_words
+    return search_padded(qp, lp, k, **search_params)
+
+
 def pad_to_bucket(search_padded, queries, query_label_words, k, n,
                   min_bucket: int = 1, **search_params):
     """Dispatch a raw (un-bucketed) batch through ``search_padded`` under
@@ -102,12 +208,8 @@ def pad_to_bucket(search_padded, queries, query_label_words, k, n,
     if g == 0:
         return (np.full((0, k), np.inf, np.float32),
                 np.full((0, k), n, np.int32))
-    bucket = 1 << (max(g, min_bucket) - 1).bit_length()
-    qp = np.zeros((bucket, queries.shape[1]), dtype=np.float32)
-    qp[:g] = queries
-    lp = np.zeros((bucket, query_label_words.shape[1]), dtype=np.int32)
-    lp[:g] = query_label_words
-    d, i = search_padded(qp, lp, k, **search_params)
+    d, i = dispatch_padded(search_padded, queries, query_label_words, k,
+                           min_bucket=min_bucket, **search_params)
     return np.asarray(d)[:g], np.asarray(i)[:g]
 
 

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops, ref
-from .base import bucket_cache, register_index
+from .base import Arena, bucket_cache, pad_to_bucket, pow2_bucket, register_index
 
 
 @register_index("flat")
@@ -34,6 +34,15 @@ class FlatIndex:
     @classmethod
     def build(cls, vectors, label_words, metric: str = "l2", **params):
         return cls(vectors, label_words, metric, **params)
+
+    @classmethod
+    def build_view(cls, arena: Arena, rows_concat, start: int, length: int, *,
+                   metric: str = "l2", **params) -> "FlatArenaView":
+        """Arena-native capability (``index.base`` contract): materialize a
+        selected index as a zero-copy view over the engine's shared arena
+        instead of a private vector copy."""
+        return FlatArenaView(arena, rows_concat, start, length,
+                             metric=metric, **params)
 
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
                k: int) -> tuple[np.ndarray, np.ndarray]:
@@ -89,6 +98,83 @@ class FlatIndex:
     @property
     def nbytes(self) -> int:
         return self.vectors.nbytes + self.label_words.nbytes
+
+
+class FlatArenaView:
+    """Zero-copy flat index over a segment of the engine's shared arena.
+
+    The selected index's membership is the ``[start, start+length)`` span of
+    the engine's concatenated arena row-id table (``rows_concat``, ascending
+    global ids per segment); its vectors/label words/norms live ONCE in the
+    :class:`~repro.index.base.Arena`.  Search dispatches through the same
+    jit-cached segmented program (``kernels.ops.segmented_topk``) that the
+    engine's single-dispatch batched executor uses, with this view's single
+    segment broadcast over the bucket — so the looped reference path and the
+    segmented hot path run byte-for-byte the same kernel arithmetic, and
+    bit-parity between the two executors holds by construction (per-query
+    results are independent of batch composition; pinned by
+    ``tests/test_search_padded_parity.py``).
+
+    Satisfies the full ``VectorIndex`` protocol: ``search``/``search_padded``
+    return LOCAL ids (segment positions; id == ``num_vectors`` ⇒ empty slot).
+    ``nbytes`` is 0 — the arena and segment table are counted once at the
+    engine, which is the whole point.
+    """
+
+    backend_name = "flat"
+    arena_native = True
+
+    def __init__(self, arena: Arena, rows_concat, start: int, length: int, *,
+                 metric: str = "l2", kernel_backend: str = "ref",
+                 block_n: int = 1024):
+        self.arena = arena
+        self._rows = rows_concat           # device int32 [R] (engine-shared)
+        self.start = int(start)
+        self.length = int(length)
+        self.metric = metric
+        self.kernel_backend = kernel_backend
+        self.block_n = block_n             # unused: the segmented scan chunks
+        self.num_vectors = self.length     # by ops.SEG_CHUNK, not block_n
+        self.dim = arena.dim
+
+    def search(self, queries: np.ndarray, query_label_words: np.ndarray,
+               k: int) -> tuple[np.ndarray, np.ndarray]:
+        return pad_to_bucket(self.search_padded, queries, query_label_words,
+                             k, self.length)
+
+    def search_padded(self, queries: np.ndarray,
+                      query_label_words: np.ndarray,
+                      k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Bucket-shaped search over the view's segment (``index.base``
+        contract): one cached dispatch per (k, bucket), all landing in the
+        shared segmented-program executable for (k, bucket, lmax)."""
+        cache = bucket_cache(self)
+        bucket = queries.shape[0]
+        fn = cache.get((k, bucket))
+        if fn is None:
+            lmax = pow2_bucket(self.length)
+
+            def fn(q, lq, _k=k, _lmax=lmax):
+                shape = (q.shape[0],)
+                starts = jnp.full(shape, self.start, jnp.int32)
+                lens = jnp.full(shape, self.length, jnp.int32)
+                vals, pos, _ = ops.segmented_topk(
+                    q, lq, self.arena.vectors, self.arena.label_words,
+                    self.arena.norms, self._rows, starts, lens, k=_k,
+                    lmax=_lmax, metric=self.metric,
+                    backend=self.kernel_backend)
+                # segment positions ARE local ids (ascending global order);
+                # normalize the empty-slot sentinel to num_vectors
+                ids = jnp.where(pos >= self.length, self.length, pos)
+                return vals, ids.astype(jnp.int32)
+            cache[(k, bucket)] = fn
+        q = jnp.asarray(queries, dtype=jnp.float32)
+        lq = jnp.asarray(query_label_words, dtype=jnp.int32)
+        return fn(q, lq)
+
+    @property
+    def nbytes(self) -> int:
+        return 0
 
 
 def _ref_topk(q, x, lq, lx, k: int, metric: str):

@@ -38,6 +38,75 @@ def _gather_distance_kernel(ids_ref, q_ref, x_ref, out_ref, *, metric: str):
     out_ref[0, 0] = d
 
 
+def _seg_gather_kernel(ids_ref, lens_ref, q_ref, lq_ref, x_ref, lx_ref,
+                       out_ref, *, metric: str):
+    """One grid step = one (query, candidate) pair: the candidate's arena
+    row was DMA'd HBM→VMEM by the BlockSpec index_map reading the
+    scalar-prefetched id table; fuse distance + label containment +
+    segment-validity into the [1, 1] output."""
+    qi = pl.program_id(0)
+    li = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)          # [1, D]
+    xr = x_ref[...].astype(jnp.float32)         # [1, D]
+    ip = jnp.sum(q * xr)
+    if metric == "ip":
+        d = -ip
+    else:
+        d = jnp.sum((q - xr) ** 2)
+    lq = lq_ref[...]                            # [1, W]
+    lx = lx_ref[...]                            # [1, W]
+    ok = jnp.all((lq & lx) == lq)
+    valid = li < lens_ref[qi]
+    out_ref[0, 0] = jnp.where(ok & valid, d, INF)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def segmented_gather_distance_pallas(q, lq, x, lxw, gids, lens, *,
+                                     metric: str = "l2",
+                                     interpret: bool = True):
+    """Segmented arena gather + fused filtered distance (DESIGN.md §3).
+
+    ``q`` [Q, D] f32, ``lq`` [Q, W] i32; ``x`` [N, D] arena vectors;
+    ``lxw`` [N, W] arena label words; ``gids`` [Q, L] int32 arena row ids
+    per query (already resolved through the engine's CSR segment table,
+    clamped to range); ``lens`` [Q] int32 — positions >= len are masked to
+    +inf.  Returns [Q, L] f32 masked distances.
+
+    TPU mapping: ``gids``/``lens`` are scalar-prefetched into SMEM ahead of
+    the grid; each (query, candidate) grid step's BlockSpec index_map reads
+    ``gids[qi, li]`` to DMA exactly that arena row HBM→VMEM — the same
+    software-pipelined gather idiom as :func:`gather_distance_pallas`,
+    extended with a second grid axis and the fused label filter.  Note the
+    id table lives in SMEM: callers bound Q·L (the ops wrapper chunks the
+    candidate span).
+    """
+    if pltpu is None:  # pragma: no cover
+        raise RuntimeError("pallas tpu grid specs unavailable")
+    Q, L = gids.shape
+    D = q.shape[1]
+    W = lq.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q, L),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda i, j, ids_ref, lens_ref: (i, 0)),
+            pl.BlockSpec((1, W), lambda i, j, ids_ref, lens_ref: (i, 0)),
+            pl.BlockSpec((1, D),
+                         lambda i, j, ids_ref, lens_ref: (ids_ref[i, j], 0)),
+            pl.BlockSpec((1, W),
+                         lambda i, j, ids_ref, lens_ref: (ids_ref[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, ids_ref, lens_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        functools.partial(_seg_gather_kernel, metric=metric),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Q, L), jnp.float32),
+        interpret=interpret,
+    )(gids.astype(jnp.int32), lens.astype(jnp.int32), q, lq, x, lxw)
+
+
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))
 def gather_distance_pallas(q_row, x, ids, *, metric: str = "l2",
                            interpret: bool = True):

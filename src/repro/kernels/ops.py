@@ -17,7 +17,8 @@ import numpy as np
 from ..core.labels import masks_to_int32_words
 from . import ref
 from .filtered_topk import filtered_topk_pallas
-from .gather_distance import gather_distance_pallas
+from .gather_distance import (gather_distance_pallas,
+                              segmented_gather_distance_pallas)
 from .masked_distance import LABEL_WORDS, masked_distance_pallas
 
 
@@ -82,6 +83,109 @@ def filtered_topk(q, x, lq_words, lx_words, *, k: int, metric: str = "l2",
     return vals, idxs
 
 
+# Candidate-span chunk for the segmented arena scan: bounds the gathered
+# [Q, chunk, D] working set (and, on the pallas path, the SMEM id table)
+# while keeping the chunk count static per (k, bucket, lmax) program.
+SEG_CHUNK = 2048
+
+
+@functools.partial(jax.jit, static_argnames=("k", "lmax", "chunk", "metric",
+                                             "backend", "interpret"))
+def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *,
+                    k: int, lmax: int, chunk: int, metric: str, backend: str,
+                    interpret: bool):
+    """Chunked segmented arena top-k — bit-identical to the unchunked
+    oracle ``ref.segmented_filtered_topk``.
+
+    The candidate span [0, lmax) is scanned in static chunks with a running
+    (vals, pos) top-k.  The merge concatenates [running, chunk] before
+    ``lax.top_k``: running entries hold strictly earlier positions, and
+    XLA's TopK breaks value ties toward the lower concatenation index, so
+    the (distance, position) lexicographic order of the full-span top-k is
+    preserved chunk by chunk (the running pool stays sorted by exactly that
+    order — the induction the parity tests pin down).
+    """
+    Q = q.shape[0]
+    R = rows_concat.shape[0]
+    if lmax % chunk:
+        raise ValueError(f"chunk {chunk} must divide lmax {lmax}")
+    if metric not in ("l2", "ip"):
+        raise ValueError(f"unknown metric {metric!r}")
+    qn = jnp.sum(q * q, axis=1)
+    init = (jnp.full((Q, k), jnp.inf, jnp.float32),
+            jnp.full((Q, k), lmax, jnp.int32))
+
+    def body(carry, c0):
+        run_v, run_p = carry
+        pos = c0 + jnp.arange(chunk, dtype=jnp.int32)          # [C]
+        valid = pos[None, :] < lens[:, None]                   # [Q, C]
+        p = jnp.clip(starts[:, None] + pos[None, :], 0, max(R - 1, 0))
+        gid = rows_concat[jnp.where(valid, p, 0)]              # [Q, C]
+        if backend == "pallas":
+            d = segmented_gather_distance_pallas(
+                q, lq, ax, alw, gid, jnp.clip(lens - c0, 0, chunk),
+                metric=metric, interpret=interpret)
+        else:
+            xg = ax[gid]                                       # [Q, C, D]
+            # explicit multiply + minor-axis reduce, NOT a dot_general: XLA
+            # tiles batched contractions differently per batch size, which
+            # perturbs f32 accumulation order at ULP level — a reduce over
+            # the contiguous minor dim is per-element and therefore
+            # batch-composition independent, which the executor's
+            # bit-parity contract (batched == looped) depends on
+            ip = jnp.sum(xg * q[:, None, :], axis=-1)
+            d = -ip if metric == "ip" else qn[:, None] - 2.0 * ip + axn[gid]
+            keep = jnp.all((lq[:, None, :] & alw[gid]) == lq[:, None, :],
+                           axis=-1)
+            d = jnp.where(keep & valid, d, jnp.inf)
+        cat_v = jnp.concatenate([run_v, d], axis=1)
+        cat_p = jnp.concatenate(
+            [run_p, jnp.broadcast_to(pos[None, :], (Q, chunk))], axis=1)
+        neg, sel = jax.lax.top_k(-cat_v, k)
+        return (-neg, jnp.take_along_axis(cat_p, sel, axis=1)), None
+
+    (vals, pos), _ = jax.lax.scan(body, init,
+                                  jnp.arange(0, lmax, chunk, dtype=jnp.int32))
+    empty = jnp.isinf(vals)
+    pos = jnp.where(empty, lmax, pos)
+    vals = jnp.where(empty, jnp.float32(jnp.inf), vals)
+    # resolve global ids inside the traced program (empty slot -> the
+    # arena-cardinality sentinel), so the executor never touches ids on
+    # host and warmup covers the whole path
+    gid = jnp.where(empty, ax.shape[0],
+                    rows_concat[jnp.clip(starts[:, None] + pos, 0,
+                                         max(R - 1, 0))])
+    return vals, pos.astype(jnp.int32), gid.astype(jnp.int32)
+
+
+def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
+                   lmax: int, metric: str = "l2", backend: str = "ref",
+                   chunk: int | None = None):
+    """Single-dispatch segmented arena search (DESIGN.md §3).
+
+    One traced program per (k, Q-bucket, lmax, metric, backend) serves every
+    routed group whose candidate segment fits in ``lmax`` — the batched
+    executor's arena hot path.  ``backend="ref"`` gathers with ``jnp.take``
+    (XLA-fused, the CPU/CI configuration); ``backend="pallas"`` uses the
+    scalar-prefetch DMA gather kernel (compiled on TPU).
+
+    Returns (vals [Q, k] asc, pos [Q, k] int32 positions RELATIVE to each
+    query's segment (pos == ``lmax`` ⇒ empty slot), gid [Q, k] int32
+    GLOBAL arena row ids (gid == N ⇒ empty slot)).  Views consume ``pos``
+    (their protocol speaks local ids); the batched executor consumes
+    ``gid`` directly — no host-side remap exists anywhere on the path.
+    """
+    if backend == "pallas":
+        ax = _pad_axis(ax, 1, 128)
+        q = _pad_axis(q, 1, 128)
+    return _segmented_topk(
+        jnp.asarray(q, jnp.float32), jnp.asarray(lq, jnp.int32),
+        ax, alw, axn, rows_concat,
+        jnp.asarray(starts, jnp.int32), jnp.asarray(lens, jnp.int32),
+        k=k, lmax=lmax, chunk=chunk or min(SEG_CHUNK, lmax), metric=metric,
+        backend=backend, interpret=default_interpret())
+
+
 def gather_distance(q_row, x, ids, *, metric: str = "l2",
                     backend: str = "pallas") -> jnp.ndarray:
     """[D], [N, D], [B] -> [B] f32; ids < 0 -> +inf (padding)."""
@@ -95,11 +199,13 @@ def gather_distance(q_row, x, ids, *, metric: str = "l2",
 
 __all__ = [
     "LABEL_WORDS",
+    "SEG_CHUNK",
     "default_interpret",
     "filtered_topk",
     "gather_distance",
     "masked_distance",
     "prepare_label_words",
+    "segmented_topk",
 ]
 
 

@@ -63,6 +63,53 @@ def filtered_topk(q, x, lq_words, lx_words, k: int, metric: str = "l2"):
     return vals, idxs.astype(jnp.int32)
 
 
+def segmented_filtered_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
+                            k: int, lmax: int, metric: str = "l2"):
+    """Segmented arena top-k oracle (DESIGN.md §3): one batch, one program.
+
+    Every query carries its own candidate segment — a ``(start, len)`` span
+    of ``rows_concat``, the engine's CSR table of arena row ids.  The oracle
+    gathers each query's candidate rows from the shared arena, fuses the
+    label filter, and takes a position-stable top-k:
+
+      * ``q`` [Q, D] f32, ``lq`` [Q, W] i32 — queries + label words;
+      * ``ax`` [N, D] f32, ``alw`` [N, W] i32, ``axn`` [N] f32 — the arena
+        (vectors, label words, precomputed squared row norms);
+      * ``rows_concat`` [R] i32 — concatenated per-index arena row ids;
+      * ``starts``/``lens`` [Q] i32 — each query's segment; ``lmax`` bounds
+        every ``len`` in the batch (the static candidate-span shape).
+
+    Returns (vals [Q, k] asc, pos [Q, k] int32 segment-RELATIVE positions;
+    pos == ``lmax`` ⇒ empty slot).  Ties break toward the lower position —
+    segments list arena rows in ascending global order, so this reproduces
+    the flat sub-index scan's lower-local-id (= lower-global-id) tie-break.
+    """
+    Q = q.shape[0]
+    R = rows_concat.shape[0]
+    pos = jnp.arange(lmax, dtype=jnp.int32)[None, :]          # [1, L]
+    valid = pos < lens[:, None]                               # [Q, L]
+    p = jnp.clip(starts[:, None] + pos, 0, max(R - 1, 0))
+    gid = rows_concat[jnp.where(valid, p, 0)]                 # [Q, L]
+    xg = ax[gid]                                              # [Q, L, D]
+    # multiply + minor-axis reduce (not dot_general): batch-composition
+    # independent f32 accumulation — see kernels.ops._segmented_topk
+    ip = jnp.sum(xg * q[:, None, :], axis=-1)
+    if metric == "ip":
+        d = -ip
+    else:
+        qn = jnp.sum(q * q, axis=1)
+        d = qn[:, None] - 2.0 * ip + axn[gid]
+    keep = jnp.all((lq[:, None, :] & alw[gid]) == lq[:, None, :], axis=-1)
+    d = jnp.where(keep & valid, d, FILTERED)
+    if k > lmax:   # fewer candidates than requested: pad the span
+        d = jnp.pad(d, ((0, 0), (0, k - lmax)), constant_values=jnp.inf)
+    neg, sel = jax.lax.top_k(-d, k)
+    vals = -neg
+    sel = jnp.where(jnp.isinf(vals), lmax, sel)
+    vals = jnp.where(jnp.isinf(vals), FILTERED, vals)
+    return vals, sel.astype(jnp.int32)
+
+
 def gather_distance(q_row, x, ids, metric: str = "l2") -> jnp.ndarray:
     """Graph-search hot loop oracle: distances from one query to X[ids].
 

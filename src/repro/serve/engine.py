@@ -143,7 +143,7 @@ class RetrievalAugmentedEngine:
 
     def __init__(self, decoder: BatchedDecoder, eli_engine,
                  embed_fn: Callable[[np.ndarray], np.ndarray] | None = None,
-                 k: int = 5, min_bucket: int = 8):
+                 k: int = 5, min_bucket: int = 8, warmup: bool = False):
         self.decoder = decoder
         self.eli = eli_engine
         self.k = k
@@ -156,6 +156,21 @@ class RetrievalAugmentedEngine:
         spec = decoder.spec
         self._hidden = jax.jit(
             lambda p, t, pos: self._mean_hidden(p, t, pos, spec))
+        # pre-trace the retrieval dispatch tables so the first request
+        # batch doesn't pay tracing + XLA compilation (the engine's cold
+        # path; see LabelHybridEngine.warmup and BENCH_exp9.json).  Warm
+        # every power-of-two Q-bucket a serve() batch can induce — from
+        # the executor's min_bucket floor up to the decoder's slot count
+        # (the natural request-batch size) — not just the floor
+        if warmup:
+            from ..index.base import pow2_bucket
+            b = pow2_bucket(min_bucket)
+            top = pow2_bucket(max(min_bucket, decoder.B))
+            buckets = []
+            while b <= top:
+                buckets.append(b)
+                b *= 2
+            eli_engine.warmup([k], buckets)
 
     @staticmethod
     def _mean_hidden(params, tokens, positions, spec):
@@ -182,9 +197,11 @@ class RetrievalAugmentedEngine:
     def serve(self, requests: Sequence[Request]) -> list[Request]:
         # 1. retrieval (one ELI sub-index per request, paper Exp-3) through
         #    the batched executor: the whole request batch is routed in one
-        #    vectorized pass and grouped per sub-index, so retrieval costs
-        #    one jit-cached search per touched index, not one per request —
-        #    for ANY registered backend (flat/ivf/graph/distributed all
+        #    vectorized pass; on arena-native backends every touched
+        #    sub-index is a segment of ONE shared arena and the batch costs
+        #    O(#span tiers) segmented-kernel launches total, on
+        #    private-storage backends one jit-cached search per touched
+        #    index — never one per request (all registered backends
         #    implement the bucketed search_padded contract)
         maxS = max(r.prompt.shape[0] for r in requests)
         prompts = np.stack([np.pad(r.prompt, (0, maxS - r.prompt.shape[0]))

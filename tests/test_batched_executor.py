@@ -102,7 +102,11 @@ def test_bucket_caches_isolated_across_engines_and_k():
     """Regression for the bucket-cache bug class (ISSUE 2): two engines
     with different k sharing one process must not cross-contaminate
     dispatch caches — the key must pin index identity (by living on the
-    instance, see index.base.bucket_cache), k, and bucket."""
+    instance, see index.base.bucket_cache), k, and bucket.  Under the
+    arena (ISSUE 3) the batched hot path is one engine-level segmented
+    program (jit-keyed on k + shapes, contamination-free by construction);
+    the per-instance tables now belong to the per-view looped/direct path,
+    so that is where isolation is asserted."""
     from repro.core import generate_label_sets, generate_query_label_sets
 
     rng = np.random.default_rng(5)
@@ -119,6 +123,10 @@ def test_bucket_caches_isolated_across_engines_and_k():
     d1b, i1b = e1.search_batched(qv, qls, 3)
     np.testing.assert_array_equal(i1, i1b)
     np.testing.assert_array_equal(d1, d1b)
+    # both engines agree with their reference loops (which dispatch through
+    # the per-view bucket tables — populating them)
+    np.testing.assert_array_equal(i1, e1.search_looped(qv, qls, 3)[1])
+    np.testing.assert_array_equal(i2, e2.search_looped(qv, qls, 7)[1])
     seen = 0
     for key in e1.indexes:
         c1 = getattr(e1.indexes[key], "_bucket_fns", None)
@@ -126,10 +134,7 @@ def test_bucket_caches_isolated_across_engines_and_k():
         if not c1 and not c2:
             continue
         seen += 1
-        assert c1 is not c2                      # per-instance tables
-        assert all(kk[0] == 3 for kk in c1), c1  # each pins its own k
-        assert all(kk[0] == 7 for kk in c2), c2
+        assert (c1 or {}) is not (c2 or {})      # per-instance tables
+        assert all(kk[0] == 3 for kk in (c1 or {})), c1  # each pins its own k
+        assert all(kk[0] == 7 for kk in (c2 or {})), c2
     assert seen                                  # bucketed path was taken
-    # and both engines still agree with their reference loops
-    np.testing.assert_array_equal(i1, e1.search_looped(qv, qls, 3)[1])
-    np.testing.assert_array_equal(i2, e2.search_looped(qv, qls, 7)[1])

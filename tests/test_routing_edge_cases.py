@@ -1,0 +1,95 @@
+"""Routing edge cases (ISSUE 3 satellite): route_many vs route parity on
+adversarial unseen keys, and the fallback-route cache's bounded-growth
+behavior (overflow stops memoization, never correctness)."""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (EMPTY_KEY, LabelHybridEngine, LabelWorkloadConfig,
+                        encode_label_set, generate_label_sets, key_contains,
+                        mask_key)
+
+
+@pytest.fixture(scope="module")
+def eng():
+    rng = np.random.default_rng(77)
+    N = 1500
+    x = rng.standard_normal((N, 16)).astype(np.float32)
+    ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=10, seed=9))
+    return LabelHybridEngine.build(x, ls, mode="eis", c=0.25, backend="flat")
+
+
+def _adversarial_keys(eng, max_size=6):
+    """Label combinations biased to be OUTSIDE the selection workload:
+    every pair/triple/... over the universe, largest first, plus the full
+    universe and singleton/empty extremes."""
+    labels = list(range(10))
+    combos = [tuple(labels)]
+    for size in range(max_size, 0, -1):
+        combos.extend(itertools.combinations(labels, size))
+    combos.append(())
+    return combos
+
+
+def test_route_many_matches_route_on_adversarial_unseen_keys(eng):
+    combos = _adversarial_keys(eng)
+    seen = set(eng.selection.assignment)
+    unseen = [c for c in combos
+              if mask_key(encode_label_set(c)) not in seen]
+    assert len(unseen) > 20, "fixture must exercise the fallback path"
+    got = eng.route_many(combos)
+    want = [eng.route(c) for c in combos]
+    assert got == want
+    # fallback invariant: the routed key is contained in the query key
+    # (the index's closure is a superset of the query's filtered set)
+    for c, key in zip(combos, got):
+        assert key_contains(mask_key(encode_label_set(c)), key)
+
+
+def test_route_many_dedupes_repeats_within_batch(eng):
+    batch = [(0, 1, 2, 3, 4, 5)] * 7 + [(1, 3, 5, 7, 9)] * 5
+    got = eng.route_many(batch)
+    assert len(set(got[:7])) == 1 and len(set(got[7:])) == 1
+    assert got[0] == eng.route(batch[0])
+    assert got[7] == eng.route(batch[7])
+
+
+def test_route_cache_overflow_stops_growing_but_stays_correct(eng):
+    """When _ROUTE_CACHE_MAX is hit the cache must stop growing (bounded
+    host memory for long-lived servers) while batches keep routing exactly
+    like route()."""
+    eng._route_cache.clear()
+    eng._ROUTE_CACHE_MAX = 4            # instance attr shadows the class's
+    combos = [c for c in _adversarial_keys(eng)
+              if mask_key(encode_label_set(c)) not in eng.selection.assignment]
+    assert len(combos) > 16
+    got = eng.route_many(combos)
+    assert len(eng._route_cache) <= 4
+    assert got == [eng.route(c) for c in combos]
+    # overflow keys are re-routed per batch — still correct the second time
+    got2 = eng.route_many(combos)
+    assert got2 == got
+    assert len(eng._route_cache) <= 4
+    # cached subset agrees with route()
+    for qkey, routed in eng._route_cache.items():
+        assert key_contains(qkey, routed)
+    del eng._ROUTE_CACHE_MAX            # restore class default
+    eng._route_cache.clear()
+
+
+def test_route_cache_hits_are_reused(eng):
+    eng._route_cache.clear()
+    q = [(0, 2, 4, 6, 8)]
+    first = eng.route_many(q)
+    assert len(eng._route_cache) <= 1
+    if eng._route_cache:                # key was unseen: second pass = hit
+        second = eng.route_many(q)
+        assert second == first
+
+
+def test_empty_query_routes_to_top(eng):
+    assert eng.route(()) == EMPTY_KEY
+    assert eng.route_many([()]) == [EMPTY_KEY]

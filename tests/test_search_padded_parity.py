@@ -192,13 +192,31 @@ def test_ivf_padded_matches_sequential_probe_oracle(cfg, k):
 
 
 def test_padded_path_populates_bucket_caches(backend_engine, data):
-    """Native backends must dispatch through per-(index, k, bucket) tables
-    (the contract in ``index.base``) — and reuse them on a repeat batch."""
+    """Private-storage backends must dispatch through per-(index, k,
+    bucket) tables (the contract in ``index.base``) — and reuse them on a
+    repeat batch.  Arena-native backends (flat) batch through ONE
+    engine-level segmented program instead; their per-view tables belong
+    to the looped/direct path (already populated by the parity tests
+    above) and must be equally stable under repeat batches."""
     name, eng = backend_engine
     eng.search_batched(data["qv"][:64], data["qls"][:64], 4)
     sizes = {key: len(ix._bucket_fns) for key, ix in eng.indexes.items()
              if getattr(ix, "_bucket_fns", None)}
-    assert sizes, f"{name}: bucketed path never taken"
+    if eng.arena is not None:
+        # a k no other test in this session uses: the call below MUST add
+        # segmented-program traces (proving batched dispatches through it)
+        # and a repeat must add none — a per-call delta, not a vacuous
+        # process-global cache-size check
+        from repro.kernels import ops
+        before = ops._segmented_topk._cache_size()
+        eng.search_batched(data["qv"][:3], data["qls"][:3], 9)
+        mid = ops._segmented_topk._cache_size()
+        assert mid > before, (
+            f"{name}: batched path never hit the segmented arena program")
+        eng.search_batched(data["qv"][:3], data["qls"][:3], 9)
+        assert ops._segmented_topk._cache_size() == mid
+    else:
+        assert sizes, f"{name}: bucketed path never taken"
     # every dispatch entry is keyed by (k, bucket, ...) — backends that
     # route plain search() through the same table add non-power-of-two
     # batch shapes, which is fine: the key still pins k and the shape

@@ -1,13 +1,20 @@
 """One function per paper table/figure.  Prints ``name,us_per_call,derived``
-CSV.  ``python -m benchmarks.run [--only fig6,exp1,...]``"""
+CSV.  ``python -m benchmarks.run [--only fig6,exp1,...] [--tiny]``
+
+``--tiny`` shrinks benchmarks that support it (CI smoke: exp10 runs this
+way from scripts/ci_tier1.sh so the streaming path can't silently rot; a
+tiny run writes its JSON artifact to a temp dir, never over the recorded
+BENCH_*.json)."""
 import argparse
+import inspect
 import sys
 import time
 import traceback
 
 from . import (exp1_qps_recall, exp2_index_cost, exp3_shard_scaling,
                exp5_distributions, exp6_label_universe, exp7_vs_optimal,
-               exp8_adaptive, exp9_backends, fig6_elastic_factor)
+               exp8_adaptive, exp9_backends, exp10_streaming,
+               fig6_elastic_factor)
 
 ALL = {
     "fig6": fig6_elastic_factor.run,
@@ -19,12 +26,14 @@ ALL = {
     "exp7": exp7_vs_optimal.run,
     "exp8": exp8_adaptive.run,
     "exp9": exp9_backends.run,
+    "exp10": exp10_streaming.run,
 }
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--tiny", action="store_true")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(ALL)
     print("name,us_per_call,derived")
@@ -32,7 +41,11 @@ def main() -> int:
     for name in names:
         t0 = time.time()
         try:
-            ALL[name]()
+            kwargs = {}
+            if args.tiny and "tiny" in inspect.signature(
+                    ALL[name]).parameters:
+                kwargs["tiny"] = True
+            ALL[name](**kwargs)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failed.append(name)

@@ -37,3 +37,25 @@ engine2 = LabelHybridEngine.build(vectors, label_sets, mode="sis",
 st2 = engine2.stats()
 print(f"SIS under 2x budget: c*={st2.achieved_c:.3f}, "
       f"{st2.total_entries} entries")
+
+# 6. streaming mutations (DESIGN.md §3.6): the corpus is rarely static.
+#    insert → search → delete → flush, with search always bit-identical
+#    to an engine rebuilt from scratch on the surviving rows.
+from repro.core import StreamingEngine
+
+stream = StreamingEngine(engine)
+arrivals = VectorLabelDataset(n=100, dim=32, n_labels=12, seed=1)
+new_vecs, new_labels = arrivals.generate()
+ids = stream.insert(new_vecs, new_labels)          # ids continue the stream
+dists, got = stream.search(queries[:8], query_labels[:8], k=10)
+stream.delete(ids[:50])                            # tombstone half of them
+stream.delete([0, 1])                              # and two original rows
+dists, got = stream.search(queries[:8], query_labels[:8], k=10)
+st3 = stream.stats()
+print(f"streaming: {st3.live_rows} live rows, {st3.tombstoned_rows} "
+      f"tombstoned, {st3.delta_rows} in the delta "
+      f"(arena v{st3.arena_version})")
+report = stream.flush()                            # compact: fold + renumber
+print(f"flush folded {report['folded_rows']} delta rows, dropped "
+      f"{report['dropped_rows']} in {report['seconds']*1e3:.0f} ms "
+      f"(vs full rebuild: see BENCH_exp10.json)")

@@ -10,4 +10,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -q -p no:randomly --durations=10 "$@"
+python -m pytest -q -p no:randomly --durations=10 "$@"
+# streaming-path smoke (ISSUE 4): tiny-sized exp10 exercises insert/delete/
+# flush + warmup end to end so the mutation subsystem can't silently rot;
+# --tiny writes its JSON to a temp dir, never over the recorded artifact
+python -m benchmarks.run --only exp10 --tiny

@@ -8,6 +8,8 @@ Public surface:
   * sis      — fixed-space selection via ratio binary search (§5)
   * estimator— sampled closure sizes for large scale (§4.2)
   * engine   — LabelHybridEngine: build/search over physical index backends
+  * stream   — StreamingEngine: insert/delete/flush mutations over a
+               LabelHybridEngine (delta arena + tombstones, DESIGN.md §3.6)
 """
 from .labels import (  # noqa: F401
     MAX_LABELS,
@@ -44,4 +46,5 @@ from .engine import (  # noqa: F401
 )
 
 from .adaptive import (AdaptiveEngine, WorkloadMonitor,  # noqa: F401,E402
-                       weighted_select)
+                       selection_from_weighted, weighted_select)
+from .stream import StreamingEngine  # noqa: F401,E402

@@ -106,6 +106,16 @@ def weighted_select(
                              rounds=rounds)
 
 
+def selection_from_weighted(sel: WeightedSelection) -> EISResult:
+    """EISResult view of a WeightedSelection — the currency
+    ``LabelHybridEngine.apply_selection`` / ``rebase`` speak.  Shared by
+    :meth:`AdaptiveEngine.reselect` and the streaming engine's
+    compaction-piggybacked reselect (``core.stream``, DESIGN.md §3.6)."""
+    return EISResult(selected=dict(sel.selected), cost=sel.space,
+                     rounds=list(sel.rounds), c=0.0,
+                     assignment=dict(sel.assignment))
+
+
 @dataclasses.dataclass
 class WorkloadMonitor:
     """EWMA query-key frequency tracker with total-variation drift."""
@@ -173,9 +183,7 @@ class AdaptiveEngine:
         # segment table and the vectorized routing tables are refreshed
         # atomically (the pre-arena code patched eng.indexes/eng.rows by
         # hand and left the route mask matrix stale)
-        eng.apply_selection(EISResult(
-            selected=dict(sel.selected), cost=sel.space,
-            rounds=sel.rounds, c=0.0, assignment=sel.assignment))
+        eng.apply_selection(selection_from_weighted(sel))
         self.monitor.snapshot()
         rec = {"added": len(added), "dropped": len(dropped),
                "space": sel.space, "expected_cost": sel.expected_cost,

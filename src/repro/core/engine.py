@@ -59,6 +59,14 @@ class EngineStats:
     nbytes: int                  # arena + segment table + private storage
     arena_nbytes: int = 0        # shared-arena share of nbytes (0 = no arena)
     segment_nbytes: int = 0      # CSR row-id table share of nbytes
+    # streaming-mutation surface (DESIGN.md §3.6): a static engine reports
+    # live_rows == n and zeros elsewhere; core.stream.StreamingEngine fills
+    # the tombstone/delta breakdown
+    live_rows: int = 0           # rows a search can return (base + delta)
+    tombstoned_rows: int = 0     # deleted-but-not-yet-compacted rows
+    delta_rows: int = 0          # rows resident in the delta arena
+    arena_version: int = 0       # mutation/compaction counter of the arena
+    delta_nbytes: int = 0        # delta-arena share of nbytes
 
 
 class LabelHybridEngine:
@@ -73,36 +81,68 @@ class LabelHybridEngine:
                  table: GroupTable, selection: EISResult,
                  sis_result: SISResult | None, backend: str, metric: str,
                  backend_params: dict, select_seconds: float):
-        self.vectors = np.ascontiguousarray(vectors, dtype=np.float32)
-        self.label_sets = list(label_sets)
-        self.table = table
-        self.selection = selection
         self.sis_result = sis_result
         self.backend = backend
         self.metric = metric
-
-        masks = encode_many(self.label_sets)
-        self.label_words = masks_to_int32_words(masks)
-
-        check_global_id_contract(len(self.label_sets))
-        t0 = time.perf_counter()
         builder = get_index_builder(backend)
         self.backend_params = dict(backend_params)
         self._arena_native = hasattr(builder, "build_view")
         self._seg_backend = backend_params.get("kernel_backend", "ref")
 
-        # Arena: the dataset's vectors/label words uploaded ONCE; views
-        # reference them per segment.  Private-storage backends skip the
-        # upload (their build copies rows as before).
-        self.arena: Arena | None = (
-            Arena.from_host(self.vectors, self.label_words)
-            if self._arena_native else None)
         self.indexes: dict[tuple[int, ...], object] = {}
         self.rows: dict[tuple[int, ...], np.ndarray] = {}
         self.segments: dict[tuple[int, ...], tuple[int, int]] = {}
-        self.apply_selection(selection)
+        t0 = time.perf_counter()
+        self.rebase(vectors, label_sets, table, selection)
         self._build_seconds = time.perf_counter() - t0
         self._select_seconds = select_seconds
+
+    def rebase(self, vectors: np.ndarray,
+               label_sets: Sequence[tuple[int, ...]], table: GroupTable,
+               selection: EISResult, *, arena: Arena | None = None,
+               label_words: np.ndarray | None = None,
+               rows_hint: Mapping[tuple[int, ...], np.ndarray]
+               | None = None) -> None:
+        """Swap the dataset under the engine and rematerialize — the single
+        home of dataset installation (``__init__`` is a rebase from
+        nothing; streaming compaction folds tombstones + delta rows into a
+        fresh arena and rebases through here, DESIGN.md §3.6).
+
+        Every retained index/row table is dropped first: they are keyed to
+        the OLD row numbering, and reusing them across a rebase would
+        silently serve stale members (``apply_selection``'s incremental
+        reuse is only sound while the dataset is fixed).  ``arena`` lets
+        the caller install an already-folded device-resident arena (no
+        host re-upload); ``label_words`` skips the host re-encode when the
+        caller already holds the device-layout words; ``rows_hint`` seeds
+        per-key member lists the caller already computed in the NEW row
+        numbering (streaming compaction remaps the old segments instead of
+        paying ``closure_members`` per key — the caller vouches they equal
+        what the new table would produce).
+        """
+        self.vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        self.label_sets = list(label_sets)
+        self.table = table
+        if label_words is None:
+            label_words = masks_to_int32_words(encode_many(self.label_sets))
+        self.label_words = np.ascontiguousarray(label_words, dtype=np.int32)
+        check_global_id_contract(len(self.label_sets))
+
+        # stale across a dataset swap — apply_selection must rebuild all
+        # (rows_hint entries are already in the new numbering and are the
+        # one sanctioned carry-over)
+        self.indexes, self.segments = {}, {}
+        self.rows = dict(rows_hint) if rows_hint is not None else {}
+        # Arena: the dataset's vectors/label words uploaded ONCE; views
+        # reference them per segment.  Private-storage backends skip the
+        # upload (their build copies rows as before).
+        if not self._arena_native:
+            self.arena: Arena | None = None
+        else:
+            self.arena = (arena if arena is not None
+                          else Arena.from_host(self.vectors,
+                                               self.label_words))
+        self.apply_selection(selection)
 
     def apply_selection(self, selection: EISResult) -> None:
         """(Re)materialize the engine for ``selection`` — the single home
@@ -208,6 +248,13 @@ class LabelHybridEngine:
         return LabelHybridEngine(vectors, label_sets, table, selection,
                                  sis_result, backend, metric, backend_params,
                                  select_seconds)
+
+    @property
+    def sentinel(self) -> int:
+        """The empty-slot id: real ids live in [0, sentinel).  For a static
+        engine this is the dataset cardinality; a streaming engine's grows
+        with inserts (``core.stream.StreamingEngine.sentinel``)."""
+        return len(self.label_sets)
 
     # -- routing --------------------------------------------------------------
     def route(self, query_label_set: tuple[int, ...]) -> tuple[int, ...]:
@@ -333,27 +380,12 @@ class LabelHybridEngine:
                 raise TypeError(f"arena-native backend {self.backend!r} "
                                 f"takes no search params; got "
                                 f"{sorted(search_params)}")
-            # partition by candidate-span tier; sort each tier by segment
-            # start so same-key queries stay adjacent (gather locality)
-            tiers: dict[int, list[int]] = {}
-            for qi, key in enumerate(routed):
-                tiers.setdefault(pow2_bucket(self.segments[key][1]),
-                                 []).append(qi)
-            for lmax in sorted(tiers):
-                qids = sorted(tiers[lmax],
-                              key=lambda qi: self.segments[routed[qi]][0])
-                g = len(qids)
-                bucket = pow2_bucket(g, min_bucket)
-                qp = np.zeros((bucket, queries.shape[1]), np.float32)
-                qp[:g] = queries[qids]
-                lp = np.zeros((bucket, qwords.shape[1]), np.int32)
-                lp[:g] = qwords[qids]
-                seg = np.zeros((2, bucket), np.int32)   # starts / lens
-                seg[:, :g] = np.array(
-                    [self.segments[routed[qi]] for qi in qids], np.int32).T
+            for qids, qp, lp, starts, lens, lmax, g in \
+                    self.arena_tier_batches(queries, qwords, routed,
+                                            min_bucket):
                 vals, _, gi = _kernel_ops.segmented_topk(
                     qp, lp, self.arena.vectors, self.arena.label_words,
-                    self.arena.norms, self._rows_concat_dev, seg[0], seg[1],
+                    self.arena.norms, self._rows_concat_dev, starts, lens,
                     k=k, lmax=lmax, metric=self.metric,
                     backend=self._seg_backend)
                 # global ids resolved inside the traced program (sentinel n
@@ -392,6 +424,40 @@ class LabelHybridEngine:
             # sentinel n everywhere, nothing to map
             out_d[qids] = np.asarray(d)[:g]
         return out_d, out_i
+
+    def arena_tier_batches(self, queries: np.ndarray, qwords: np.ndarray,
+                           routed: Sequence[tuple[int, ...]],
+                           min_bucket: int = 1):
+        """Partition a routed batch by candidate-span tier and yield the
+        padded segmented-program operands per tier:
+
+            (qids, qp, lp, starts, lens, lmax, g)
+
+        — queries sorted by segment start within a tier (gather locality),
+        zero-padded to the power-of-two Q-bucket, with each query's
+        ``(start, len)`` CSR segment.  The single home of the arena
+        executor's partition+padding convention: ``search_batched`` and the
+        streaming engine's tombstone-aware executor
+        (``core.stream.StreamingEngine``) both iterate it, so the two
+        executors run the identical tier/bucket decomposition by
+        construction."""
+        tiers: dict[int, list[int]] = {}
+        for qi, key in enumerate(routed):
+            tiers.setdefault(pow2_bucket(self.segments[key][1]),
+                             []).append(qi)
+        for lmax in sorted(tiers):
+            qids = sorted(tiers[lmax],
+                          key=lambda qi: self.segments[routed[qi]][0])
+            g = len(qids)
+            bucket = pow2_bucket(g, min_bucket)
+            qp = np.zeros((bucket, queries.shape[1]), np.float32)
+            qp[:g] = queries[qids]
+            lp = np.zeros((bucket, qwords.shape[1]), np.int32)
+            lp[:g] = qwords[qids]
+            seg = np.zeros((2, bucket), np.int32)   # starts / lens
+            seg[:, :g] = np.array(
+                [self.segments[routed[qi]] for qi in qids], np.int32).T
+            yield qids, qp, lp, seg[0], seg[1], lmax, g
 
     def search_looped(self, queries: np.ndarray,
                       query_label_sets: Sequence[tuple[int, ...]], k: int,
@@ -505,6 +571,9 @@ class LabelHybridEngine:
                     + sum(ix.nbytes for ix in self.indexes.values())),
             arena_nbytes=arena_nbytes,
             segment_nbytes=segment_nbytes,
+            live_rows=len(self.label_sets),
+            arena_version=(self.arena.version
+                           if self.arena is not None else 0),
         )
 
 

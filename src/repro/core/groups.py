@@ -94,6 +94,76 @@ class GroupTable:
         garr = {k: np.asarray(v, dtype=np.int64) for k, v in groups.items()}
         return GroupTable(n=len(label_sets), groups=garr, closure_sizes={})
 
+    def compacted(self, alive: np.ndarray,
+                  appended_label_sets: Sequence[tuple[int, ...]],
+                  add_new_candidates: bool = True) -> "GroupTable":
+        """Incremental table for a streaming compaction (DESIGN.md §3.6).
+
+        The new table's rows are the surviving old rows (``alive`` bool
+        mask; relative order preserved, renumbered 0..n_alive-1) followed
+        by ``appended_label_sets`` (the live delta rows).  Instead of
+        re-grouping the whole dataset and re-running the O(Σ 2^|G|) subset
+        expansion, group membership is remapped with one numpy pass and
+        closure sizes are adjusted arithmetically: −dead per subset of each
+        group that lost rows, +appended per subset of each appended key.
+        Only *brand-new* candidate keys (subsets first introduced by an
+        appended label set) pay a fresh closure scan over the groups.
+
+        ``add_new_candidates=False`` keeps the candidate set fixed — the
+        setting for tables built over an explicit (restricted) query
+        workload, where appended subsets must not widen the candidate set.
+        """
+        alive = np.asarray(alive, dtype=bool)
+        if alive.shape[0] != self.n:
+            raise ValueError(f"alive mask has {alive.shape[0]} rows, "
+                             f"table has {self.n}")
+        n_alive = int(alive.sum())
+        remap = np.full(self.n, -1, dtype=np.int64)
+        remap[alive] = np.arange(n_alive)
+
+        closure = dict(self.closure_sizes)
+        groups2: dict[tuple[int, ...], np.ndarray] = {}
+        for gkey, rows in self.groups.items():
+            kept = remap[rows]
+            kept = kept[kept >= 0]          # ascending order is preserved
+            dead = rows.size - kept.size
+            if dead:
+                for sub in key_subsets(gkey):
+                    if sub in closure:
+                        closure[sub] -= dead
+            if kept.size:
+                groups2[gkey] = kept
+
+        app: dict[tuple[int, ...], list[int]] = {}
+        for j, ls in enumerate(appended_label_sets):
+            key = mask_key(encode_label_set(tuple(ls)))
+            app.setdefault(key, []).append(n_alive + j)
+        fresh: list[tuple[int, ...]] = []
+        for gkey, ids in app.items():
+            arr = np.asarray(ids, dtype=np.int64)
+            groups2[gkey] = (np.concatenate([groups2[gkey], arr])
+                             if gkey in groups2 else arr)
+            for sub in key_subsets(gkey):
+                if sub in closure:
+                    closure[sub] += len(ids)
+                elif add_new_candidates:
+                    fresh.append(sub)
+        # brand-new candidates: exact closure over the final groups (rare —
+        # only label combinations the base dataset never exhibited)
+        for sub in fresh:
+            if sub in closure:
+                continue
+            closure[sub] = sum(int(g.size) for gk, g in groups2.items()
+                               if key_contains(gk, sub))
+
+        n_new = n_alive + len(appended_label_sets)
+        # mimic build(): keys no group contains any more stop being
+        # candidates; the top key always stays and is exact by arithmetic
+        closure = {k: v for k, v in closure.items()
+                   if v > 0 or k == EMPTY_KEY}
+        closure[EMPTY_KEY] = n_new
+        return GroupTable(n=n_new, groups=groups2, closure_sizes=closure)
+
     # -- queries ------------------------------------------------------------
     def closure_members(self, key: tuple[int, ...]) -> np.ndarray:
         """Row ids of S(L) — entries whose label set contains ``key``."""

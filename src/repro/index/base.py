@@ -63,6 +63,12 @@ row ids are int32, the empty-slot sentinel is the dataset cardinality
 ``n`` itself, and therefore ``n`` must be representable as int32 — see
 :func:`check_global_id_contract` / :func:`as_row_ids`, the single home of
 that rule (engine, benchmarks, and backends all import it).
+
+Streaming storage (DESIGN.md §3.6) also lives here: the :class:`Arena`
+carries a packed tombstone bitmap + mutation ``version``, and
+:class:`DeltaArena` is the fixed-capacity append buffer that absorbs
+inserts without touching the CSR segment table — both consumed by
+``core.stream.StreamingEngine``.
 """
 from __future__ import annotations
 
@@ -98,6 +104,24 @@ def as_row_ids(rows: np.ndarray, n: int) -> np.ndarray:
     return rows.astype(ROW_ID_DTYPE, copy=False)
 
 
+def tombstone_bytes(n_rows: int) -> int:
+    """Packed-bitmap size for ``n_rows`` tombstone bits (little bit order:
+    row r lives in bit ``r & 7`` of byte ``r >> 3`` — the layout the
+    segmented kernel's in-program mask gather assumes, and what
+    ``np.packbits(..., bitorder="little")`` produces)."""
+    return max(1, -(-n_rows // 8))
+
+
+def pack_tombstones(dead: np.ndarray, n_rows: int | None = None) -> np.ndarray:
+    """Host bool mask (1 = tombstoned) -> packed uint8 bitmap, padded to
+    ``tombstone_bytes(n_rows)`` so the device array's shape — and therefore
+    the traced search program — never changes across delete batches."""
+    n_rows = len(dead) if n_rows is None else n_rows
+    bits = np.zeros(8 * tombstone_bytes(n_rows), dtype=bool)
+    bits[:len(dead)] = dead
+    return np.packbits(bits, bitorder="little")
+
+
 @dataclasses.dataclass(frozen=True)
 class Arena:
     """Device-resident shared index storage (DESIGN.md §3).
@@ -108,19 +132,40 @@ class Arena:
     bytes instead of Σ|I|·(D+W)·4.  ``norms`` are the precomputed squared
     row norms consumed by the l2 distance form ``qn - 2·ip + xn`` — gathered
     per candidate, bit-identical to recomputing from the gathered row.
+
+    Streaming mutations (DESIGN.md §3.6): ``tombstones`` is a packed
+    ⌈N/8⌉-byte bitmap (1 = deleted row) that the segmented search program
+    fuses into its label filter — a deleted row simply stops passing, with
+    no change to the segment table or to any dispatch key.  ``version``
+    grows monotonically with every tombstone write and every compaction, so
+    snapshots/caches can detect staleness.  Both updates are functional
+    (:meth:`with_tombstones` returns a new Arena sharing the vector
+    storage); the un-mutated static engine keeps version 0 and an all-zero
+    bitmap, whose mask is the identity.
     """
     vectors: object        # jnp [N, D] f32
     label_words: object    # jnp [N, W] i32
     norms: object          # jnp [N] f32
+    tombstones: object = None   # jnp [⌈N/8⌉] u8; bit set ⇒ row deleted
+    version: int = 0            # bumps on every mutation / compaction
 
     @classmethod
     def from_host(cls, vectors: np.ndarray, label_words: np.ndarray) -> "Arena":
         import jax.numpy as jnp
-        check_global_id_contract(vectors.shape[0])
+        n = check_global_id_contract(vectors.shape[0])
         x = jnp.asarray(np.ascontiguousarray(vectors, dtype=np.float32))
         lw = jnp.asarray(np.ascontiguousarray(label_words, dtype=np.int32))
         return cls(vectors=x, label_words=lw,
-                   norms=jnp.sum(x * x, axis=1))
+                   norms=jnp.sum(x * x, axis=1),
+                   tombstones=jnp.zeros(tombstone_bytes(n), jnp.uint8))
+
+    def with_tombstones(self, dead: np.ndarray) -> "Arena":
+        """New Arena (shared vector storage) whose tombstone bitmap marks
+        the host bool mask ``dead``; bumps ``version``."""
+        import jax.numpy as jnp
+        packed = pack_tombstones(np.asarray(dead, dtype=bool), self.n)
+        return dataclasses.replace(self, tombstones=jnp.asarray(packed),
+                                   version=self.version + 1)
 
     @property
     def n(self) -> int:
@@ -132,8 +177,140 @@ class Arena:
 
     @property
     def nbytes(self) -> int:
+        tomb = self.tombstones.nbytes if self.tombstones is not None else 0
         return int(self.vectors.nbytes + self.label_words.nbytes
-                   + self.norms.nbytes)
+                   + self.norms.nbytes + tomb)
+
+
+MIN_DELTA_CAPACITY = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaArena:
+    """Fixed-capacity device append buffer for streaming inserts
+    (DESIGN.md §3.6).
+
+    Inserts land here — vectors, label words, and precomputed squared norms
+    at the append cursor — WITHOUT touching the base arena or the CSR
+    segment table, so a mutation never invalidates a traced base program.
+    Capacity moves through power-of-two tiers: the brute-force delta scan
+    (``kernels.ops.delta_topk``) is traced once per (k, Q-bucket,
+    capacity-tier) and masks ``slot >= count`` lanes with the cursor, so
+    appends never retrace; only a tier change (rare, growth doubles) does.
+
+    Deletes of delta rows set bits in the delta's own packed tombstone
+    bitmap (same layout as :class:`Arena`'s).  All updates are functional —
+    the owning :class:`~repro.core.stream.StreamingEngine` holds the
+    current instance.  Norms are computed by the same per-row
+    multiply+minor-axis-reduce as ``Arena.from_host``, which the merge's
+    ULP-parity contract depends on (DESIGN.md §3.6).
+    """
+    vectors: object       # jnp [cap, D] f32
+    label_words: object   # jnp [cap, W] i32
+    norms: object         # jnp [cap] f32
+    tombstones: object    # jnp [⌈cap/8⌉] u8; bit set ⇒ slot deleted
+    count: int = 0        # append cursor: slots [0, count) hold rows
+
+    @classmethod
+    def empty(cls, dim: int, words: int,
+              capacity: int = MIN_DELTA_CAPACITY) -> "DeltaArena":
+        import jax.numpy as jnp
+        cap = pow2_bucket(capacity)
+        return cls(vectors=jnp.zeros((cap, dim), jnp.float32),
+                   label_words=jnp.zeros((cap, words), jnp.int32),
+                   norms=jnp.zeros((cap,), jnp.float32),
+                   tombstones=jnp.zeros(tombstone_bytes(cap), jnp.uint8))
+
+    @property
+    def capacity(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.vectors.nbytes + self.label_words.nbytes
+                   + self.norms.nbytes + self.tombstones.nbytes)
+
+    def grown(self, min_capacity: int) -> "DeltaArena":
+        """Next power-of-two capacity tier holding ``min_capacity`` rows;
+        live slots and the tombstone bitmap are copied device-side."""
+        import jax.numpy as jnp
+        cap = pow2_bucket(min_capacity)
+        if cap <= self.capacity:
+            return self
+        return DeltaArena(
+            vectors=jnp.zeros((cap, self.dim), jnp.float32
+                              ).at[:self.capacity].set(self.vectors),
+            label_words=jnp.zeros((cap, self.label_words.shape[1]), jnp.int32
+                                  ).at[:self.capacity].set(self.label_words),
+            norms=jnp.zeros((cap,), jnp.float32
+                            ).at[:self.capacity].set(self.norms),
+            tombstones=jnp.zeros(tombstone_bytes(cap), jnp.uint8
+                                 ).at[:self.tombstones.shape[0]
+                                      ].set(self.tombstones),
+            count=self.count)
+
+    def appended(self, vectors: np.ndarray,
+                 label_words: np.ndarray) -> "DeltaArena":
+        """Append ``m`` rows at the cursor (functional).  The batch is
+        zero-padded to a power of two so the jitted updater traces once per
+        (capacity, batch-tier); pad slots beyond the new cursor are masked
+        by ``count`` until a later append overwrites them."""
+        import jax.numpy as jnp
+        m = vectors.shape[0]
+        if m == 0:
+            return self
+        m_pad = pow2_bucket(m)
+        out = self
+        if self.count + m_pad > self.capacity:
+            out = self.grown(self.count + m_pad)
+        rows = np.zeros((m_pad, out.dim), np.float32)
+        rows[:m] = vectors
+        lws = np.zeros((m_pad, out.label_words.shape[1]), np.int32)
+        lws[:m] = label_words
+        rows_dev = jnp.asarray(rows)
+        # norms EAGERLY, with the exact dispatch Arena.from_host uses: the
+        # fused-in-jit mul+reduce drifts from the eager one at ULP level,
+        # and a folded arena gathers these values — they must be
+        # bit-identical to a from-scratch upload (DESIGN.md §3.6)
+        norms = jnp.sum(rows_dev * rows_dev, axis=1)
+        v, lw, nr = _delta_append(out.vectors, out.label_words, out.norms,
+                                  rows_dev, jnp.asarray(lws), norms,
+                                  jnp.int32(out.count))
+        return dataclasses.replace(out, vectors=v, label_words=lw, norms=nr,
+                                   count=out.count + m)
+
+    def with_tombstones(self, dead: np.ndarray) -> "DeltaArena":
+        """New DeltaArena whose bitmap marks the host bool mask ``dead``
+        (indexed by slot; may be shorter than the capacity)."""
+        import jax.numpy as jnp
+        packed = pack_tombstones(np.asarray(dead, dtype=bool), self.capacity)
+        return dataclasses.replace(self, tombstones=jnp.asarray(packed))
+
+
+_DELTA_APPEND_JIT = None
+
+
+def _delta_append(vbuf, lbuf, nbuf, rows, lws, norms, start):
+    """Jitted cursor append (lazy so this module stays importable without
+    touching jax); one trace per (capacity, batch-tier) shape pair.  Norms
+    arrive precomputed — see ``DeltaArena.appended``."""
+    global _DELTA_APPEND_JIT
+    if _DELTA_APPEND_JIT is None:
+        import jax
+
+        @jax.jit
+        def upd(vbuf, lbuf, nbuf, rows, lws, norms, start):
+            v = jax.lax.dynamic_update_slice(vbuf, rows, (start, 0))
+            lw = jax.lax.dynamic_update_slice(lbuf, lws, (start, 0))
+            n = jax.lax.dynamic_update_slice(nbuf, norms, (start,))
+            return v, lw, n
+
+        _DELTA_APPEND_JIT = upd
+    return _DELTA_APPEND_JIT(vbuf, lbuf, nbuf, rows, lws, norms, start)
 
 
 class VectorIndex(Protocol):

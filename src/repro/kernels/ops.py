@@ -91,7 +91,8 @@ SEG_CHUNK = 2048
 
 @functools.partial(jax.jit, static_argnames=("k", "lmax", "chunk", "metric",
                                              "backend", "interpret"))
-def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *,
+def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
+                    tomb=None, *,
                     k: int, lmax: int, chunk: int, metric: str, backend: str,
                     interpret: bool):
     """Chunked segmented arena top-k — bit-identical to the unchunked
@@ -104,6 +105,12 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *,
     the (distance, position) lexicographic order of the full-span top-k is
     preserved chunk by chunk (the running pool stays sorted by exactly that
     order — the induction the parity tests pin down).
+
+    ``tomb`` (optional, DESIGN.md §3.6): packed tombstone bitmap [⌈N/8⌉]
+    u8 whose set bits drop rows from the keep mask — one extra AND fused
+    into the existing label filter, touching no distance value and adding
+    no dispatch key (``None``, the static engine's setting, traces the
+    mutation-free program exactly as before).
     """
     Q = q.shape[0]
     R = rows_concat.shape[0]
@@ -125,6 +132,11 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *,
             d = segmented_gather_distance_pallas(
                 q, lq, ax, alw, gid, jnp.clip(lens - c0, 0, chunk),
                 metric=metric, interpret=interpret)
+            if tomb is not None:
+                # the kernel fuses label filter + lens mask; the tombstone
+                # AND composes outside it — it can only add +inf lanes,
+                # never touch a surviving distance
+                d = jnp.where(ref.tombstone_mask(tomb, gid), d, jnp.inf)
         else:
             xg = ax[gid]                                       # [Q, C, D]
             # explicit multiply + minor-axis reduce, NOT a dot_general: XLA
@@ -137,6 +149,8 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *,
             d = -ip if metric == "ip" else qn[:, None] - 2.0 * ip + axn[gid]
             keep = jnp.all((lq[:, None, :] & alw[gid]) == lq[:, None, :],
                            axis=-1)
+            if tomb is not None:
+                keep = keep & ref.tombstone_mask(tomb, gid)
             d = jnp.where(keep & valid, d, jnp.inf)
         cat_v = jnp.concatenate([run_v, d], axis=1)
         cat_p = jnp.concatenate(
@@ -160,7 +174,7 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *,
 
 def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
                    lmax: int, metric: str = "l2", backend: str = "ref",
-                   chunk: int | None = None):
+                   chunk: int | None = None, tomb=None):
     """Single-dispatch segmented arena search (DESIGN.md §3).
 
     One traced program per (k, Q-bucket, lmax, metric, backend) serves every
@@ -174,6 +188,10 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
     GLOBAL arena row ids (gid == N ⇒ empty slot)).  Views consume ``pos``
     (their protocol speaks local ids); the batched executor consumes
     ``gid`` directly — no host-side remap exists anywhere on the path.
+
+    ``tomb``: optional packed tombstone bitmap (streaming engine only; the
+    static engine passes ``None`` and traces the exact pre-mutation
+    program).
     """
     if backend == "pallas":
         ax = _pad_axis(ax, 1, 128)
@@ -182,8 +200,86 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
         jnp.asarray(q, jnp.float32), jnp.asarray(lq, jnp.int32),
         ax, alw, axn, rows_concat,
         jnp.asarray(starts, jnp.int32), jnp.asarray(lens, jnp.int32),
+        tomb,
         k=k, lmax=lmax, chunk=chunk or min(SEG_CHUNK, lmax), metric=metric,
         backend=backend, interpret=default_interpret())
+
+
+def delta_topk(q, lq, dx, dlw, dxn, tomb, count: int, *, k: int,
+               metric: str = "l2", backend: str = "ref",
+               chunk: int | None = None):
+    """Brute-force label-filtered top-k over the streaming delta arena
+    (DESIGN.md §3.6) — one traced program per (k, Q-bucket, capacity-tier).
+
+    Implemented as the SAME segmented program as the base scan, over an
+    identity row table covering the delta's full capacity tier, with every
+    query's segment being ``[0, count)`` (the append cursor arrives as a
+    traced [Q] length vector, so inserts never retrace) and the delta's own
+    tombstone bitmap fused into the filter.  Sharing the program is what
+    makes the base+delta merge bit-exact: the inner product is the same
+    multiply + minor-axis reduce, so a row scores identically whether it
+    lives in the delta or (after compaction / from-scratch rebuild) in the
+    base arena.
+
+    Returns (vals [Q, k] asc, slot [Q, k] int32 delta slots; slot ==
+    capacity ⇒ empty).  The caller adds the base cardinality to turn slots
+    into global stream ids (``merge_topk`` does this in-program).
+    """
+    cap = dx.shape[0]
+    Q = q.shape[0]
+    ident = jnp.arange(cap, dtype=jnp.int32)
+    starts = jnp.zeros(Q, jnp.int32)
+    lens = jnp.full((Q,), min(count, cap), jnp.int32)
+    vals, pos, _ = segmented_topk(q, lq, dx, dlw, dxn, ident, starts, lens,
+                                  k=k, lmax=cap, metric=metric,
+                                  backend=backend, chunk=chunk, tomb=tomb)
+    return vals, pos
+
+
+@jax.jit
+def scatter_topk_rows(buf_v, buf_i, idx, vals, ids):
+    """Write a tier's [bucket, k] top-k rows into the query-aligned
+    [Q-bucket, k] assembly buffers at ``idx`` (out-of-bounds lanes — the
+    tier's zero-pad rows — are dropped).  One jitted call per tier: the
+    eager ``.at[].set`` pair costs ~ms of host dispatch per call, which
+    dominated the streaming executor's small-op tail."""
+    return (buf_v.at[idx].set(vals, mode="drop"),
+            buf_i.at[idx].set(ids, mode="drop"))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_topk(bv, bi, dv, dslot, base_offset, sentinel, *, k):
+    """In-program base+delta top-k merge preserving the deterministic
+    (distance, global-id) tie-break (DESIGN.md §3.6).
+
+    ``bv``/``bi`` [Q, k]: base results — GLOBAL ids ascending within equal
+    distances (segments list arena rows in ascending order).  ``dv`` /
+    ``dslot`` [Q, k]: delta results by slot, ids ``base_offset + slot``.
+    Base rows always carry smaller global ids than delta rows, and
+    ``lax.top_k`` breaks value ties toward the lower concatenation index,
+    so concatenating [base, delta] yields exactly the (distance, id)
+    lexicographic top-k a rebuilt-from-scratch engine computes over the
+    union.  Empty slots resolve to ``sentinel`` (the stream cardinality,
+    traced so inserts don't retrace) with +inf distance.
+    """
+    cat_v = jnp.concatenate([bv, dv], axis=1)
+    cat_i = jnp.concatenate([bi, base_offset + dslot], axis=1)
+    neg, sel = jax.lax.top_k(-cat_v, k)
+    vals = -neg
+    ids = jnp.take_along_axis(cat_i, sel, axis=1)
+    empty = jnp.isinf(vals)
+    ids = jnp.where(empty, sentinel, ids)
+    vals = jnp.where(empty, jnp.float32(jnp.inf), vals)
+    return vals, ids.astype(jnp.int32)
+
+
+def merge_topk(base_vals, base_gids, delta_vals, delta_slots,
+               base_offset: int, sentinel: int, *, k: int):
+    """Jit-cached per-(k, Q-bucket) wrapper around :func:`_merge_topk`;
+    ``base_offset``/``sentinel`` are passed as traced scalars so mutation
+    counters never add dispatch keys."""
+    return _merge_topk(base_vals, base_gids, delta_vals, delta_slots,
+                       jnp.int32(base_offset), jnp.int32(sentinel), k=k)
 
 
 def gather_distance(q_row, x, ids, *, metric: str = "l2",
@@ -201,10 +297,13 @@ __all__ = [
     "LABEL_WORDS",
     "SEG_CHUNK",
     "default_interpret",
+    "delta_topk",
     "filtered_topk",
     "gather_distance",
     "masked_distance",
+    "merge_topk",
     "prepare_label_words",
+    "scatter_topk_rows",
     "segmented_topk",
 ]
 

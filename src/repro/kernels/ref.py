@@ -63,8 +63,23 @@ def filtered_topk(q, x, lq_words, lx_words, k: int, metric: str = "l2"):
     return vals, idxs.astype(jnp.int32)
 
 
+def tombstone_mask(tomb: jnp.ndarray, gid: jnp.ndarray) -> jnp.ndarray:
+    """Gathered per-row liveness from a packed tombstone bitmap.
+
+    ``tomb`` [⌈N/8⌉] uint8 (bit set ⇒ row deleted, little bit order —
+    the layout of ``index.base.pack_tombstones``); ``gid`` int32 row ids of
+    any shape.  Returns bool, True ⇒ row alive.  This is the "one extra
+    AND" the streaming subsystem fuses into the label filter
+    (DESIGN.md §3.6): it only ever *removes* rows from the keep mask, so
+    every distance value that survives is untouched.
+    """
+    byte = tomb.astype(jnp.int32)[jnp.clip(gid >> 3, 0, tomb.shape[0] - 1)]
+    return ((byte >> (gid & 7)) & 1) == 0
+
+
 def segmented_filtered_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
-                            k: int, lmax: int, metric: str = "l2"):
+                            k: int, lmax: int, metric: str = "l2",
+                            tomb=None):
     """Segmented arena top-k oracle (DESIGN.md §3): one batch, one program.
 
     Every query carries its own candidate segment — a ``(start, len)`` span
@@ -83,6 +98,10 @@ def segmented_filtered_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
     pos == ``lmax`` ⇒ empty slot).  Ties break toward the lower position —
     segments list arena rows in ascending global order, so this reproduces
     the flat sub-index scan's lower-local-id (= lower-global-id) tie-break.
+
+    ``tomb``: optional packed tombstone bitmap [⌈N/8⌉] u8 fused into the
+    keep mask (see :func:`tombstone_mask`); ``None`` keeps the static
+    (mutation-free) program unchanged.
     """
     Q = q.shape[0]
     R = rows_concat.shape[0]
@@ -100,6 +119,8 @@ def segmented_filtered_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
         qn = jnp.sum(q * q, axis=1)
         d = qn[:, None] - 2.0 * ip + axn[gid]
     keep = jnp.all((lq[:, None, :] & alw[gid]) == lq[:, None, :], axis=-1)
+    if tomb is not None:
+        keep = keep & tombstone_mask(tomb, gid)
     d = jnp.where(keep & valid, d, FILTERED)
     if k > lmax:   # fewer candidates than requested: pad the span
         d = jnp.pad(d, ((0, 0), (0, k - lmax)), constant_values=jnp.inf)

@@ -211,11 +211,40 @@ class RetrievalAugmentedEngine:
             emb, [r.label_set for r in requests], self.k,
             min_bucket=self.min_bucket)
         # 2. splice neighbor ids into the prompt as context pseudo-tokens
+        #    (sentinel = empty slot; on a streaming engine it is the stream
+        #    cardinality, which grows with inserts — ask the engine)
         vocab = self.decoder.vocab
+        sentinel = getattr(self.eli, "sentinel", len(self.eli.label_sets))
         for i, r in enumerate(requests):
             r.neighbors = ids[i]
-            ctx = (ids[i][ids[i] < len(self.eli.label_sets)] % vocab
-                   ).astype(np.int32)
+            ctx = (ids[i][ids[i] < sentinel] % vocab).astype(np.int32)
             r.prompt = np.concatenate([ctx, r.prompt]).astype(np.int32)
         # 3. generate
         return self.decoder.run(requests)
+
+    # -- streaming mutations (DESIGN.md §3.6) ---------------------------------
+    # The corpus behind a RAG deployment is not static: documents arrive
+    # and get retired while label-filtered requests keep flowing.  When the
+    # retrieval engine is a core.stream.StreamingEngine these delegate
+    # straight through (ids returned by insert are the ids search will
+    # surface as neighbors); on a static engine they raise.
+
+    def _streaming(self):
+        if not hasattr(self.eli, "insert"):
+            raise TypeError(
+                "retrieval engine is static; wrap it in "
+                "repro.core.StreamingEngine to serve a mutating corpus")
+        return self.eli
+
+    def insert(self, vectors: np.ndarray,
+               label_sets: Sequence[tuple[int, ...]]) -> np.ndarray:
+        """Add documents to the retrieval corpus; returns their ids."""
+        return self._streaming().insert(vectors, label_sets)
+
+    def delete(self, ids) -> int:
+        """Retire documents from the retrieval corpus by id."""
+        return self._streaming().delete(ids)
+
+    def flush(self) -> dict:
+        """Force a compaction of pending corpus mutations."""
+        return self._streaming().flush()

@@ -47,20 +47,65 @@ def fix():
 # ---------------------------------------------------------------------------
 
 def test_arena_memory_bound(fix):
-    """ISSUE 3 acceptance: device memory ≤ N·D·4 + Σ|I|·4 (+ constants:
-    N·W·4 label words + N·4 norms).  The pre-arena engine stored
-    Σ|I|·(D·4 + W·4) — a ~Σ|I|/N ≈ 1/c duplication factor."""
+    """ISSUE 3 acceptance (extended by ISSUE 4): device memory ≤
+    N·(D+W+1)·4 + Σ|I|·4 + ⌈N/8⌉ — vectors, label words, norms, the CSR
+    segment table, and the streaming tombstone bitmap the arena now always
+    carries.  The pre-arena engine stored Σ|I|·(D·4 + W·4) — a ~Σ|I|/N ≈
+    1/c duplication factor."""
     eng, N, D = fix["eng"], fix["N"], fix["D"]
     st = eng.stats()
     W = eng.label_words.shape[1]
     sum_i = st.total_entries
-    bound = N * D * 4 + sum_i * 4 + N * W * 4 + N * 4
+    bound = N * (D + W + 1) * 4 + sum_i * 4 + -(-N // 8)
     assert st.nbytes <= bound, (st.nbytes, bound)
     # and the old duplicated scheme would have blown past it
     old = sum_i * (D * 4 + W * 4)
     assert st.nbytes < old, (st.nbytes, old)
-    assert st.arena_nbytes == N * D * 4 + N * W * 4 + N * 4
+    assert st.arena_nbytes == N * (D + W + 1) * 4 + -(-N // 8)
     assert st.segment_nbytes == sum_i * 4
+    # static engine: streaming surface is quiescent
+    assert (st.live_rows, st.tombstoned_rows, st.delta_rows) == (N, 0, 0)
+    assert st.arena_version == 0 and st.delta_nbytes == 0
+
+
+def test_streaming_memory_bound(fix):
+    """ISSUE 4 satellite: with the delta arena and tombstone bitmaps the
+    device bound extends to
+
+        N·(D+W+1)·4 + ⌈N/8⌉  +  Σ|I|·4  +  cap·(D+W+1)·4 + ⌈cap/8⌉
+
+    (base arena + its bitmap, CSR segment table, delta arena at its
+    current capacity tier + its bitmap)."""
+    from repro.core import StreamingEngine
+
+    N, D = fix["N"], fix["D"]
+    # fresh engine: wrapping would tombstone the module-shared arena
+    se = StreamingEngine.build(fix["x"], fix["ls"], mode="eis", c=0.2,
+                               backend="flat", max_delta_fraction=None,
+                               max_tombstone_fraction=None)
+    rng = np.random.default_rng(6)
+    se.insert(rng.standard_normal((100, D)).astype(np.float32),
+              [(0,)] * 100)
+    se.delete([0, 1, 2])
+    st = se.stats()
+    W = se.base.label_words.shape[1]
+    cap = se.delta.capacity
+    assert cap == 256                      # 100 rows sit in the first tier
+    bound = (N * (D + W + 1) * 4 + -(-N // 8)
+             + st.total_entries * 4
+             + cap * (D + W + 1) * 4 + -(-cap // 8))
+    assert st.nbytes <= bound, (st.nbytes, bound)
+    assert st.delta_nbytes == cap * (D + W + 1) * 4 + -(-cap // 8)
+    # the bound holds across a capacity-tier growth too
+    se.insert(rng.standard_normal((300, D)).astype(np.float32),
+              [(1,)] * 300)
+    st2 = se.stats()
+    cap2 = se.delta.capacity
+    # 300 rows pad to a 512 batch tier appended at cursor 100 → tier 1024
+    assert cap2 == 1024
+    bound2 = (N * (D + W + 1) * 4 + -(-N // 8) + st2.total_entries * 4
+              + cap2 * (D + W + 1) * 4 + -(-cap2 // 8))
+    assert st2.nbytes <= bound2, (st2.nbytes, bound2)
 
 
 def test_views_share_one_arena_and_own_nothing(fix):

@@ -1,0 +1,306 @@
+"""Streaming mutation subsystem (ISSUE 4 tentpole proof).
+
+The correctness oracle for the whole subsystem: after ANY interleaving of
+inserts and deletes, ``StreamingEngine.search_batched`` must be
+bit-identical to a ``LabelHybridEngine`` rebuilt from scratch on the
+surviving rows — same distances bitwise, same ids modulo the monotonic
+survivor renumbering (stream ids map to compact rebuilt ids through the
+sorted survivor table).  Pinned here on the 10k/500 acceptance fixture for
+all four registered backends × k ∈ {1, 4, 17}:
+
+  * arena-native (flat): parity holds WITH mutations still pending —
+    tombstone-fused base scan + delta scan + in-program merge — and again
+    after ``flush()`` folds them (device-side gather, incremental
+    GroupTable);
+  * private-storage (ivf / graph / distributed): mutations stage and fold
+    before the next search; the fold replays the original seeded build on
+    the survivors, so parity is construction determinism.
+
+Satellites pinned here too: warmup pre-traces the delta-scan and merge
+programs (first post-insert batch adds no traces), EngineStats reports the
+streaming surface, automatic compaction thresholds fire, and a compaction
+piggybacks a drift-triggered reselect.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (LabelHybridEngine, LabelWorkloadConfig,
+                        StreamingEngine, WorkloadMonitor,
+                        generate_label_sets, generate_query_label_sets)
+from repro.index.base import pow2_bucket
+
+BACKENDS = {
+    "flat": {},
+    "ivf": {"nprobe": 4},
+    "graph": {"M": 8, "n_cand": 16, "ef_search": 32},
+    "distributed": {},
+}
+KS = (1, 4, 17)
+
+
+@pytest.fixture(scope="module")
+def data():
+    """The 10k/500 acceptance fixture (as in the search_padded parity
+    harness) plus a held-out insert pool whose label sets include a label
+    the base universe never uses (11) — routed queries for it can only be
+    answered from the delta."""
+    rng = np.random.default_rng(11)
+    N, D, Q = 10_000, 32, 500
+    x = rng.standard_normal((N, D)).astype(np.float32)
+    ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=10, seed=3))
+    qv = rng.standard_normal((Q, D)).astype(np.float32)
+    qls = generate_query_label_sets(ls, Q - 4, seed=4,
+                                    from_base_fraction=0.75)
+    qls += [(0, 1, 2, 3, 4, 5), (2, 3, 4, 5, 6, 7, 8, 9),
+            (0, 2, 4, 6, 8), ()]
+    pool_x = rng.standard_normal((700, D)).astype(np.float32)
+    pool_ls = generate_label_sets(700, LabelWorkloadConfig(num_labels=10,
+                                                           seed=21))
+    pool_ls = [tuple(sorted(set(l) | ({11} if i % 9 == 0 else set())))
+               for i, l in enumerate(pool_ls)]
+    return dict(x=x, ls=ls, qv=qv, qls=qls, N=N, D=D,
+                pool_x=pool_x, pool_ls=pool_ls)
+
+
+def _rebuilt_oracle(se: StreamingEngine, backend: str):
+    """From-scratch engine on the surviving rows (stream order) plus the
+    compact→stream id translation table."""
+    alive_base = ~se._base_dead
+    alive_delta = ~se._delta_dead
+    n_base = len(se.base.label_sets)
+    parts = [se.base.vectors[alive_base]]
+    if se._n_inserted:
+        parts.append(np.concatenate(se._delta_vec_parts)[alive_delta])
+    surv_x = np.concatenate(parts)
+    surv_ls = ([l for l, a in zip(se.base.label_sets, alive_base) if a]
+               + [l for l, a in zip(se._delta_ls, alive_delta) if a])
+    surv_ids = np.concatenate([np.flatnonzero(alive_base),
+                               n_base + np.flatnonzero(alive_delta)])
+    eng = LabelHybridEngine.build(surv_x, surv_ls, mode="eis", c=0.2,
+                                  backend=backend, **BACKENDS[backend])
+    return eng, surv_ids
+
+
+def _assert_parity(se: StreamingEngine, backend: str, qv, qls, tag: str):
+    oracle, surv_ids = _rebuilt_oracle(se, backend)
+    n_surv = surv_ids.size
+    for k in KS:
+        d_s, i_s = se.search_batched(qv, qls, k)
+        d_o, i_o = oracle.search_batched(qv, qls, k)
+        if se.lazy:
+            # streaming ids are stream ids; translate the oracle's compact
+            # ids (monotonic renumbering ⇒ tie-break order is preserved)
+            i_o = np.where(i_o < n_surv,
+                           surv_ids[np.clip(i_o, 0, max(n_surv - 1, 0))],
+                           se.sentinel).astype(np.int32)
+        np.testing.assert_array_equal(i_s, i_o,
+                                      err_msg=f"{backend} {tag} k={k} ids")
+        np.testing.assert_array_equal(d_s, d_o,
+                                      err_msg=f"{backend} {tag} k={k} dists")
+
+
+def _mutate(se: StreamingEngine, data, rng) -> None:
+    ids = se.insert(data["pool_x"][:400], data["pool_ls"][:400])
+    dead_base = rng.choice(data["N"], 250, replace=False)
+    se.delete(dead_base)
+    se.delete(ids[::8])                 # delta tombstones too
+    se.delete(dead_base[:10])           # idempotent repeats
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_mutation_parity_vs_rebuilt_from_scratch(backend, data):
+    """ISSUE 4 acceptance: streaming ≡ rebuilt-from-scratch on the
+    surviving rows, all backends, k ∈ {1, 4, 17}."""
+    rng = np.random.default_rng(7)
+    se = StreamingEngine.build(
+        data["x"], data["ls"], mode="eis", c=0.2, backend=backend,
+        max_delta_fraction=None, max_tombstone_fraction=None,
+        **BACKENDS[backend])
+    _mutate(se, data, rng)
+    _assert_parity(se, backend, data["qv"], data["qls"], "pending")
+    if backend != "flat":
+        return          # flat continues through compaction + round two
+    rep = se.flush()
+    assert rep["folded_rows"] == 400 - 50 and rep["dropped_rows"] == 300
+    _assert_parity(se, backend, data["qv"], data["qls"], "flushed")
+    # round two on the compacted engine: fresh ids, fresh tombstones
+    ids2 = se.insert(data["pool_x"][400:600], data["pool_ls"][400:600])
+    assert ids2[0] == len(se.base.label_sets)
+    se.delete(ids2[:30])
+    se.delete(np.arange(0, 3000, 13))
+    _assert_parity(se, backend, data["qv"], data["qls"], "round2")
+
+
+def test_new_label_queries_served_from_delta(data):
+    """Label 11 exists only on inserted rows: the base scan cannot answer,
+    the merged result must come entirely from the delta."""
+    se = StreamingEngine.build(data["x"], data["ls"], mode="eis", c=0.2,
+                               backend="flat", max_delta_fraction=None,
+                               max_tombstone_fraction=None)
+    d, i = se.search_batched(data["qv"][:4], [(11,)] * 4, 5)
+    assert np.all(i == se.sentinel) and np.all(np.isinf(d))
+    se.insert(data["pool_x"][:200], data["pool_ls"][:200])
+    d, i = se.search_batched(data["qv"][:4], [(11,)] * 4, 5)
+    hits = i[i < se.sentinel]
+    assert hits.size and np.all(hits >= data["N"])
+    for gid in hits:
+        assert 11 in se.label_set(int(gid))
+
+
+def test_streaming_stats_and_version(data):
+    se = StreamingEngine.build(data["x"], data["ls"], mode="eis", c=0.2,
+                               backend="flat", max_delta_fraction=None,
+                               max_tombstone_fraction=None)
+    st0 = se.stats()
+    assert (st0.live_rows, st0.tombstoned_rows, st0.delta_rows) == \
+        (data["N"], 0, 0)
+    assert st0.arena_version == 0
+    ids = se.insert(data["pool_x"][:100], data["pool_ls"][:100])
+    se.delete(ids[:10])
+    se.delete([0, 1, 2])
+    st1 = se.stats()
+    assert st1.delta_rows == 100 and st1.tombstoned_rows == 13
+    assert st1.live_rows == data["N"] + 100 - 13
+    assert st1.arena_version > st0.arena_version     # tombstone writes bump
+    assert st1.delta_nbytes > 0
+    assert se.sentinel == data["N"] + 100
+    rep = se.flush()
+    st2 = se.stats()
+    assert st2.arena_version > st1.arena_version     # compaction bumps
+    assert st2.delta_rows == 0 and st2.tombstoned_rows == 0
+    assert st2.live_rows == st1.live_rows == len(se.base.label_sets)
+    # id_map: dead rows -> -1, survivors -> compact ids in stream order
+    id_map = rep["id_map"]
+    assert np.all(id_map[[0, 1, 2]] == -1)
+    assert np.all(id_map[ids[:10]] == -1)
+    surv = id_map[id_map >= 0]
+    assert np.array_equal(np.sort(surv), np.arange(st2.live_rows))
+    assert np.array_equal(surv, np.sort(surv))       # monotonic renumbering
+
+
+def test_delete_validation(data):
+    se = StreamingEngine.build(data["x"][:500], data["ls"][:500],
+                               mode="eis", c=0.2, backend="flat")
+    with pytest.raises(ValueError):
+        se.delete([500])                 # beyond the stream
+    with pytest.raises(ValueError):
+        se.delete([-1])
+    assert se.delete([3, 3, 4]) == 2
+    assert se.delete([3]) == 0           # idempotent
+
+
+def test_auto_compaction_thresholds(data):
+    se = StreamingEngine.build(
+        data["x"][:1000], data["ls"][:1000], mode="eis", c=0.2,
+        backend="flat", max_delta_fraction=0.05,
+        max_tombstone_fraction=0.05)
+    se.insert(data["pool_x"][:40], data["pool_ls"][:40])    # 4% — below
+    assert not se.compaction_log
+    # 60 > 5%: the PENDING delta is folded first, then this batch lands
+    # in the fresh delta — so the returned ids are valid at return
+    ids = se.insert(data["pool_x"][40:60], data["pool_ls"][40:60])
+    assert len(se.compaction_log) == 1
+    assert se.stats().delta_rows == 20
+    assert len(se.base.label_sets) == 1040
+    for j, gid in enumerate(ids):
+        assert se.label_set(int(gid)) == tuple(data["pool_ls"][40 + j])
+    se.delete(np.arange(40))             # 40 < 5% of 1060
+    assert len(se.compaction_log) == 1
+    se.delete(np.arange(40, 80))         # 80 > 5% — fires
+    assert len(se.compaction_log) == 2
+    assert len(se.base.label_sets) == 1040 + 20 - 80
+
+
+def test_autocompacting_insert_returns_valid_ids(data):
+    """Regression (review finding): when the insert itself triggers the
+    delta-fill compaction, the ids it returns must refer to the rows it
+    inserted — deleting them must delete exactly those rows."""
+    se = StreamingEngine.build(
+        data["x"][:400], data["ls"][:400], mode="eis", c=0.2,
+        backend="flat", max_delta_fraction=0.25,
+        max_tombstone_fraction=None)
+    se.delete(np.arange(10))             # pending tombstones to renumber
+    ids = se.insert(data["pool_x"][:150], data["pool_ls"][:150])
+    for j, gid in enumerate(ids):        # ids valid immediately...
+        assert se.label_set(int(gid)) == tuple(data["pool_ls"][j])
+    before = se.stats().live_rows
+    assert se.delete(ids[:5]) == 5       # ...and delete the right rows
+    assert se.stats().live_rows == before - 5
+    d, i = se.search_batched(data["qv"][:4], [()] * 4, 3)
+    assert i.shape == (4, 3)
+
+
+def test_warmup_pretraces_streaming_programs(data):
+    """ISSUE 4 satellite: after ``warmup(ks, buckets)`` the first
+    post-insert (and post-delete) batch must add NO new traces of the
+    base, delta-scan, or merge programs."""
+    from repro.kernels import ops
+
+    se = StreamingEngine.build(data["x"][:3000], data["ls"][:3000],
+                               mode="eis", c=0.2, backend="flat",
+                               max_delta_fraction=None,
+                               max_tombstone_fraction=None)
+    k, bucket = 6, 128
+    rep = se.warmup([k], [bucket])
+    assert rep["programs"] > 0
+    seg = ops._segmented_topk._cache_size()
+    mrg = ops._merge_topk._cache_size()
+    # mutations that stay inside the warmed capacity tier
+    ids = se.insert(data["pool_x"][:100], data["pool_ls"][:100])
+    se.delete(ids[:5])
+    se.delete([1, 2, 3])
+    d, i = se.search_batched(data["qv"][:96], data["qls"][:96], k,
+                             min_bucket=bucket)
+    assert ops._segmented_topk._cache_size() == seg, "base/delta retraced"
+    assert ops._merge_topk._cache_size() == mrg, "merge retraced"
+    assert i.shape == (96, k)
+
+
+def test_compaction_piggybacks_reselect_on_drift(data):
+    mon = WorkloadMonitor()
+    se = StreamingEngine.build(
+        data["x"][:2000], data["ls"][:2000], mode="eis", c=0.2,
+        backend="flat", max_delta_fraction=None,
+        max_tombstone_fraction=None, monitor=mon, min_queries=50,
+        drift_threshold=0.2, space_budget=4000)
+    mon.snapshot()
+    # a skewed workload the selection never saw: drift builds up
+    skew = [(0, 1)] * 8
+    for _ in range(10):
+        se.search_batched(data["qv"][:8], skew, 4)
+    assert mon.drift() > 0.2
+    before = set(se.base.selection.selected)
+    se.insert(data["pool_x"][:50], data["pool_ls"][:50])
+    rep = se.flush()
+    assert rep["reselected"] is True
+    assert mon.drift() < 0.05            # snapshot taken at reselect
+    after = set(se.base.selection.selected)
+    assert before != after               # weighted selection took over
+    # engine still answers, and routing tables were refreshed atomically
+    d, i = se.search_batched(data["qv"][:8], skew, 4)
+    assert i.shape == (8, 4)
+    # no drift ⇒ next compaction keeps the selection
+    se.insert(data["pool_x"][50:80], data["pool_ls"][50:80])
+    rep2 = se.flush()
+    assert rep2["reselected"] is False
+
+
+def test_serve_engine_delegates_mutations(data):
+    """RetrievalAugmentedEngine wires insert/delete/flush through to a
+    streaming retrieval engine and refuses them on a static one."""
+    from repro.serve.engine import RetrievalAugmentedEngine
+
+    rae = object.__new__(RetrievalAugmentedEngine)   # no decoder needed
+    rae.eli = LabelHybridEngine.build(data["x"][:500], data["ls"][:500],
+                                      mode="eis", c=0.2, backend="flat")
+    with pytest.raises(TypeError):
+        rae.insert(data["pool_x"][:2], data["pool_ls"][:2])
+    se = StreamingEngine.build(data["x"][:500], data["ls"][:500],
+                               mode="eis", c=0.2, backend="flat")
+    rae.eli = se
+    ids = rae.insert(data["pool_x"][:2], data["pool_ls"][:2])
+    assert list(ids) == [500, 501]
+    assert rae.delete([int(ids[0])]) == 1
+    assert rae.flush()["folded_rows"] == 1

@@ -1,0 +1,133 @@
+"""Property-based tests (hypothesis) for the streaming mutation contract.
+
+For ANY interleaving of insert / delete / search / flush operations, the
+streaming engine's filtered top-k must be BIT-identical to a brute-force
+oracle rebuilt from the surviving rows at every step (pattern of
+tests/test_search_padded_properties.py).  The oracle is
+``kernels.ops.segmented_topk`` over an identity segment covering the
+survivors — the same multiply+reduce arithmetic as the engine's base scan,
+delta scan, and a post-compaction fold, so any deviation (a stale
+tombstone, a mis-merged tie, a cursor off-by-one, a norm computed through
+a different f32 association) surfaces as a hard mismatch rather than a
+tolerance flake.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is an optional test "
+                    "dependency (see requirements-test.txt)")
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (LabelWorkloadConfig, StreamingEngine,
+                        generate_label_sets)
+from repro.core.labels import encode_many, masks_to_int32_words
+from repro.index.base import pow2_bucket
+from repro.kernels import ops
+
+N, D, K, Q = 260, 8, 3, 8
+_rng = np.random.default_rng(23)
+_X = _rng.standard_normal((N, D)).astype(np.float32)
+_LS = generate_label_sets(N, LabelWorkloadConfig(num_labels=6, seed=13))
+
+# ops: (kind, seed) — seed derives the op's payload deterministically
+operation = st.one_of(
+    st.tuples(st.just("insert"), st.integers(0, 2**31)),
+    st.tuples(st.just("delete"), st.integers(0, 2**31)),
+    st.tuples(st.just("search"), st.integers(0, 2**31)),
+    st.tuples(st.just("flush"), st.just(0)),
+)
+programs = st.lists(operation, min_size=1, max_size=8)
+
+
+def _oracle_search(surv_x, surv_lw, qv, qw, k):
+    """Brute force over the survivors: identity segment, same kernel."""
+    n = surv_x.shape[0]
+    if n == 0:
+        return (np.full((Q, k), np.inf, np.float32),
+                np.full((Q, k), 0, np.int32))
+    ax = jnp.asarray(surv_x)
+    axn = jnp.sum(ax * ax, axis=1)
+    lmax = pow2_bucket(n)
+    vals, _, gid = ops.segmented_topk(
+        qv, qw, ax, jnp.asarray(surv_lw), axn,
+        jnp.arange(n, dtype=jnp.int32), np.zeros(Q, np.int32),
+        np.full(Q, n, np.int32), k=k, lmax=lmax, metric="l2")
+    return np.asarray(vals), np.asarray(gid)
+
+
+@given(prog=programs)
+@settings(max_examples=10, deadline=None)
+def test_any_interleaving_matches_surviving_rows_oracle(prog):
+    se = StreamingEngine.build(_X, _LS, mode="eis", c=0.25, backend="flat",
+                               max_delta_fraction=None,
+                               max_tombstone_fraction=None,
+                               min_delta_capacity=64)
+    # shadow state: (stream_id, vector, label_words) per surviving row,
+    # in stream order
+    lw0 = masks_to_int32_words(encode_many(_LS))
+    shadow_ids = list(range(N))
+    shadow_x = [(_X[i], lw0[i]) for i in range(N)]
+    next_id = N
+
+    for kind, seed in prog:
+        rng = np.random.default_rng(seed)
+        if kind == "insert":
+            m = int(rng.integers(1, 24))
+            xv = rng.standard_normal((m, D)).astype(np.float32)
+            xls = [tuple(sorted(rng.choice(8, size=rng.integers(0, 4),
+                                           replace=False).tolist()))
+                   for _ in range(m)]
+            ids = se.insert(xv, xls)
+            lw = masks_to_int32_words(encode_many(xls))
+            assert list(ids) == list(range(next_id, next_id + m))
+            shadow_ids += list(ids)
+            shadow_x += [(xv[j], lw[j]) for j in range(m)]
+            next_id += m
+        elif kind == "delete":
+            if not shadow_ids:
+                continue
+            take = rng.integers(0, len(shadow_ids),
+                                size=rng.integers(1, 16))
+            victims = sorted({shadow_ids[t] for t in take})
+            newly = se.delete(victims)
+            assert newly == len(victims)
+            keep = [j for j, sid in enumerate(shadow_ids)
+                    if sid not in set(victims)]
+            shadow_ids = [shadow_ids[j] for j in keep]
+            shadow_x = [shadow_x[j] for j in keep]
+        elif kind == "flush":
+            rep = se.flush()
+            id_map = rep["id_map"]
+            assert np.all(id_map[shadow_ids]
+                          == np.arange(len(shadow_ids)))   # stream order
+            shadow_ids = list(range(len(shadow_ids)))
+            next_id = len(shadow_ids)
+        else:   # search — the parity assertion
+            qv = rng.standard_normal((Q, D)).astype(np.float32)
+            qls = [tuple(sorted(rng.choice(8, size=rng.integers(0, 4),
+                                           replace=False).tolist()))
+                   for _ in range(Q)]
+            qw = masks_to_int32_words(encode_many(qls))
+            d_s, i_s = se.search_batched(qv, qls, K)
+            surv_x = (np.stack([v for v, _ in shadow_x])
+                      if shadow_x else np.zeros((0, D), np.float32))
+            surv_lw = (np.stack([w for _, w in shadow_x])
+                       if shadow_x else np.zeros((0, lw0.shape[1]),
+                                                 np.int32))
+            d_o, pos = _oracle_search(surv_x, surv_lw, qv, qw, K)
+            sid = np.asarray(shadow_ids, dtype=np.int64)
+            if sid.size:
+                i_o = np.where(pos < sid.size,
+                               sid[np.clip(pos, 0, sid.size - 1)],
+                               se.sentinel).astype(np.int32)
+            else:
+                i_o = np.full_like(pos, se.sentinel)
+            np.testing.assert_array_equal(d_s, d_o)
+            np.testing.assert_array_equal(i_s, i_o)
+    # the engine survives the whole program with a consistent stats view
+    stats = se.stats()
+    assert stats.live_rows == len(shadow_ids)

@@ -1,6 +1,6 @@
-"""Exp-10 (ISSUE 4): the streaming mutation subsystem under load.
+"""Exp-10 (ISSUE 4 + ISSUE 5): the streaming mutation subsystem under load.
 
-Three measurements land in ``BENCH_exp10.json``:
+Four measurements land in ``BENCH_exp10.json``:
 
   * ``fill_sweep`` — warm QPS + recall of ``StreamingEngine.search_batched``
     as the delta arena fills (0% → 20% of the base), against the static
@@ -18,9 +18,19 @@ Three measurements land in ``BENCH_exp10.json``:
     -scan, and merge programs — measured in a SUBPROCESS (the exp9
     pattern: the XLA executable cache is process-wide, an in-process
     remeasure would silently be warm).
+  * ``delete_sweep`` (ISSUE 5) — a delete-heavy workload (delete batch →
+    search batch, repeated) on PRIVATE-storage backends, lazy tombstones
+    (``lazy_deletes=True``, the default: per-index bitmaps through
+    ``search_padded(tomb=…)``) vs the PR 4 fold-per-delete path
+    (``lazy_deletes=False``: every delete forces a full seeded rebuild at
+    the next search).  ``lazy_speedup`` is the acceptance bar: delete
+    latency drops from O(build) to O(n/8) host bytes, so lazy must win by
+    a wide margin.
 
 ``tiny=True`` (the ci_tier1 smoke) shrinks sizes and writes the JSON to a
-temp dir so a smoke run never clobbers the recorded perf artifact.
+temp dir (unless the caller routes it with an explicit ``out_dir`` — the
+CI bench-smoke job uploads that directory as a workflow artifact) so a
+smoke run never clobbers the recorded perf artifact.
 """
 import json
 import subprocess
@@ -74,6 +84,50 @@ def insert_pool(m: int, d: int, seed: int = 29):
     return px, pls
 
 
+def _delete_heavy_sweep(x, ls, qv, qls, k, backends, batches, batch_rows):
+    """Interleaved delete-batch → search-batch loop per private backend,
+    lazy tombstones vs fold-per-delete (both warmed before timing; the
+    fold mode's warm state is immediately invalidated by the first
+    delete, which is exactly the cost being measured)."""
+    out = {}
+    for backend, params in backends:
+        res = {}
+        for mode, lazy in (("lazy", True), ("fold_per_delete", False)):
+            se = StreamingEngine.build(
+                x, ls, mode="eis", c=0.2, backend=backend,
+                max_delta_fraction=None, max_tombstone_fraction=None,
+                lazy_deletes=lazy, **params)
+            se.search_batched(qv, qls, k)            # warm the caches
+            remaining = np.random.default_rng(17).permutation(
+                len(ls)).astype(np.int64)
+            folds_seen = 0
+            t0 = time.perf_counter()
+            for _ in range(batches):
+                batch = remaining[:batch_rows]
+                remaining = remaining[batch_rows:]
+                se.delete(batch)
+                se.search_batched(qv, qls, k)
+                # the fold path renumbers survivors at every fold, so
+                # future victims must translate through each id_map — an
+                # API-visible cost of fold-per-delete the lazy path does
+                # not impose (ids stay stable between compactions)
+                while folds_seen < len(se.compaction_log):
+                    id_map = se.compaction_log[folds_seen]["id_map"]
+                    folds_seen += 1
+                    remaining = id_map[remaining]
+                    remaining = remaining[remaining >= 0]
+            dt = time.perf_counter() - t0
+            res[mode] = {"seconds": dt,
+                         "qps": batches * len(qls) / dt,
+                         "deleted_rows": batches * batch_rows}
+            assert se.lazy_deletes_active == lazy
+            assert se.stats().live_rows == len(ls) - batches * batch_rows
+        res["lazy_speedup"] = (res["fold_per_delete"]["seconds"]
+                               / max(res["lazy"]["seconds"], 1e-9))
+        out[backend] = res
+    return out
+
+
 def _measure_qps(searcher, qv, qls, k, repeats=3):
     searcher.search_batched(qv, qls, k)          # warm the caches
     t0 = time.perf_counter()
@@ -88,7 +142,7 @@ def _measure_warmup(n: int, k: int, q: int, warm: bool) -> dict:
     child = _WARMUP_CHILD.format(spec=spec)
     r = subprocess.run([sys.executable, "-c", child], capture_output=True,
                        text=True, cwd=".")
-    line = next((l for l in r.stdout.splitlines() if l.startswith("RESULT")),
+    line = next((ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")),
                 None)
     if line is None:
         print(r.stdout[-2000:], r.stderr[-2000:])
@@ -96,16 +150,18 @@ def _measure_warmup(n: int, k: int, q: int, warm: bool) -> dict:
     return json.loads(line[len("RESULT"):])
 
 
-def run(n=4_000, k=10, out_dir=".", measure_warmup=True, tiny=False):
+def run(n=4_000, k=10, out_dir=None, measure_warmup=True, tiny=False):
     if tiny:
         n, measure_warmup = 600, True
-        out_dir = tempfile.mkdtemp(prefix="exp10_tiny_")
+    if out_dir is None:
+        out_dir = tempfile.mkdtemp(prefix="exp10_tiny_") if tiny else "."
     q = 80
     x, ls, qv, qls = make_dataset(n=n, n_labels=12, q=q, seed=7)
     pool_m = n // 5 + 8
     px, pls = insert_pool(pool_m, x.shape[1], seed=29)
     rows, payload = [], {"n": n, "k": k, "q": q, "tiny": tiny,
-                         "fill_sweep": [], "deleted": {}, "compaction": {}}
+                         "fill_sweep": [], "deleted": {}, "compaction": {},
+                         "delete_sweep": {}}
 
     # -- fill sweep: streaming (delta pending) vs static on the same rows --
     for fill in (0.0, 0.05, 0.10, 0.20):
@@ -176,6 +232,24 @@ def run(n=4_000, k=10, out_dir=".", measure_warmup=True, tiny=False):
                  "full_rebuild_us": f"{rebuild_s * 1e6:.0f}",
                  "speedup_vs_rebuild":
                  f"{payload['compaction']['speedup_vs_rebuild']:.1f}"})
+
+    # -- delete-heavy: lazy tombstones vs fold-per-delete (ISSUE 5) --------
+    # graph is omitted from the timed sweep (its Vamana fold is so slow the
+    # comparison is a foregone conclusion — it takes the identical lazy
+    # path); ivf exercises the wave-widening mask, distributed the sharded
+    # bitmap + collective merge
+    sweep_backends = [("ivf", {"nprobe": 8})]
+    if not tiny:
+        sweep_backends.append(("distributed", {}))
+    payload["delete_sweep"] = _delete_heavy_sweep(
+        x, ls, qv, qls, k, sweep_backends,
+        batches=3 if tiny else 6, batch_rows=max(n // 50, 1))
+    for backend, res in payload["delete_sweep"].items():
+        rows.append({"name": f"exp10/deletes_{backend}",
+                     "us_per_call": f"{1e6 / max(res['lazy']['qps'], 1e-9):.1f}",
+                     "qps_lazy": f"{res['lazy']['qps']:.0f}",
+                     "qps_fold": f"{res['fold_per_delete']['qps']:.0f}",
+                     "lazy_speedup": f"{res['lazy_speedup']:.1f}"})
 
     # -- warmup: first post-insert batch, subprocess-isolated --------------
     if measure_warmup:

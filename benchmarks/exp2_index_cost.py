@@ -6,6 +6,7 @@ alongside ``BENCH_exp9.json``: per engine we log build/select seconds,
 stored entries, and the nbytes split (shared arena + CSR segment table vs
 per-index private storage — see ``EngineStats``).
 """
+import tempfile
 import time
 
 from repro.baselines import BASELINE_REGISTRY
@@ -31,7 +32,12 @@ def _eli_row(name: str, eng, wall_s: float) -> tuple[dict, dict]:
     return row, payload
 
 
-def run(n=6_000, L=16, out_dir="."):
+def run(n=6_000, L=16, out_dir=None, tiny=False):
+    if tiny:
+        # CI smoke: engines + every baseline still build end to end
+        n, L = 800, 8
+    if out_dir is None:
+        out_dir = tempfile.mkdtemp(prefix="exp2_tiny_") if tiny else "."
     x, ls, qv, qls = make_dataset(n=n, n_labels=L, q=8)
     rows, payload = [], {"n": n, "n_labels": L, "engines": {},
                          "baselines": {}}

@@ -49,7 +49,7 @@ print("RESULT" + json.dumps(out))
 def run():
     r = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
                        text=True, env=None, cwd=".")
-    line = next((l for l in r.stdout.splitlines() if l.startswith("RESULT")),
+    line = next((ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")),
                 None)
     if line is None:
         print(r.stdout[-2000:], r.stderr[-2000:])

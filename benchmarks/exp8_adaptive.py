@@ -6,7 +6,7 @@ Metric: measured QPS on the hot workload + expected scan cost.
 """
 import numpy as np
 
-from repro.core.adaptive import AdaptiveEngine, weighted_select
+from repro.core.adaptive import AdaptiveEngine
 from repro.core.engine import LabelHybridEngine
 
 from .common import emit, ground_truth, make_dataset, measure

@@ -24,6 +24,7 @@ Three measurements land in ``BENCH_exp9.json``:
 import json
 import subprocess
 import sys
+import tempfile
 
 from repro.core import LabelHybridEngine
 from repro.index.base import pow2_bucket
@@ -79,7 +80,7 @@ def _measure_warmup(backend: str, params: dict, n: int, k: int) -> dict:
     child = _WARMUP_CHILD.format(spec=spec)
     r = subprocess.run([sys.executable, "-c", child], capture_output=True,
                        text=True, cwd=".")
-    line = next((l for l in r.stdout.splitlines() if l.startswith("RESULT")),
+    line = next((ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")),
                 None)
     if line is None:
         print(r.stdout[-2000:], r.stderr[-2000:])
@@ -87,7 +88,16 @@ def _measure_warmup(backend: str, params: dict, n: int, k: int) -> dict:
     return json.loads(line[len("RESULT"):])
 
 
-def run(n=4_000, k=10, out_dir=".", measure_warmup=True, sweep=True):
+def run(n=4_000, k=10, out_dir=None, measure_warmup=True, sweep=True,
+        tiny=False):
+    if tiny:
+        # CI smoke (benchmarks.run --tiny): all four backends end to end
+        # at toy size; subprocess warmup + the sweep are full-size-only
+        n, measure_warmup, sweep = 600, False, False
+    if out_dir is None:
+        # tiny runs must never clobber the recorded artifact unless the
+        # caller routed them somewhere explicitly (CI's --out-dir upload)
+        out_dir = tempfile.mkdtemp(prefix="exp9_tiny_") if tiny else "."
     x, ls, qv, qls = make_dataset(n=n, n_labels=12, q=80, seed=7)
     gt_d, gt_i = ground_truth(x, ls, qv, qls, k)
     rows, payload = [], {"n": n, "k": k, "q": len(qls), "backends": {}}

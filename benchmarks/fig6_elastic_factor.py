@@ -36,7 +36,7 @@ def run(n=20_000, k=10):
     for s_ in ls:
         for lab_ in s_:
             counts[lab_] = counts.get(lab_, 0) + 1
-    lab = min(counts, key=lambda l: abs(counts[l] - 0.05 * n))
+    lab = min(counts, key=lambda c: abs(counts[c] - 0.05 * n))
     target = (lab,)
     sel = np.array([i for i, s in enumerate(ls) if lab in s], dtype=np.int64)
     qls_fixed = [target] * len(qv)

@@ -1,12 +1,18 @@
 """One function per paper table/figure.  Prints ``name,us_per_call,derived``
-CSV.  ``python -m benchmarks.run [--only fig6,exp1,...] [--tiny]``
+CSV.  ``python -m benchmarks.run [--only fig6,exp1,...] [--tiny]
+[--tiny-only] [--out-dir DIR]``
 
-``--tiny`` shrinks benchmarks that support it (CI smoke: exp10 runs this
-way from scripts/ci_tier1.sh so the streaming path can't silently rot; a
-tiny run writes its JSON artifact to a temp dir, never over the recorded
-BENCH_*.json)."""
+``--tiny`` shrinks benchmarks that support it (CI smoke: the bench-smoke
+job in .github/workflows/ci.yml runs ``--tiny --tiny-only`` so every
+tiny-capable benchmark is exercised end to end per PR); without an
+explicit ``--out-dir`` a tiny run writes its JSON artifact to a temp dir,
+never over the recorded BENCH_*.json.  ``--tiny-only`` restricts the
+selection to benchmarks whose ``run`` accepts a ``tiny`` parameter.
+``--out-dir`` routes every produced JSON into one directory (the CI job
+uploads it as a workflow artifact for PR-to-PR perf eyeballing)."""
 import argparse
 import inspect
+import pathlib
 import sys
 import time
 import traceback
@@ -30,21 +36,36 @@ ALL = {
 }
 
 
+def tiny_capable(name: str) -> bool:
+    return "tiny" in inspect.signature(ALL[name]).parameters
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
     ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--tiny-only", action="store_true",
+                    help="run only benchmarks that support --tiny")
+    ap.add_argument("--out-dir", default="",
+                    help="directory for JSON artifacts (benchmarks that "
+                         "emit one); created if missing")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(ALL)
+    if args.tiny_only:
+        names = [n for n in names if tiny_capable(n)]
+    if args.out_dir:
+        pathlib.Path(args.out_dir).mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
         t0 = time.time()
         try:
+            params = inspect.signature(ALL[name]).parameters
             kwargs = {}
-            if args.tiny and "tiny" in inspect.signature(
-                    ALL[name]).parameters:
+            if args.tiny and "tiny" in params:
                 kwargs["tiny"] = True
+            if args.out_dir and "out_dir" in params:
+                kwargs["out_dir"] = args.out_dir
             ALL[name](**kwargs)
             print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception:

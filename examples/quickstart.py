@@ -3,7 +3,6 @@ label-hybrid AKNN queries — the paper's core loop in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core.engine import LabelHybridEngine, brute_force_filtered
 from repro.core import recall_at_k

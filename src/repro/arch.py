@@ -36,7 +36,7 @@ from .models import encdec as ed
 from .models import hybrid as hy
 from .models import transformer as tf
 from .models import vlm
-from .models.common import ParamSpec, is_spec, param_structs
+from .models.common import is_spec, param_structs
 from .optim import Optimizer, OptimizerConfig
 
 
@@ -324,9 +324,9 @@ def make_train_step(arch: ArchSpec) -> Callable:
     opt = Optimizer(arch.optimizer)
 
     def train_step(params, opt_state, batch):
-        (l, ce), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+        (lv, ce), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
         params, opt_state, stats = opt.update(grads, opt_state, params)
-        return params, opt_state, {"loss": l, "ce": ce, **stats}
+        return params, opt_state, {"loss": lv, "ce": ce, **stats}
 
     return train_step
 

@@ -24,7 +24,7 @@ from typing import Sequence
 
 import numpy as np
 
-from ..core.labels import MAX_LABELS, encode_many, masks_to_int32_words
+from ..core.labels import encode_many, masks_to_int32_words
 from ..index.graph import GraphIndex
 
 
@@ -32,8 +32,8 @@ def _label_matrix(label_sets: Sequence[tuple[int, ...]], num_labels: int
                   ) -> np.ndarray:
     out = np.zeros((len(label_sets), num_labels), dtype=np.float32)
     for i, ls in enumerate(label_sets):
-        for l in ls:
-            out[i, l] = 1.0
+        for lab in ls:
+            out[i, lab] = 1.0
     return out
 
 

@@ -37,7 +37,6 @@ import json
 import re
 import shutil
 import threading
-import time
 from pathlib import Path
 from typing import Any, Callable
 
@@ -177,7 +176,7 @@ class Checkpointer:
             try:
                 manifest = json.loads((path / "manifest.json").read_text())
                 names = [n for n, _ in _leaf_paths(treedef_like)]
-                by_name = {l["name"]: l for l in manifest["leaves"]}
+                by_name = {leaf["name"]: leaf for leaf in manifest["leaves"]}
                 if set(names) != set(by_name):
                     raise ValueError(
                         f"leaf mismatch: {set(names) ^ set(by_name)}")

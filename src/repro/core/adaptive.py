@@ -37,7 +37,6 @@ from collections import Counter
 from typing import Mapping, Sequence
 
 from .eis import EISResult, assign_queries
-from .elastic import elastic_factor
 from .groups import EMPTY_KEY, coverage_pairs
 from .labels import encode_label_set, mask_key
 

@@ -38,7 +38,7 @@ from ..index.base import (Arena, as_row_ids, check_global_id_contract,
                           get_index_builder, pow2_bucket)
 from ..kernels import ops as _kernel_ops
 from .eis import EISResult, greedy_eis
-from .elastic import elastic_factor, min_elastic_factor
+from .elastic import min_elastic_factor
 from .estimator import sampled_group_table
 from .groups import EMPTY_KEY, GroupTable, observed_query_keys
 from .labels import (encode_label_set, encode_many, key_contains,
@@ -330,9 +330,22 @@ class LabelHybridEngine:
         return self.search_batched(queries, query_label_sets, k,
                                    **search_params)
 
+    @property
+    def supports_lazy_deletes(self) -> bool:
+        """True ⇔ every selected index can serve a pending-delete bitmap
+        through ``search_padded(tomb=…)`` (the ``supports_tombstones``
+        capability, ``index.base``).  Arena-native engines qualify by
+        construction — the streaming executor fuses ``Arena.tombstones``
+        into the segmented program; private-storage engines qualify when
+        every materialized backend implements the mask natively."""
+        if self._arena_native and self.arena is not None:
+            return True
+        return all(getattr(type(ix), "supports_tombstones", False)
+                   for ix in self.indexes.values())
+
     def search_batched(self, queries: np.ndarray,
                        query_label_sets: Sequence[tuple[int, ...]], k: int,
-                       *, min_bucket: int = 1,
+                       *, min_bucket: int = 1, tomb_by_key=None,
                        **search_params) -> tuple[np.ndarray, np.ndarray]:
         """Batched multi-index executor (single-dispatch segmented form).
 
@@ -359,6 +372,14 @@ class LabelHybridEngine:
         rows are sliced off, and the arena path runs byte-for-byte the same
         kernel as the views behind the looped executor (pinned by
         ``tests/test_search_padded_parity.py``).
+
+        ``tomb_by_key`` (private-storage backends only; DESIGN.md §3.6):
+        per-selected-key packed tombstone bitmaps over each index's LOCAL
+        rows — ``core.stream.StreamingEngine`` derives them from its
+        global dead mask so deletes stay lazy; keys absent from the
+        mapping run their exact tombstone-free program.  The arena path
+        rejects it: streaming drives ``Arena.tombstones`` through its own
+        executor there.
         """
         queries = np.asarray(queries, dtype=np.float32)
         Q = queries.shape[0]
@@ -376,6 +397,11 @@ class LabelHybridEngine:
         pend: list[tuple[list[int], object, object, int]] = []
 
         if self._arena_native and self.arena is not None:
+            if tomb_by_key is not None:
+                raise TypeError(
+                    "tomb_by_key is the private-storage lazy-delete path; "
+                    "arena-native engines take the bitmap through "
+                    "Arena.tombstones (core.stream)")
             if search_params:
                 raise TypeError(f"arena-native backend {self.backend!r} "
                                 f"takes no search params; got "
@@ -405,9 +431,12 @@ class LabelHybridEngine:
             searcher = getattr(index, "search_padded", None)
             if searcher is None:       # third-party, outside the registry
                 searcher = functools.partial(fallback_search_padded, index)
+            extra = search_params
+            tomb = tomb_by_key.get(key) if tomb_by_key else None
+            if tomb is not None:
+                extra = dict(search_params, tomb=tomb)
             d, li = dispatch_padded(searcher, queries[qids], qwords[qids],
-                                    k, min_bucket=min_bucket,
-                                    **search_params)
+                                    k, min_bucket=min_bucket, **extra)
             pend.append((qids, d, li, len(qids)))
 
         # deferred sync: every group's device work is queued before the
@@ -461,10 +490,12 @@ class LabelHybridEngine:
 
     def search_looped(self, queries: np.ndarray,
                       query_label_sets: Sequence[tuple[int, ...]], k: int,
+                      tomb_by_key=None,
                       **search_params) -> tuple[np.ndarray, np.ndarray]:
         """Reference executor: per-key Python loop, one un-bucketed backend
         call per selected index (the pre-batching code path, kept as the
-        parity oracle for :meth:`search_batched`)."""
+        parity oracle for :meth:`search_batched` — including the
+        per-selected-key ``tomb_by_key`` lazy-delete bitmaps)."""
         queries = np.asarray(queries, dtype=np.float32)
         Q = queries.shape[0]
         n = len(self.label_sets)
@@ -479,8 +510,11 @@ class LabelHybridEngine:
         for key, qids in by_key.items():
             index = self.indexes[key]
             rows = self.rows[key]
-            d, li = index.search(queries[qids], qwords[qids], k,
-                                 **search_params)
+            extra = search_params
+            tomb = tomb_by_key.get(key) if tomb_by_key else None
+            if tomb is not None:
+                extra = dict(search_params, tomb=tomb)
+            d, li = index.search(queries[qids], qwords[qids], k, **extra)
             li = np.asarray(li)
             empty = li >= rows.size
             gi = np.where(empty, n, rows[np.clip(li, 0, rows.size - 1)])
@@ -490,7 +524,7 @@ class LabelHybridEngine:
 
     # -- warmup ----------------------------------------------------------------
     def warmup(self, ks: Sequence[int], buckets: Sequence[int],
-               **search_params) -> dict:
+               tomb_variants: bool = False, **search_params) -> dict:
         """Pre-trace the per-(k, bucket) dispatch tables ahead of traffic.
 
         Cold serving latency is dominated by tracing + XLA compilation of
@@ -509,9 +543,16 @@ class LabelHybridEngine:
         ``buckets`` are Q-buckets (rounded up to powers of two); a server
         passes the buckets its batch-size distribution produces.  Returns
         ``{"seconds", "programs"}``.
+
+        ``tomb_variants=True`` (streaming, private-storage backends) also
+        traces each index's tombstone-masked program on an all-zero
+        bitmap, so the first post-delete batch pays no retrace either
+        (the arena analogue lives in ``StreamingEngine.warmup``).
         """
         import jax
         import jax.numpy as jnp
+
+        from ..index.base import tombstone_bytes
 
         t0 = time.perf_counter()
         D = self.vectors.shape[1]
@@ -542,6 +583,13 @@ class LabelHybridEngine:
                                 fallback_search_padded, index)
                         d, _ = searcher(qz, lz, k, **search_params)
                         outs.append(d)
+                        if tomb_variants and getattr(
+                                type(index), "supports_tombstones", False):
+                            zt = np.zeros(
+                                tombstone_bytes(index.num_vectors), np.uint8)
+                            d, _ = searcher(qz, lz, k, tomb=zt,
+                                            **search_params)
+                            outs.append(d)
         for o in outs:
             jax.block_until_ready(jnp.asarray(o))
         return {"seconds": time.perf_counter() - t0, "programs": len(outs)}

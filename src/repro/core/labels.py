@@ -23,10 +23,10 @@ NUM_WORDS = MAX_LABELS // 64
 def encode_label_set(labels: Iterable[int]) -> np.ndarray:
     """Encode an iterable of label ids into a (NUM_WORDS,) uint64 bitmask."""
     mask = np.zeros(NUM_WORDS, dtype=np.uint64)
-    for l in labels:
-        if not 0 <= l < MAX_LABELS:
-            raise ValueError(f"label id {l} out of range [0, {MAX_LABELS})")
-        mask[l // 64] |= np.uint64(1) << np.uint64(l % 64)
+    for lab in labels:
+        if not 0 <= lab < MAX_LABELS:
+            raise ValueError(f"label id {lab} out of range [0, {MAX_LABELS})")
+        mask[lab // 64] |= np.uint64(1) << np.uint64(lab % 64)
     return mask
 
 
@@ -184,7 +184,7 @@ def generate_query_label_sets(
             chosen = rng.choice(len(base), size=int(sz), replace=False)
             out.append(tuple(sorted(base[c] for c in chosen)))
         else:
-            all_labels = sorted({l for b in base_sets for l in b}) or [0]
+            all_labels = sorted({lab for b in base_sets for lab in b}) or [0]
             sz = rng.integers(1, min(4, len(all_labels)) + 1)
             chosen = rng.choice(len(all_labels), size=int(sz), replace=False)
             out.append(tuple(sorted(all_labels[c] for c in chosen)))

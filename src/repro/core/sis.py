@@ -16,7 +16,6 @@ import dataclasses
 from typing import Mapping, Sequence
 
 from .eis import EISResult, greedy_eis
-from .groups import EMPTY_KEY
 from .labels import key_subsets
 
 

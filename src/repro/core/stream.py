@@ -29,12 +29,26 @@ Two capability tiers, mirroring the ``build_view`` split in
     routed superset-key index makes the merged result independent of
     routing — which is why parity with a from-scratch rebuild holds with
     mutations still pending.
-  * **private-storage backends** (ivf / graph / distributed) cannot mask
-    rows inside their device structures, so mutations stage host-side and
-    the engine folds them (a deterministic full re-build with the original
-    build arguments) before the next search — one fold amortizes an
-    entire mutation batch, and determinism of the seeded builders gives
-    the same rebuilt-from-scratch parity.
+  * **private-storage backends** (ivf / graph / distributed): DELETES are
+    lazy here too (ISSUE 5) — the engine derives one packed bitmap per
+    selected index from its global dead mask and passes it through the
+    ``search_padded(tomb=…)`` protocol (``index.base``), where each
+    backend fuses it into its filter natively (IVF widens its probe
+    waves over dead rows; the graph walks them for connectivity but
+    excludes them from results; distributed shards the bitmap alongside
+    its rows).  Only INSERTS (which these structures cannot absorb
+    in-place) and the compaction triggers force the fold — a
+    deterministic full re-build with the original build arguments, whose
+    seeded determinism gives rebuilt-from-scratch parity.  The
+    lazy-delete invariant is necessarily the *fixed-structure* one
+    (DESIGN.md §3.6): results are bit-identical to the same engine with
+    the dead rows failing the filter — for exhaustive backends
+    (flat / distributed) that coincides with the rebuilt-engine oracle;
+    for approximate structures (ivf / graph) a rebuild re-clusters /
+    re-wires and is *not* bit-comparable, pending or folded being equally
+    approximate (measured: ~98% of fixture queries differ from exact
+    ground truth on ivf at nprobe=4 — structure dependence is inherent,
+    not introduced by tombstones).
 
 Compaction (``flush`` or the automatic thresholds) folds live delta rows
 and drops tombstoned rows into a fresh base arena, updates the GroupTable
@@ -57,7 +71,7 @@ from typing import Sequence
 import numpy as np
 
 from ..index.base import (Arena, DeltaArena, MIN_DELTA_CAPACITY, as_row_ids,
-                          check_global_id_contract)
+                          check_global_id_contract, pack_tombstones)
 from ..kernels import ops as _kernel_ops
 from .adaptive import WorkloadMonitor, selection_from_weighted, weighted_select
 from .eis import EISResult
@@ -77,11 +91,15 @@ class StreamingEngine:
                  drift_threshold: float = 0.25,
                  min_queries: int = 200,
                  space_budget: int | None = None,
-                 build_kwargs: dict | None = None):
+                 build_kwargs: dict | None = None,
+                 lazy_deletes: bool = True):
         self.base = engine
         self.max_delta_fraction = max_delta_fraction
         self.max_tombstone_fraction = max_tombstone_fraction
         self.min_delta_capacity = min_delta_capacity
+        # escape hatch (and the exp10 A/B baseline): False restores the
+        # PR 4 fold-per-delete behavior on private-storage backends
+        self._lazy_deletes = lazy_deletes
         self.monitor = monitor
         self.drift_threshold = drift_threshold
         self.min_queries = min_queries
@@ -105,6 +123,7 @@ class StreamingEngine:
               drift_threshold: float = 0.25,
               min_queries: int = 200,
               space_budget: int | None = None,
+              lazy_deletes: bool = True,
               **build_kwargs) -> "StreamingEngine":
         """Build the base ``LabelHybridEngine`` (same kwargs as
         ``LabelHybridEngine.build``) and wrap it for streaming."""
@@ -114,7 +133,8 @@ class StreamingEngine:
             max_tombstone_fraction=max_tombstone_fraction,
             min_delta_capacity=min_delta_capacity, monitor=monitor,
             drift_threshold=drift_threshold, min_queries=min_queries,
-            space_budget=space_budget, build_kwargs=build_kwargs)
+            space_budget=space_budget, build_kwargs=build_kwargs,
+            lazy_deletes=lazy_deletes)
 
     def _reset_staging(self) -> None:
         eng = self.base
@@ -124,8 +144,9 @@ class StreamingEngine:
         self._delta_lw_parts: list[np.ndarray] = []
         self._delta_ls: list[tuple[int, ...]] = []
         self._n_inserted = 0
-        self._dirty = False          # private-storage fold pending
+        self._dirty = False          # private-storage fold pending (inserts)
         self._has_base_tombs = False  # any base delete since last compaction
+        self._tomb_by_key = None     # per-selected-key bitmaps (private lazy)
         if self.lazy:
             self.delta = DeltaArena.empty(eng.vectors.shape[1],
                                           eng.label_words.shape[1],
@@ -140,6 +161,15 @@ class StreamingEngine:
         absorbed lazily (tombstone mask + delta scan) instead of folded
         before the next search."""
         return self.base._arena_native and self.base.arena is not None
+
+    @property
+    def lazy_deletes_active(self) -> bool:
+        """True ⇔ base deletes on a private-storage backend are served
+        through per-index ``search_padded(tomb=…)`` bitmaps instead of a
+        fold-before-search (ISSUE 5).  Arena-native backends have their
+        own (always-on) lazy path and report False here."""
+        return (not self.lazy and self._lazy_deletes
+                and self.base.supports_lazy_deletes)
 
     @property
     def sentinel(self) -> int:
@@ -207,9 +237,14 @@ class StreamingEngine:
 
     def delete(self, ids) -> int:
         """Tombstone rows by global stream id; returns how many were newly
-        deleted (repeat deletes are idempotent no-ops).  Arena-native: one
-        bitmap re-pack + upload per batch (⌈N/8⌉ bytes), fused into the
-        very next search's filter.  May trigger automatic compaction."""
+        deleted (repeat deletes are idempotent no-ops).  Lazy on EVERY
+        registered backend (ISSUE 5): arena-native engines re-pack +
+        upload the arena bitmap (⌈N/8⌉ bytes) and fuse it into the very
+        next search's filter; private-storage engines invalidate their
+        per-selected-key bitmaps, re-derived at the next search —
+        O(Σ|I|/8) host bytes, never O(build).  Staged-delta deletes ride
+        the fold their insert already forced.  May trigger automatic
+        compaction."""
         ids = np.unique(np.asarray(ids, dtype=np.int64).ravel())
         if ids.size == 0:
             return 0
@@ -231,10 +266,36 @@ class StreamingEngine:
                 self._has_base_tombs = True
             if delta_slots.size:
                 self.delta = self.delta.with_tombstones(self._delta_dead)
-        else:
-            self._dirty = True
+        elif base_ids.size:
+            if self.lazy_deletes_active:
+                self._has_base_tombs = True
+                self._tomb_by_key = None     # re-derive at next search
+            else:
+                self._dirty = True
+        # non-lazy delta_slots: those rows are staged host-side and only
+        # become searchable at the fold their insert made pending
+        # (_dirty) — the fold reads _delta_dead, nothing else to do
         self._maybe_compact()
         return newly
+
+    def _private_tombs(self) -> dict | None:
+        """Per-selected-key packed bitmaps for the private-storage lazy
+        path, derived from the global base dead mask through each key's
+        member-row table (``engine.rows`` — local row r of index I(key)
+        is global row rows[key][r], the id space the backend's ``tomb``
+        contract speaks).  Keys with no dead member stay absent so their
+        groups run the exact tombstone-free program.  Cached until the
+        next delete/compaction."""
+        if not self._has_base_tombs:
+            return None
+        if self._tomb_by_key is None:
+            tombs = {}
+            for key, rows in self.base.rows.items():
+                dead = self._base_dead[rows]
+                if dead.any():
+                    tombs[key] = pack_tombstones(dead)
+            self._tomb_by_key = tombs
+        return self._tomb_by_key
 
     # -- compaction -----------------------------------------------------------
     def _maybe_compact(self) -> None:
@@ -416,7 +477,10 @@ class StreamingEngine:
         segmented launch + one jitted scatter into a query-aligned
         assembly buffer; then ONE delta scan for the whole batch and ONE
         in-program merge; the host synchronizes exactly once at the end.
-        Private-storage: folds pending mutations, then delegates.
+        Private-storage: pending INSERTS fold (the structures cannot
+        absorb them in-place); pending DELETES stay lazy — the engine
+        passes per-selected-key tombstone bitmaps down the
+        ``search_padded(tomb=…)`` protocol (``_private_tombs``).
         """
         if self.monitor is not None:
             self.monitor.observe([tuple(ls) for ls in query_label_sets])
@@ -424,6 +488,7 @@ class StreamingEngine:
             self._fold_if_dirty()
             return self.base.search_batched(queries, query_label_sets, k,
                                             min_bucket=min_bucket,
+                                            tomb_by_key=self._private_tombs(),
                                             **search_params)
         if search_params:
             raise TypeError(f"arena-native backend {self.base.backend!r} "
@@ -494,10 +559,15 @@ class StreamingEngine:
         delta scan per (k, Q-bucket, current capacity tier), and the merge
         per (k, Q-bucket) — so the first post-insert batch pays no retrace
         (measured subprocess-isolated in exp10, the exp9 pattern).
-        Private-storage backends fold and delegate to the base warmup."""
+        Private-storage backends fold pending inserts and delegate to the
+        base warmup, tracing each index's tombstone-masked variant too
+        when lazy deletes are active (first post-delete batch: no
+        retrace)."""
         if not self.lazy:
             self._fold_if_dirty()
-            return self.base.warmup(ks, buckets, **search_params)
+            return self.base.warmup(ks, buckets,
+                                    tomb_variants=self.lazy_deletes_active,
+                                    **search_params)
         import jax
         import jax.numpy as jnp
 

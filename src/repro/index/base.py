@@ -35,6 +35,26 @@ Contract:
       - returns device arrays [bucket, k]; empty slots carry
         (dist == +inf, id == n) exactly like ``search``.
 
+    **Tombstones** (optional keyword ``tomb``, DESIGN.md §3.6): a packed
+    uint8 bitmap over the index's *storage rows* — its local row ids
+    [0, num_vectors) for a materialized index, the shared arena's global
+    rows for an arena view — little bit order
+    (:func:`pack_tombstones`); a set bit excludes the row from the
+    *result* exactly as if it failed the label containment filter, and
+    the incremental (k+1) continuation must widen over it (a tombstoned
+    row never counts toward the k accumulated passing rows, so e.g. a
+    fully-tombstoned IVF probe wave keeps doubling and still terminates
+    at exhaustion).  Tombstones must not perturb surviving rows: every
+    returned (dist, id) is bit-identical to the same search over an
+    index whose tombstoned rows simply never pass the filter — the
+    lazy-delete contract `core.stream.StreamingEngine` relies on.
+    Structural traversal MAY still visit tombstoned rows (the graph
+    backend deliberately keeps them navigable for connectivity).
+    ``tomb=None`` must trace the exact tombstone-free program.  Backends
+    implementing this natively set ``supports_tombstones = True``;
+    :func:`fallback_search_padded` rejects ``tomb`` so the streaming
+    engine folds deletes for backends without the capability.
+
     Per-instance dispatch tables MUST be keyed by (k, bucket) *within the
     instance* (see :func:`bucket_cache`) so two indexes — or two engines
     with different k living in one process — never cross-contaminate
@@ -391,11 +411,19 @@ def pad_to_bucket(search_padded, queries, query_label_words, k, n,
 
 
 def fallback_search_padded(self, queries, query_label_words, k,
-                           **search_params):
+                           tomb=None, **search_params):
     """Default ``search_padded`` for backends without a native bucketed
     path: delegates to ``search`` on the whole bucket.  Correct under the
     executor's pad-and-slice convention (pad rows are searched and thrown
-    away) but only as jit-stable as the backend's ``search`` itself."""
+    away) but only as jit-stable as the backend's ``search`` itself.
+    Tombstones are a declared capability (``supports_tombstones``), not
+    emulatable through plain ``search`` — callers holding pending deletes
+    must fold them for such backends (``core.stream`` does)."""
+    if tomb is not None:
+        raise TypeError(
+            f"backend {getattr(self, 'backend_name', type(self).__name__)!r}"
+            f" has no tombstone-aware search_padded; fold deletes before "
+            f"searching (see index.base search_padded contract)")
     return self.search(queries, query_label_words, k, **search_params)
 
 

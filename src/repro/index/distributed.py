@@ -19,9 +19,6 @@ of N, which is what makes the scheme collective-light (see EXPERIMENTS.md
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -30,32 +27,36 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from .. import compat
 from ..compat import shard_map
 from ..kernels import ref
-from .base import bucket_cache, pad_to_bucket, register_index
+from .base import (bucket_cache, pad_to_bucket, register_index,
+                   tombstone_bytes)
 
 
-def _local_topk(q, x, lq, lx, k: int, metric: str, row_offset):
-    """Device-local filtered top-k over the shard; ids shifted to global."""
-    vals, idxs = ref.filtered_topk(q, x, lq, lx, k, metric)
+def _local_topk(q, x, lq, lx, k: int, metric: str, row_offset, tomb=None):
+    """Device-local filtered top-k over the shard; ids shifted to global.
+    ``tomb``: packed bitmap over the shard's LOCAL rows — masked into the
+    filter before the shard-local top-k, so a dead row can never reach
+    the cross-shard merge (the lazy-delete contract, DESIGN.md §3.6)."""
+    vals, idxs = ref.filtered_topk(q, x, lq, lx, k, metric, tomb=tomb)
     n_local = x.shape[0]
     gids = jnp.where(idxs >= n_local, jnp.int32(2 ** 30), idxs + row_offset)
     return vals, gids
 
 
 def sharded_filtered_topk(mesh: Mesh, *, axis: str = "data", k: int = 10,
-                          metric: str = "l2"):
+                          metric: str = "l2", with_tomb: bool = False):
     """Build a jit'd sharded search fn for ``mesh``.
 
-    Returned fn signature: (q [Q, D], x [N, D], lq [Q, W], lx [N, W],
-    row_offset_base) -> (vals [Q, k], global_ids [Q, k]); x/lx sharded over
-    ``axis`` on dim 0, queries replicated.
+    Returned fn signature: (q [Q, D], x [N, D], lq [Q, W], lx [N, W]) ->
+    (vals [Q, k], global_ids [Q, k]); x/lx sharded over ``axis`` on dim 0,
+    queries replicated.  With ``with_tomb=True`` the fn takes a fifth
+    argument: a flat [S·⌈n_local/8⌉] u8 tombstone bitmap sharded over the
+    same axis — each shard receives exactly its own rows' packed bits
+    (see ``DistributedFlatIndex._shard_tomb``) and masks them before its
+    local top-k, so the collective merge only ever sees live rows.
     """
     n_shards = mesh.shape[axis]
 
-    def per_shard(q, x, lq, lx):
-        idx = jax.lax.axis_index(axis)
-        n_local = x.shape[0]
-        offset = (idx * n_local).astype(jnp.int32)
-        vals, gids = _local_topk(q, x, lq, lx, k, metric, offset)
+    def merge(vals, gids):
         # all-gather the tiny [Q, k] partials and merge locally
         av = jax.lax.all_gather(vals, axis)          # [S, Q, k]
         ai = jax.lax.all_gather(gids, axis)          # [S, Q, k]
@@ -64,9 +65,24 @@ def sharded_filtered_topk(mesh: Mesh, *, axis: str = "data", k: int = 10,
         neg, pos = jax.lax.top_k(-av, k)
         return -neg, jnp.take_along_axis(ai, pos, axis=1)
 
+    def offset_of(x):
+        return (jax.lax.axis_index(axis) * x.shape[0]).astype(jnp.int32)
+
+    if with_tomb:
+        def per_shard(q, x, lq, lx, tomb):
+            vals, gids = _local_topk(q, x, lq, lx, k, metric, offset_of(x),
+                                     tomb=tomb)
+            return merge(vals, gids)
+        in_specs = (P(), P(axis), P(), P(axis), P(axis))
+    else:
+        def per_shard(q, x, lq, lx):
+            vals, gids = _local_topk(q, x, lq, lx, k, metric, offset_of(x))
+            return merge(vals, gids)
+        in_specs = (P(), P(axis), P(), P(axis))
+
     shard_fn = shard_map(
         per_shard, mesh=mesh,
-        in_specs=(P(), P(axis), P(), P(axis)),
+        in_specs=in_specs,
         out_specs=(P(), P()),
         check_vma=False)
     return jax.jit(shard_fn)
@@ -95,6 +111,8 @@ class DistributedFlatIndex:
     routed to exactly one logical index.
     """
 
+    supports_tombstones = True   # lazy-delete capability (index.base)
+
     def __init__(self, vectors: np.ndarray, label_words: np.ndarray,
                  mesh: Mesh, *, axis: str = "data", metric: str = "l2"):
         self.metric = metric
@@ -108,7 +126,8 @@ class DistributedFlatIndex:
             vectors = np.concatenate(
                 [vectors, np.zeros((pad, d), vectors.dtype)], axis=0)
             # padded rows carry an empty label mask (never passes a
-            # non-empty query); the id-range mask below handles empty queries
+            # non-empty query); empty-label queries are handled by the
+            # permanent pad tombstones installed below
             label_words = np.concatenate(
                 [label_words,
                  np.zeros((pad, label_words.shape[1]), label_words.dtype)],
@@ -117,7 +136,15 @@ class DistributedFlatIndex:
         x_sharding = NamedSharding(mesh, jax.sharding.PartitionSpec(axis))
         self.x = jax.device_put(jnp.asarray(vectors, jnp.float32), x_sharding)
         self.lx = jax.device_put(jnp.asarray(label_words, jnp.int32), x_sharding)
-        self._fns: dict[int, callable] = {}
+        self._fns: dict[tuple[int, bool], callable] = {}
+        # pad rows are PERMANENT TOMBSTONES: their zero label mask passes
+        # the containment filter for empty-label queries, and the id-range
+        # mask after the merge cannot give back the shard-local top-k
+        # slots they steal — the tombstone mask excludes them BEFORE the
+        # local top-k, which is the only correct place (found by the
+        # multi-shard whole-shard-delete test, ISSUE 5)
+        self._pad_tomb = (jnp.asarray(self._shard_tomb(
+            np.zeros(tombstone_bytes(n), np.uint8))) if pad else None)
 
     @classmethod
     def build(cls, vectors, label_words, metric: str = "l2",
@@ -128,41 +155,67 @@ class DistributedFlatIndex:
         return cls(vectors, label_words, mesh or _default_mesh(axis),
                    axis=axis, metric=metric, **params)
 
-    def _fn(self, k: int):
-        if k not in self._fns:
-            self._fns[k] = sharded_filtered_topk(
-                self.mesh, axis=self.axis, k=k, metric=self.metric)
-        return self._fns[k]
+    def _fn(self, k: int, with_tomb: bool = False):
+        key = (k, with_tomb)
+        if key not in self._fns:
+            self._fns[key] = sharded_filtered_topk(
+                self.mesh, axis=self.axis, k=k, metric=self.metric,
+                with_tomb=with_tomb)
+        return self._fns[key]
+
+    def _shard_tomb(self, tomb: np.ndarray) -> np.ndarray:
+        """Re-shard a local-row packed bitmap alongside the padded rows:
+        bits are unpacked to the true row count, laid out over the
+        padded/sharded row space, and re-packed PER SHARD — so shard i's
+        chunk of the flat [S·⌈n_local/8⌉] array holds exactly its own
+        rows' bits.  Pad rows are marked dead here (they are permanent
+        tombstones — see ``__init__``).  Host cost is a few µs on the
+        ⌈n/8⌉-byte bitmap."""
+        s = self.mesh.shape[self.axis]
+        n_local = max(self._padded_n // s, 1)
+        bits = np.unpackbits(np.asarray(tomb, np.uint8),
+                             bitorder="little")[:self.num_vectors]
+        full = np.ones(s * n_local, np.uint8)    # pad rows dead by default
+        full[:bits.size] = bits
+        mat = np.zeros((s, 8 * tombstone_bytes(n_local)), np.uint8)
+        mat[:, :n_local] = full.reshape(s, n_local)
+        return np.packbits(mat, axis=1, bitorder="little").reshape(-1)
 
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
-               k: int) -> tuple[np.ndarray, np.ndarray]:
+               k: int, tomb=None) -> tuple[np.ndarray, np.ndarray]:
         # bucket the batch so direct callers reuse the executor's traced
         # (index, k, bucket) shard_map programs (shape stability)
         return pad_to_bucket(self.search_padded, queries,
-                             query_label_words, k, self.num_vectors)
+                             query_label_words, k, self.num_vectors,
+                             tomb=tomb)
 
     def search_padded(self, queries: np.ndarray,
                       query_label_words: np.ndarray,
-                      k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+                      k: int, tomb=None) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Bucket-shaped sharded search (``index.base`` contract).
 
         The bucketed batch is replicated over the mesh, each shard runs the
         fused filtered scan on its local rows, and the [Q, k] per-shard
         partials are all-gathered and merged with ``lax.top_k`` — one
-        shard_map trace per (index, k, bucket).
+        shard_map trace per (index, k, bucket).  ``tomb`` (packed bitmap
+        over local rows) is re-sharded alongside the rows and masked
+        before each shard-local top-k; the tombstone-free ``None`` variant
+        keeps its own static trace.
         """
         cache = bucket_cache(self)
         bucket = queries.shape[0]
         fn = cache.get((k, bucket))
         if fn is None:
-            sharded = self._fn(k)
-
-            def fn(q, lq):
-                vals, gids = sharded(q, self.x, lq, self.lx)
-                # padded rows never pass the containment filter for
-                # non-empty queries; for empty queries they score as
-                # ordinary zeros — mask by id range (padding lives past the
-                # true row count of the last shard).
+            def fn(q, lq, tomb_flat=None):
+                if tomb_flat is None:
+                    vals, gids = self._fn(k)(q, self.x, lq, self.lx)
+                else:
+                    vals, gids = self._fn(k, with_tomb=True)(
+                        q, self.x, lq, self.lx, tomb_flat)
+                # empty-slot sentinels (2^30 from the shard-local scan)
+                # resolve to the index cardinality; the pad rows that the
+                # row-count alignment introduced are already excluded by
+                # their permanent tombstones BEFORE the local top-k
                 bad = gids >= self.num_vectors
                 vals = jnp.where(bad, jnp.float32(jnp.inf), vals)
                 gids = jnp.where(bad, self.num_vectors, gids)
@@ -170,7 +223,14 @@ class DistributedFlatIndex:
             cache[(k, bucket)] = fn
         q = jnp.asarray(queries, jnp.float32)
         lq = jnp.asarray(query_label_words, jnp.int32)
-        return fn(q, lq)
+        if tomb is None:
+            # pad-carrying indexes route their permanent pad tombstones
+            # through the same masked program; pad-free indexes keep the
+            # exact tombstone-free trace
+            tomb_flat = self._pad_tomb
+        else:
+            tomb_flat = jnp.asarray(self._shard_tomb(tomb))
+        return fn(q, lq, tomb_flat)
 
     @property
     def nbytes(self) -> int:

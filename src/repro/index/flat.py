@@ -21,6 +21,8 @@ from .base import Arena, bucket_cache, pad_to_bucket, pow2_bucket, register_inde
 class FlatIndex:
     """Brute-force tiled scan over the selected rows."""
 
+    supports_tombstones = True   # lazy-delete capability (index.base)
+
     def __init__(self, vectors: np.ndarray, label_words: np.ndarray,
                  metric: str = "l2", kernel_backend: str = "ref",
                  block_n: int = 1024):
@@ -45,22 +47,23 @@ class FlatIndex:
                              metric=metric, **params)
 
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
-               k: int) -> tuple[np.ndarray, np.ndarray]:
+               k: int, tomb=None) -> tuple[np.ndarray, np.ndarray]:
         q = jnp.asarray(queries, dtype=jnp.float32)
         lq = jnp.asarray(query_label_words, dtype=jnp.int32)
         if self.kernel_backend == "ref":
-            vals, idxs = _ref_topk_jit(q, self.vectors, lq, self.label_words, k,
-                                       self.metric)
+            vals, idxs = _ref_topk_jit(q, self.vectors, lq, self.label_words,
+                                       tomb, k, self.metric)
         else:
             vals, idxs = ops.filtered_topk(q, self.vectors, lq, self.label_words,
                                            k=k, metric=self.metric,
                                            block_n=self.block_n,
-                                           backend=self.kernel_backend)
+                                           backend=self.kernel_backend,
+                                           tomb=tomb)
         return np.asarray(vals), np.asarray(idxs)
 
     def search_padded(self, queries: np.ndarray,
                       query_label_words: np.ndarray,
-                      k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+                      k: int, tomb=None) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Bucket-shaped search for the batched executor (core.engine).
 
         ``queries`` arrives padded to a power-of-two bucket; the caller
@@ -69,6 +72,9 @@ class FlatIndex:
         jit-cached function: repeated serving batches that land in the same
         bucket reuse the compiled XLA executable instead of retracing.
         Returns device arrays [bucket, k].
+
+        ``tomb``: packed bitmap over local rows (``index.base`` contract);
+        ``None`` runs the exact tombstone-free program.
         """
         cache = bucket_cache(self)
         bucket = queries.shape[0]
@@ -80,20 +86,23 @@ class FlatIndex:
                 # dispatch through the module-level jit so indexes with
                 # coinciding (bucket, rows, dim) shapes share one compiled
                 # executable instead of retracing per index
-                def fn(q, lq, _k=k):
+                def fn(q, lq, tomb=None, _k=k):
                     return _padded_topk_jit(q, self.vectors, lq,
-                                            self.label_words, _k, self.metric)
+                                            self.label_words, tomb, _k,
+                                            self.metric)
             else:
-                def fn(q, lq, _k=k):
+                def fn(q, lq, tomb=None, _k=k):
                     return ops.filtered_topk(q, self.vectors, lq,
                                              self.label_words, k=_k,
                                              metric=self.metric,
                                              block_n=self.block_n,
-                                             backend=self.kernel_backend)
+                                             backend=self.kernel_backend,
+                                             tomb=tomb)
             cache[(k, bucket)] = fn
         q = jnp.asarray(queries, dtype=jnp.float32)
         lq = jnp.asarray(query_label_words, dtype=jnp.int32)
-        return fn(q, lq)
+        tomb = None if tomb is None else jnp.asarray(tomb, jnp.uint8)
+        return fn(q, lq, tomb)
 
     @property
     def nbytes(self) -> int:
@@ -123,6 +132,7 @@ class FlatArenaView:
 
     backend_name = "flat"
     arena_native = True
+    supports_tombstones = True   # bitmap in ARENA row space (index.base)
 
     def __init__(self, arena: Arena, rows_concat, start: int, length: int, *,
                  metric: str = "l2", kernel_backend: str = "ref",
@@ -138,23 +148,29 @@ class FlatArenaView:
         self.dim = arena.dim
 
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
-               k: int) -> tuple[np.ndarray, np.ndarray]:
+               k: int, tomb=None) -> tuple[np.ndarray, np.ndarray]:
         return pad_to_bucket(self.search_padded, queries, query_label_words,
-                             k, self.length)
+                             k, self.length, tomb=tomb)
 
     def search_padded(self, queries: np.ndarray,
                       query_label_words: np.ndarray,
-                      k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+                      k: int, tomb=None) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Bucket-shaped search over the view's segment (``index.base``
         contract): one cached dispatch per (k, bucket), all landing in the
-        shared segmented-program executable for (k, bucket, lmax)."""
+        shared segmented-program executable for (k, bucket, lmax).
+
+        ``tomb`` is indexed by the view's *storage rows* — the shared
+        arena's global rows (the ``index.base`` contract for views) — and
+        feeds the segmented program's fused gathered-byte AND directly,
+        the same path ``core.stream`` drives with ``Arena.tombstones``.
+        """
         cache = bucket_cache(self)
         bucket = queries.shape[0]
         fn = cache.get((k, bucket))
         if fn is None:
             lmax = pow2_bucket(self.length)
 
-            def fn(q, lq, _k=k, _lmax=lmax):
+            def fn(q, lq, tomb=None, _k=k, _lmax=lmax):
                 shape = (q.shape[0],)
                 starts = jnp.full(shape, self.start, jnp.int32)
                 lens = jnp.full(shape, self.length, jnp.int32)
@@ -162,7 +178,7 @@ class FlatArenaView:
                     q, lq, self.arena.vectors, self.arena.label_words,
                     self.arena.norms, self._rows, starts, lens, k=_k,
                     lmax=_lmax, metric=self.metric,
-                    backend=self.kernel_backend)
+                    backend=self.kernel_backend, tomb=tomb)
                 # segment positions ARE local ids (ascending global order);
                 # normalize the empty-slot sentinel to num_vectors
                 ids = jnp.where(pos >= self.length, self.length, pos)
@@ -170,35 +186,32 @@ class FlatArenaView:
             cache[(k, bucket)] = fn
         q = jnp.asarray(queries, dtype=jnp.float32)
         lq = jnp.asarray(query_label_words, dtype=jnp.int32)
-        return fn(q, lq)
+        tomb = None if tomb is None else jnp.asarray(tomb, jnp.uint8)
+        return fn(q, lq, tomb)
 
     @property
     def nbytes(self) -> int:
         return 0
 
 
-def _ref_topk(q, x, lq, lx, k: int, metric: str):
-    return ref.filtered_topk(q, x, lq, lx, k, metric)
+def _ref_topk(q, x, lq, lx, tomb, k: int, metric: str):
+    return ref.filtered_topk(q, x, lq, lx, k, metric, tomb=tomb)
 
 
-_ref_topk_jit = jax.jit(_ref_topk, static_argnums=(4, 5))
+_ref_topk_jit = jax.jit(_ref_topk, static_argnums=(5, 6))
 
 
-def _padded_filtered_topk(q, x, lq, lx, k: int, metric: str):
+def _padded_filtered_topk(q, x, lq, lx, tomb, k: int, metric: str):
     """`ref.filtered_topk` semantics via ``lax.top_k`` — the executor's hot
     path.  Distances are computed by the same oracle code, and XLA's TopK
     breaks value ties toward the lower index exactly like the oracle's
     stable argsort, so the (vals, idxs) output is bit-identical while the
-    selection drops from an O(n log n) full sort to top-k."""
+    selection drops from an O(n log n) full sort to top-k.  The optional
+    ``tomb`` AND, inf-pad, and empty-slot normalization live in the shared
+    ``ops.masked_topk_tail`` (one home for the tie-break/sentinel
+    convention; ``tomb=None`` traces the exact tombstone-free program)."""
     d = ref.masked_distance(q, x, lq, lx, metric)
-    n = x.shape[0]
-    if k > n:  # fewer rows than requested: pad the distance matrix
-        d = jnp.pad(d, ((0, 0), (0, k - n)), constant_values=jnp.inf)
-    neg, idxs = jax.lax.top_k(-d, k)
-    vals = -neg
-    idxs = jnp.where(jnp.isinf(vals), n, idxs)
-    vals = jnp.where(jnp.isinf(vals), jnp.float32(jnp.inf), vals)
-    return vals, idxs.astype(jnp.int32)
+    return ops.masked_topk_tail(d, tomb, x.shape[0], k=k)
 
 
-_padded_topk_jit = jax.jit(_padded_filtered_topk, static_argnums=(4, 5))
+_padded_topk_jit = jax.jit(_padded_filtered_topk, static_argnums=(5, 6))

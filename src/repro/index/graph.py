@@ -31,6 +31,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ref
 from .base import bucket_cache, register_index
 
 INF = float("inf")
@@ -144,17 +145,31 @@ def _contains_words(lq: jnp.ndarray, lx: jnp.ndarray) -> jnp.ndarray:
 
 @functools.partial(jax.jit, static_argnames=("k", "ef", "strategy", "max_steps",
                                              "metric"))
-def _beam_search_batch(adj, xb, lxw, q, lq, entries, *, k: int, ef: int,
-                       strategy: str = "post", max_steps: int = 512,
+def _beam_search_batch(adj, xb, lxw, q, lq, entries, tomb=None, *, k: int,
+                       ef: int, strategy: str = "post", max_steps: int = 512,
                        metric: str = "l2"):
     """Batched filtered beam search.
 
     adj [N, M] int32 (-1 pad); xb [N, D] f32; lxw [N, W] int32;
     q [Q, D] f32; lq [Q, W] int32; entries [Q, E] int32 (-1 pad).
     Returns (dists [Q, k], ids [Q, k] — id N ⇒ empty, hops [Q], dcomps [Q]).
+
+    ``tomb`` (optional packed bitmap over node ids; ``index.base``
+    contract): tombstoned nodes are excluded from the RESULT pool via a
+    gathered-byte AND on the passing mask, but stay fully navigable — the
+    candidate pool, visited set, and (under the "pre" strategy) the
+    label-passing navigation mask ignore tombstones, mirroring the arena
+    path's walk-but-don't-return semantics (DESIGN.md §3.6): deleting a
+    bridge node must not disconnect live rows behind it.  ``tomb=None``
+    traces the exact tombstone-free program.
     """
     N, M = adj.shape
     xb_sq = jnp.sum(xb * xb, axis=1)
+
+    def alive_mask(ids):
+        if tomb is None:
+            return jnp.ones(ids.shape, dtype=bool)
+        return ref.tombstone_mask(tomb, jnp.clip(ids, 0, N - 1))
 
     def dist_to(qr, ids):
         rows = xb[jnp.clip(ids, 0, N - 1)]
@@ -167,7 +182,7 @@ def _beam_search_batch(adj, xb, lxw, q, lq, entries, *, k: int, ef: int,
         valid_e = ent >= 0
         e_ids = jnp.where(valid_e, ent, 0)
         e_d = jnp.where(valid_e, dist_to(qr, e_ids), INF)
-        e_pass = _contains_words(lqr, lxw[e_ids]) & valid_e
+        e_pass = _contains_words(lqr, lxw[e_ids]) & valid_e & alive_mask(e_ids)
 
         visited = jnp.zeros(N + 1, dtype=bool)
         visited = visited.at[jnp.where(valid_e, ent, N)].set(True)
@@ -213,6 +228,10 @@ def _beam_search_batch(adj, xb, lxw, q, lq, entries, *, k: int, ef: int,
             visited = visited.at[safe].set(True)
             nd = jnp.where(nv, dist_to(qr, jnp.where(nv, nbrs, 0)), INF)
             npass = _contains_words(lqr, lxw[jnp.clip(nbrs, 0, N - 1)]) & nv
+            # result inclusion additionally requires liveness; navigation
+            # (below) deliberately does NOT — tombstoned nodes keep the
+            # graph connected exactly as before their deletion
+            nres = npass & alive_mask(nbrs)
 
             nav = npass if strategy == "pre" else nv
             cat_d = jnp.concatenate([pool_d, jnp.where(nav, nd, INF)])
@@ -221,8 +240,8 @@ def _beam_search_batch(adj, xb, lxw, q, lq, entries, *, k: int, ef: int,
             order = jnp.argsort(cat_d, stable=True)[:ef]
             pool_d, pool_i, pool_x = cat_d[order], cat_i[order], cat_x[order]
 
-            cat_d = jnp.concatenate([res_d, jnp.where(npass, nd, INF)])
-            cat_i = jnp.concatenate([res_i, jnp.where(npass, nbrs, N)])
+            cat_d = jnp.concatenate([res_d, jnp.where(nres, nd, INF)])
+            cat_i = jnp.concatenate([res_i, jnp.where(nres, nbrs, N)])
             order = jnp.argsort(cat_d, stable=True)[:ef]
             res_d, res_i = cat_d[order], cat_i[order]
             return (pool_d, pool_i, pool_x, visited, res_d, res_i,
@@ -240,6 +259,8 @@ def _beam_search_batch(adj, xb, lxw, q, lq, entries, *, k: int, ef: int,
 @register_index("graph")
 class GraphIndex:
     """Degree-bounded proximity graph with filtered beam search."""
+
+    supports_tombstones = True   # lazy-delete capability (index.base)
 
     def __init__(self, vectors: np.ndarray, label_words: np.ndarray,
                  metric: str = "l2", M: int = 16, n_cand: int = 64,
@@ -277,7 +298,8 @@ class GraphIndex:
 
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
                k: int, ef: int | None = None, entries: np.ndarray | None = None,
-               strategy: str | None = None) -> tuple[np.ndarray, np.ndarray]:
+               strategy: str | None = None,
+               tomb=None) -> tuple[np.ndarray, np.ndarray]:
         # bucket the batch to the executor's power-of-two convention so
         # direct callers reuse traced programs across jittery batch sizes;
         # pad lanes get entry -1 (no valid seed), which fails the loop
@@ -300,9 +322,10 @@ class GraphIndex:
         ent = np.full((bucket, entries.shape[1]), -1, np.int32)
         ent[:g] = entries
         ef = max(ef or self.ef_search, k)
+        tomb = None if tomb is None else jnp.asarray(tomb, jnp.uint8)
         d, i, hops, dc = _beam_search_batch(
             self._adj_dev, self._xb_dev, self._lxw_dev,
-            jnp.asarray(qp), jnp.asarray(lp), jnp.asarray(ent),
+            jnp.asarray(qp), jnp.asarray(lp), jnp.asarray(ent), tomb,
             k=k, ef=ef, strategy=strategy or self.strategy,
             max_steps=self._max_steps(), metric=self.metric)
         self.last_stats = SearchStats(hops=np.asarray(hops)[:g],
@@ -312,8 +335,8 @@ class GraphIndex:
     def search_padded(self, queries: np.ndarray,
                       query_label_words: np.ndarray,
                       k: int, ef: int | None = None,
-                      strategy: str | None = None
-                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
+                      strategy: str | None = None,
+                      tomb=None) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Bucket-shaped beam search (``index.base`` contract).
 
         The beam loop is already a fixed-shape ``lax.while_loop`` vmapped
@@ -321,6 +344,8 @@ class GraphIndex:
         select, so each lane's result is independent of its batch
         neighbors — pad rows cannot perturb real rows); bucketing the batch
         axis makes it trace once per (index, k, bucket[, ef, strategy]).
+        ``tomb`` (packed bitmap over node ids) is a traced argument — see
+        ``_beam_search_batch`` for the walk-but-don't-return semantics.
         """
         cache = bucket_cache(self)
         bucket = queries.shape[0]
@@ -328,17 +353,18 @@ class GraphIndex:
         strategy = strategy or self.strategy
         fn = cache.get((k, bucket, ef, strategy))
         if fn is None:
-            def fn(q, lq, _k=k, _ef=ef, _s=strategy):
+            def fn(q, lq, tomb=None, _k=k, _ef=ef, _s=strategy):
                 entries = jnp.full((q.shape[0], 1), self.medoid, jnp.int32)
                 d, i, _, _ = _beam_search_batch(
                     self._adj_dev, self._xb_dev, self._lxw_dev, q, lq,
-                    entries, k=_k, ef=_ef, strategy=_s,
+                    entries, tomb, k=_k, ef=_ef, strategy=_s,
                     max_steps=self._max_steps(), metric=self.metric)
                 return d, i
             cache[(k, bucket, ef, strategy)] = fn
         q = jnp.asarray(queries, dtype=jnp.float32)
         lq = jnp.asarray(query_label_words, dtype=jnp.int32)
-        return fn(q, lq)
+        tomb = None if tomb is None else jnp.asarray(tomb, jnp.uint8)
+        return fn(q, lq, tomb)
 
     @property
     def nbytes(self) -> int:

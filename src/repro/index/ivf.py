@@ -84,7 +84,7 @@ def _wave_boundaries(n_clusters: int, nprobe: int) -> tuple[int, ...]:
 @functools.partial(jax.jit,
                    static_argnames=("k", "metric", "boundaries"))
 def _ivf_padded_topk(q, lq, xb, lxw, cents, row_cluster, row_in_cluster,
-                     cluster_sizes, row_map, *,
+                     cluster_sizes, row_map, tomb=None, *,
                      k: int, metric: str, boundaries: tuple[int, ...]):
     """Batched incremental-probe IVF search, fully static shapes.
 
@@ -94,6 +94,17 @@ def _ivf_padded_topk(q, lq, xb, lxw, cents, row_cluster, row_in_cluster,
     cluster_sizes [C] i32; row_map [N] i32 (stored row -> original local
     id).  Returns (vals [Q, k] asc, ids [Q, k] original-local; id == N ⇒
     empty slot).
+
+    ``tomb`` (optional packed bitmap over ORIGINAL local row ids — the id
+    space this search returns; ``index.base`` contract): the per-row
+    tombstone byte is gathered through ``row_map`` and AND-ed into the
+    pass mask BEFORE the wave-boundary continuation counts, so the
+    Lemma 3.2 probe doubling widens over deleted rows exactly as it does
+    over filtered-out ones — a fully-tombstoned probe wave accumulates
+    zero passing rows and the loop keeps doubling until k live passing
+    rows are found or every cluster is probed (guaranteed termination at
+    ``boundaries[-1]``).  ``tomb=None`` traces the exact tombstone-free
+    program.
     """
     N = xb.shape[0]
 
@@ -103,9 +114,13 @@ def _ivf_padded_topk(q, lq, xb, lxw, cents, row_cluster, row_in_cluster,
     order_c = jnp.argsort(cd, axis=1, stable=True)             # [Q, C]
     rank_c = jnp.argsort(order_c, axis=1, stable=True)         # inverse perm
 
-    # 2. fused distance + label filter over ALL rows (one masked pass)
+    # 2. fused distance + label filter over ALL rows (one masked pass);
+    #    the tombstone AND composes with the containment filter — a
+    #    deleted row simply stops passing, no distance value changes
     d = ref.masked_distance(q, xb, lq, lxw, metric)            # [Q, N]
     passing = jnp.isfinite(d)
+    if tomb is not None:
+        passing = passing & ref.tombstone_mask(tomb, row_map)[None, :]
 
     # 3. Lemma 3.2 probe continuation: per-cluster passing counts, summed
     #    over the probe-order prefix at each static wave boundary; the
@@ -154,6 +169,8 @@ def _ivf_padded_topk(q, lq, xb, lxw, cents, row_cluster, row_in_cluster,
 
 @register_index("ivf")
 class IVFIndex:
+    supports_tombstones = True   # lazy-delete capability (index.base)
+
     def __init__(self, vectors: np.ndarray, label_words: np.ndarray,
                  metric: str = "l2", n_clusters: int | None = None,
                  nprobe: int = 8, kmeans_iters: int = 8, seed: int = 0):
@@ -194,38 +211,42 @@ class IVFIndex:
         return cls(vectors, label_words, metric, **params)
 
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
-               k: int) -> tuple[np.ndarray, np.ndarray]:
+               k: int, tomb=None) -> tuple[np.ndarray, np.ndarray]:
         # pad to the executor's power-of-two bucket convention so direct
         # callers with jittery batch sizes reuse the same traced programs
         # instead of compiling one per distinct Q (shape stability)
         return pad_to_bucket(self.search_padded, queries,
-                             query_label_words, k, self.num_vectors)
+                             query_label_words, k, self.num_vectors,
+                             tomb=tomb)
 
     def search_padded(self, queries: np.ndarray,
                       query_label_words: np.ndarray,
-                      k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+                      k: int, tomb=None) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Bucket-shaped incremental-probe search (``index.base`` contract).
 
         One traced program per (index, k, bucket); the module-level jit
         shares XLA executables across indexes with coinciding shapes,
-        metric, and wave schedule.
+        metric, and wave schedule.  ``tomb`` (packed bitmap over local
+        rows) is a traced argument — delete batches never retrace; the
+        tombstone-free ``None`` variant keeps its own static trace.
         """
         cache = bucket_cache(self)
         bucket = queries.shape[0]
         fn = cache.get((k, bucket))
         if fn is None:
-            def fn(q, lq, _k=k):
+            def fn(q, lq, tomb=None, _k=k):
                 return _ivf_padded_topk(q, lq, self._xb, self._lxw,
                                         self._cents, self._row_cluster,
                                         self._row_in_cluster,
                                         self._cluster_sizes,
-                                        self._row_map_dev, k=_k,
+                                        self._row_map_dev, tomb, k=_k,
                                         metric=self.metric,
                                         boundaries=self._boundaries)
             cache[(k, bucket)] = fn
         q = jnp.asarray(queries, dtype=jnp.float32)
         lq = jnp.asarray(query_label_words, dtype=jnp.int32)
-        return fn(q, lq)
+        tomb = None if tomb is None else jnp.asarray(tomb, jnp.uint8)
+        return fn(q, lq, tomb)
 
     @property
     def nbytes(self) -> int:

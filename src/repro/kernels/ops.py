@@ -62,10 +62,22 @@ def masked_distance(q, x, lq_words, lx_words, *, metric: str = "l2",
 
 def filtered_topk(q, x, lq_words, lx_words, *, k: int, metric: str = "l2",
                   block_q: int = 8, block_n: int = 512,
-                  backend: str = "pallas"):
-    """Fused filtered top-k: -> (vals [Q, k], idxs [Q, k]); idx == N ⇒ pad."""
+                  backend: str = "pallas", tomb=None):
+    """Fused filtered top-k: -> (vals [Q, k], idxs [Q, k]); idx == N ⇒ pad.
+
+    ``tomb`` (optional packed bitmap [⌈N/8⌉] u8, DESIGN.md §3.6): set bits
+    drop rows from the result exactly like a failed label containment.  On
+    the pallas path the gathered-byte AND composes outside the fused
+    kernel (distances from the masked-distance kernel, mask + ``lax.top_k``
+    at the jnp level); ``tomb=None`` keeps the fused program untouched.
+    """
     if backend == "ref":
-        return ref.filtered_topk(q, x, lq_words, lx_words, k, metric)
+        return ref.filtered_topk(q, x, lq_words, lx_words, k, metric,
+                                 tomb=tomb)
+    if tomb is not None:
+        d = masked_distance(q, x, lq_words, lx_words, metric=metric,
+                            block_q=block_q, block_n=block_n, backend=backend)
+        return _masked_distance_topk(d, jnp.asarray(tomb), x.shape[0], k=k)
     Q, N = q.shape[0], x.shape[0]
     block_n = min(block_n, max(128, 1 << (N - 1).bit_length()))
     k_eff = min(k, block_n)
@@ -81,6 +93,34 @@ def filtered_topk(q, x, lq_words, lx_words, *, k: int, metric: str = "l2",
         vals = jnp.pad(vals, ((0, 0), (0, k - k_eff)), constant_values=jnp.inf)
         idxs = jnp.pad(idxs, ((0, 0), (0, k - k_eff)), constant_values=N)
     return vals, idxs
+
+
+def masked_topk_tail(d, tomb, n: int, *, k: int):
+    """Shared epilogue for every flat masked-distance top-k path: the
+    optional tombstone AND over the row iota, the k > n inf-pad, the
+    deterministic (distance, index) ``lax.top_k``, and the (+inf, n)
+    empty-slot normalization.  ONE home for the tie-break/sentinel
+    convention — the flat ref program (`index/flat.py`) and the
+    pallas-path composition below both delegate here, so the two cannot
+    silently diverge.  Traceable (called inside jit)."""
+    if tomb is not None:
+        alive = ref.tombstone_mask(tomb, jnp.arange(n, dtype=jnp.int32))
+        d = jnp.where(alive[None, :], d, jnp.inf)
+    if k > n:  # fewer rows than requested: pad the distance matrix
+        d = jnp.pad(d, ((0, 0), (0, k - n)), constant_values=jnp.inf)
+    neg, idxs = jax.lax.top_k(-d, k)
+    vals = -neg
+    idxs = jnp.where(jnp.isinf(vals), n, idxs)
+    vals = jnp.where(jnp.isinf(vals), jnp.float32(jnp.inf), vals)
+    return vals, idxs.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "k"))
+def _masked_distance_topk(d, tomb, n: int, *, k: int):
+    """Tombstone-mask a [Q, N] distance matrix and take the deterministic
+    (distance, index) top-k — the pallas-path composition of
+    :func:`filtered_topk` with a tombstone bitmap."""
+    return masked_topk_tail(d, tomb, n, k=k)
 
 
 # Candidate-span chunk for the segmented arena scan: bounds the gathered
@@ -301,6 +341,7 @@ __all__ = [
     "filtered_topk",
     "gather_distance",
     "masked_distance",
+    "masked_topk_tail",
     "merge_topk",
     "prepare_label_words",
     "scatter_topk_rows",

@@ -44,15 +44,25 @@ def masked_distance(q, x, lq_words, lx_words, metric: str = "l2") -> jnp.ndarray
     return jnp.where(keep, d, FILTERED)
 
 
-def filtered_topk(q, x, lq_words, lx_words, k: int, metric: str = "l2"):
+def filtered_topk(q, x, lq_words, lx_words, k: int, metric: str = "l2",
+                  tomb=None):
     """Exact filtered top-k oracle: (vals [Q, k], idxs [Q, k]).
 
     Ties broken toward the lower index (matches the kernel's deterministic
     iota tie-break).  Rows with fewer than k passing entries pad with
     (+inf, N) — N is an intentionally out-of-range sentinel.
+
+    ``tomb``: optional packed tombstone bitmap [⌈N/8⌉] u8 over the row ids
+    (see :func:`tombstone_mask`) — a set bit drops the row exactly like a
+    failed label containment, so tombstones compose with PostFiltering
+    without touching any surviving distance (the ``search_padded``
+    protocol's lazy-delete contract, DESIGN.md §3.6).
     """
     d = masked_distance(q, x, lq_words, lx_words, metric)
     n = x.shape[0]
+    if tomb is not None:
+        alive = tombstone_mask(tomb, jnp.arange(n, dtype=jnp.int32))
+        d = jnp.where(alive[None, :], d, FILTERED)
     if k > n:  # fewer rows than requested: pad the distance matrix
         d = jnp.pad(d, ((0, 0), (0, k - n)), constant_values=jnp.inf)
     # stable lexicographic top-k: sort by (distance, index)

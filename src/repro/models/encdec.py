@@ -17,7 +17,6 @@ Whisper uses LayerNorm + biases; we keep RMSNorm-free fidelity by using
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -193,8 +192,8 @@ def cache_structs(cfg: EncDecConfig, batch: int, max_len: int):
 
 
 def cache_logical(cfg: EncDecConfig):
-    l = (shd.LAYERS, shd.BATCH, shd.SEQ, shd.KV_HEADS, shd.HEAD_DIM)
-    return {"self": {"k": l, "v": l}, "cross": {"k": l, "v": l}}
+    kv = (shd.LAYERS, shd.BATCH, shd.SEQ, shd.KV_HEADS, shd.HEAD_DIM)
+    return {"self": {"k": kv, "v": kv}, "cross": {"k": kv, "v": kv}}
 
 
 def prefill(params, frames, tokens, positions, cfg: EncDecConfig,

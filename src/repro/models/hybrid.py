@@ -32,7 +32,7 @@ from .attention import AttentionConfig, attn_specs, attention, decode_attention
 from .common import (ParamSpec, cross_entropy, embed_lookup, norm_spec,
                      rms_norm)
 from .mlp import MLPConfig, mlp, mlp_specs
-from .ssm import (SSMConfig, ssm_decode, ssm_forward, ssm_init_state,
+from .ssm import (SSMConfig, ssm_decode, ssm_forward,
                   ssm_specs, ssm_state_logical, ssm_state_spec)
 
 
@@ -228,8 +228,11 @@ def state_structs(cfg: HybridConfig, batch: int, max_len: int):
 def state_logical(cfg: HybridConfig):
     base = ssm_state_logical(cfg.ssm_cfg())
     kvl = (shd.LAYERS, shd.BATCH, shd.SEQ, shd.KV_HEADS, shd.HEAD_DIM)
-    is_tup = lambda x: isinstance(x, tuple)
-    lead = lambda t, pre: jax.tree.map(lambda l: pre + l, t, is_leaf=is_tup)
+    def is_tup(x):
+        return isinstance(x, tuple)
+
+    def lead(t, pre):
+        return jax.tree.map(lambda ax: pre + ax, t, is_leaf=is_tup)
     out = {}
     if cfg.n_groups:
         out["groups"] = {"ssm": lead(base, (shd.LAYERS, None)),

@@ -138,8 +138,9 @@ def ssd_chunked(x, dt, A, Bm, Cm, cfg: SSMConfig, initial_state=None):
         # pad with dt=0 rows: decay exp(0)=1 and dt·Bx^T=0, so padding is
         # state-neutral; padded outputs are sliced off below
         pad = L - S % L
-        widths = lambda a: [(0, pad) if i == 1 else (0, 0)
-                            for i in range(a.ndim)]
+        def widths(a):
+            return [(0, pad) if i == 1 else (0, 0)
+                    for i in range(a.ndim)]
         x = jnp.pad(x, widths(x))
         dt = jnp.pad(dt, widths(dt))
         Bm = jnp.pad(Bm, widths(Bm))
@@ -228,8 +229,9 @@ def ssm_forward(p, u, cfg: SSMConfig, initial=None):
 def ssm_state_spec(cfg: SSMConfig, batch: int) -> dict:
     """ShapeDtypeStructs for the decode state of one SSD layer."""
     gn = cfg.n_groups * cfg.d_state
-    conv = lambda d: jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, d),
-                                          jnp.bfloat16)
+    def conv(d):
+        return jax.ShapeDtypeStruct((batch, cfg.d_conv - 1, d),
+                                    jnp.bfloat16)
     return {
         "ssm": jax.ShapeDtypeStruct(
             (batch, cfg.n_heads, cfg.d_head, cfg.d_state), jnp.float32),

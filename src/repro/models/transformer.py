@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from .. import sharding as shd
 from .attention import (AttentionConfig, attn_specs, attention, cache_logical,
                         cache_spec, decode_attention, init_cache)
-from .common import (ParamSpec, count_params, cross_entropy, embed_lookup,
+from .common import (ParamSpec, cross_entropy, embed_lookup,
                      init_params, norm_spec, param_structs, rms_norm, softcap)
 from .mlp import MLPConfig, MoEConfig, mlp, mlp_specs, moe, moe_specs
 

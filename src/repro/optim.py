@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -97,7 +96,8 @@ def adamw_state_specs(spec_tree):
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.float32)}
@@ -169,7 +169,8 @@ def adafactor_update(cfg: OptimizerConfig, grads, state, params):
     step = state["step"] + 1.0
     lr = lr_schedule(cfg, step)
     beta2 = 1.0 - jnp.power(step, -cfg.decay_exponent)
-    is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    def is_state(x):
+        return isinstance(x, dict) and ("v" in x or "vr" in x)
 
     def upd(g, v, p):
         gf = g.astype(jnp.float32)

@@ -22,7 +22,7 @@ what keeps the retrieval step one-shot per request here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp

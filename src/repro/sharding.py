@@ -195,7 +195,7 @@ def struct_shardings(struct_tree, logical_tree, mesh: Mesh,
                      rules: ShardingRules = DEFAULT_RULES):
     """Shardings for a (ShapeDtypeStruct tree, logical-axis tree) pair."""
     return jax.tree.map(
-        lambda s, l: rules.sharding(l, mesh, s.shape),
+        lambda s, logical: rules.sharding(logical, mesh, s.shape),
         struct_tree, logical_tree,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 

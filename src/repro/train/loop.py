@@ -184,7 +184,7 @@ class Trainer:
         import hashlib
         h = hashlib.sha256()
         for _, leaf in sorted(
-                ((".".join(map(str, p)), l) for p, l in
+                ((".".join(map(str, p)), leaf) for p, leaf in
                  tree_flatten_with_path(
                      {"p": self.params, "o": self.opt_state})[0]),
                 key=lambda kv: kv[0]):

@@ -1,0 +1,38 @@
+"""Shared pytest configuration (flake-proofing, ISSUE 5).
+
+Registers a derandomized hypothesis ``ci`` profile: a fixed derivation seed
+(example generation no longer varies run to run) and ``deadline=None`` (the
+per-example timing assertion is meaningless on shared Actions runners where
+a cold XLA compile can land inside any example).  ``scripts/ci_tier1.sh``
+selects it via ``HYPOTHESIS_PROFILE=ci``; local runs keep hypothesis's
+default randomized profile, which is the better bug-finder.
+
+Hypothesis is an optional test dependency (requirements-test.txt) — the
+property-based modules skip themselves via ``pytest.importorskip`` when it
+is absent, so this hook must degrade to a no-op rather than fail the whole
+collection.
+"""
+
+from __future__ import annotations
+
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci",
+        derandomize=True,
+        deadline=None,
+        # module-scoped engine fixtures are deliberately reused across
+        # examples (building a LabelHybridEngine per example would swamp
+        # the suite); the data they hold is immutable, so the check is
+        # noise here
+        suppress_health_check=[HealthCheck.function_scoped_fixture],
+    )
+    # load explicitly: registering alone changes nothing, and not every
+    # hypothesis release honors the HYPOTHESIS_PROFILE environment
+    # variable on its own (requirements-test.txt allows any >= 6)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:  # pragma: no cover - exercised on bare installs
+    pass

@@ -7,7 +7,7 @@ from repro.core import LabelWorkloadConfig, generate_label_sets, recall_at_k
 from repro.core.adaptive import (AdaptiveEngine, WorkloadMonitor,
                                  weighted_select)
 from repro.core.engine import LabelHybridEngine, brute_force_filtered
-from repro.core.groups import EMPTY_KEY, GroupTable
+from repro.core.groups import EMPTY_KEY
 from repro.core.labels import encode_label_set, mask_key
 
 

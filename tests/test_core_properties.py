@@ -166,7 +166,7 @@ def test_workload_generators_all_distributions():
         cfg = LabelWorkloadConfig(num_labels=16, distribution=dist, seed=7)
         lsets = generate_label_sets(500, cfg)
         assert len(lsets) == 500
-        assert all(all(0 <= l < 16 for l in ls) for ls in lsets)
+        assert all(all(0 <= lab < 16 for lab in ls) for ls in lsets)
         qs = generate_query_label_sets(lsets, 100, seed=2)
         assert len(qs) == 100
         # queries drawn from base sets have non-empty filtered sets

@@ -95,7 +95,7 @@ print("RESULT" + json.dumps(results))
 def parity():
     r = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
                        text=True, cwd=".", timeout=1800)
-    line = next((l for l in r.stdout.splitlines() if l.startswith("RESULT")),
+    line = next((ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")),
                 None)
     assert line, f"child failed:\n{r.stdout[-3000:]}\n{r.stderr[-3000:]}"
     return json.loads(line[len("RESULT"):])
@@ -145,7 +145,7 @@ def test_compressed_psum_multidevice():
     """int8 cross-pod all-reduce ≈ exact pmean on a real 4-device mesh."""
     r = subprocess.run([sys.executable, "-c", _PSUM_CHILD],
                        capture_output=True, text=True, cwd=".", timeout=600)
-    line = next((l for l in r.stdout.splitlines() if l.startswith("RESULT")),
+    line = next((ln for ln in r.stdout.splitlines() if ln.startswith("RESULT")),
                 None)
     assert line, f"child failed:\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}"
     rel = json.loads(line[len("RESULT"):])["rel"]

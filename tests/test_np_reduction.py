@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import itertools
 
-import numpy as np
 import pytest
 
 from repro.core import EMPTY_KEY, greedy_eis
@@ -19,13 +18,13 @@ from repro.core.groups import coverage_pairs
 def build_gadget(universe: list[int], sets: list[tuple[int, ...]]):
     """Paper Fig 8: label universe = {S_1..S_l} ∪ {U_1, U_1', ...} ∪ {B}.
 
-    Encoding (label ids): S_i -> i;  U_j -> l + 2j;  U_j' -> l + 2j + 1;
+    Encoding (label ids): S_i -> i;  U_j -> ns + 2j;  U_j' -> ns + 2j + 1;
     bottom 'all labels' entries close the lattice from below.
 
     Returns (closure_sizes, query_keys, s_keys, u_keys) with the paper's
     costs: |u_j| = |u_j'| = 11, |s_i| = 20, bottom shared 10.
     """
-    l = len(sets)
+    ns = len(sets)
     p = len(universe)
 
     def key_of(labels):
@@ -34,12 +33,12 @@ def build_gadget(universe: list[int], sets: list[tuple[int, ...]]):
             k[lab // 64] |= 1 << (lab % 64)
         return tuple(k)
 
-    s_label = {i: i for i in range(l)}
-    u_label = {j: l + 2 * j for j in range(p)}
-    udup_label = {j: l + 2 * j + 1 for j in range(p)}
+    s_label = {i: i for i in range(ns)}
+    u_label = {j: ns + 2 * j for j in range(p)}
+    udup_label = {j: ns + 2 * j + 1 for j in range(p)}
 
     # label set of each candidate index (the *query* label set it serves)
-    s_keys = {i: key_of([s_label[i]]) for i in range(l)}
+    s_keys = {i: key_of([s_label[i]]) for i in range(ns)}
     u_keys, udup_keys = {}, {}
     for j, u in enumerate(universe):
         covers = [i for i, s in enumerate(sets) if u in s]
@@ -50,7 +49,7 @@ def build_gadget(universe: list[int], sets: list[tuple[int, ...]]):
     for j in range(p):
         closure[u_keys[j]] = 11       # 1 own + 10 bottom
         closure[udup_keys[j]] = 11
-    for i in range(l):
+    for i in range(ns):
         members = [j for j, u in enumerate(universe) if u in sets[i]]
         n_own = 10 - 2 * len(members)
         closure[s_keys[i]] = n_own + 2 * len(members) + 10   # = 20

@@ -112,14 +112,21 @@ def test_single_query_and_empty_batch(backend_engine, data):
     np.testing.assert_array_equal(d1, dl, err_msg=name)
 
 
-def _ivf_reference(idx, queries, lq_words, k):
+def _ivf_reference(idx, queries, lq_words, k, dead=None):
     """Independent oracle for the IVF probe semantics: the original
     *sequential* incremental probe loop (doubling waves, stop when >= k
     passing rows, stable probe-order tie-break), replayed in numpy against
     the index's cluster-major internals.  This is NOT the code under test
     — `IVFIndex.search` runs the batched wave-boundary program — so bit
     equality here proves the de-sequentialized rewrite, not just that the
-    two executors share an implementation."""
+    two executors share an implementation.
+
+    ``dead`` (optional bool mask over ORIGINAL local row ids): tombstoned
+    rows are treated exactly like rows failing the label filter — they do
+    not count toward the k accumulated passing rows (the k+1 continuation
+    widens over them) and never enter the candidate list — the
+    ``search_padded(tomb=…)`` contract of ``index.base``, replayed
+    sequentially (tests/test_tombstone_backends.py)."""
     n = idx.num_vectors
     Q = queries.shape[0]
     out_d = np.full((Q, k), np.inf, dtype=np.float32)
@@ -146,6 +153,8 @@ def _ivf_reference(idx, queries, lq_words, k):
                     continue
                 lxw = idx.label_words[lo:hi]
                 keep = np.all((lxw & lq_words[qi]) == lq_words[qi], axis=1)
+                if dead is not None:
+                    keep &= ~dead[idx.row_map[lo:hi]]
                 if not keep.any():
                     continue
                 found_d.append(dist(q, idx.vectors[lo:hi][keep]))

@@ -1,6 +1,5 @@
 """Serving engine: slot batching semantics + decode==prefill consistency
 + ELI RAG integration."""
-import dataclasses
 
 import jax
 import numpy as np

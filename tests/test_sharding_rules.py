@@ -1,7 +1,6 @@
 """Property tests (hypothesis) for the shape-aware sharding rules: the
 legality fixup must always produce jit-acceptable PartitionSpecs."""
 import jax
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="hypothesis is an optional test "

@@ -1,4 +1,5 @@
-"""Streaming mutation subsystem (ISSUE 4 tentpole proof).
+"""Streaming mutation subsystem (ISSUE 4 tentpole proof + ISSUE 5 lazy
+deletes).
 
 The correctness oracle for the whole subsystem: after ANY interleaving of
 inserts and deletes, ``StreamingEngine.search_batched`` must be
@@ -12,14 +13,26 @@ all four registered backends × k ∈ {1, 4, 17}:
     tombstone-fused base scan + delta scan + in-program merge — and again
     after ``flush()`` folds them (device-side gather, incremental
     GroupTable);
-  * private-storage (ivf / graph / distributed): mutations stage and fold
-    before the next search; the fold replays the original seeded build on
-    the survivors, so parity is construction determinism.
+  * private-storage (ivf / graph / distributed): DELETES stay pending too
+    (ISSUE 5) — per-selected-key bitmaps through
+    ``search_padded(tomb=…)``; only inserts and the compaction triggers
+    fold (the original seeded build on the survivors, so post-fold parity
+    is construction determinism).  With deletes pending, the
+    rebuilt-engine oracle applies in full to the EXHAUSTIVE backend
+    (distributed — pinned below); for the approximate structures
+    (ivf / graph) a rebuild re-clusters/re-wires and is not
+    bit-comparable even without tombstones, so the pending-state pin is
+    the fixed-structure contract: never a dead id, bitwise equality with
+    the looped executor over the same bitmaps, zero folds paid, and the
+    same-structure filter-exclusion oracle of
+    tests/test_tombstone_backends.py.
 
 Satellites pinned here too: warmup pre-traces the delta-scan and merge
-programs (first post-insert batch adds no traces), EngineStats reports the
-streaming surface, automatic compaction thresholds fire, and a compaction
-piggybacks a drift-triggered reselect.
+programs plus the private-backend tombstone variants (first post-insert /
+post-delete batch adds no traces), EngineStats reports the streaming
+surface, automatic compaction thresholds fire, delete-then-reinsert never
+reuses a stream id, and a compaction piggybacks a drift-triggered
+reselect.
 """
 from __future__ import annotations
 
@@ -29,7 +42,6 @@ import pytest
 from repro.core import (LabelHybridEngine, LabelWorkloadConfig,
                         StreamingEngine, WorkloadMonitor,
                         generate_label_sets, generate_query_label_sets)
-from repro.index.base import pow2_bucket
 
 BACKENDS = {
     "flat": {},
@@ -58,8 +70,8 @@ def data():
     pool_x = rng.standard_normal((700, D)).astype(np.float32)
     pool_ls = generate_label_sets(700, LabelWorkloadConfig(num_labels=10,
                                                            seed=21))
-    pool_ls = [tuple(sorted(set(l) | ({11} if i % 9 == 0 else set())))
-               for i, l in enumerate(pool_ls)]
+    pool_ls = [tuple(sorted(set(ls_) | ({11} if i % 9 == 0 else set())))
+               for i, ls_ in enumerate(pool_ls)]
     return dict(x=x, ls=ls, qv=qv, qls=qls, N=N, D=D,
                 pool_x=pool_x, pool_ls=pool_ls)
 
@@ -74,8 +86,8 @@ def _rebuilt_oracle(se: StreamingEngine, backend: str):
     if se._n_inserted:
         parts.append(np.concatenate(se._delta_vec_parts)[alive_delta])
     surv_x = np.concatenate(parts)
-    surv_ls = ([l for l, a in zip(se.base.label_sets, alive_base) if a]
-               + [l for l, a in zip(se._delta_ls, alive_delta) if a])
+    surv_ls = ([ls_ for ls_, a in zip(se.base.label_sets, alive_base) if a]
+               + [ls_ for ls_, a in zip(se._delta_ls, alive_delta) if a])
     surv_ids = np.concatenate([np.flatnonzero(alive_base),
                                n_base + np.flatnonzero(alive_delta)])
     eng = LabelHybridEngine.build(surv_x, surv_ls, mode="eis", c=0.2,
@@ -89,9 +101,10 @@ def _assert_parity(se: StreamingEngine, backend: str, qv, qls, tag: str):
     for k in KS:
         d_s, i_s = se.search_batched(qv, qls, k)
         d_o, i_o = oracle.search_batched(qv, qls, k)
-        if se.lazy:
-            # streaming ids are stream ids; translate the oracle's compact
-            # ids (monotonic renumbering ⇒ tie-break order is preserved)
+        if se.lazy or se._has_base_tombs:
+            # mutations pending ⇒ streaming ids are stream ids; translate
+            # the oracle's compact ids (monotonic renumbering ⇒ tie-break
+            # order is preserved)
             i_o = np.where(i_o < n_surv,
                            surv_ids[np.clip(i_o, 0, max(n_surv - 1, 0))],
                            se.sentinel).astype(np.int32)
@@ -256,6 +269,207 @@ def test_warmup_pretraces_streaming_programs(data):
     assert ops._segmented_topk._cache_size() == seg, "base/delta retraced"
     assert ops._merge_topk._cache_size() == mrg, "merge retraced"
     assert i.shape == (96, k)
+
+
+def test_distributed_lazy_delete_parity_with_deletes_pending(data):
+    """ISSUE 5 acceptance (exhaustive backend): with deletes PENDING —
+    unfolded, served through per-index bitmaps — the streaming engine is
+    bit-identical to a from-scratch rebuild on the survivors, k ∈
+    {1, 4, 17}, across two delete batches, and never pays a fold."""
+    rng = np.random.default_rng(7)
+    se = StreamingEngine.build(
+        data["x"], data["ls"], mode="eis", c=0.2, backend="distributed",
+        max_delta_fraction=None, max_tombstone_fraction=None)
+    base0 = se.base
+    se.delete(rng.choice(data["N"], 250, replace=False))
+    assert se.lazy_deletes_active and se._has_base_tombs and not se._dirty
+    _assert_parity(se, "distributed", data["qv"], data["qls"],
+                   "pending-lazy")
+    se.delete(rng.choice(data["N"], 150, replace=False))  # second batch
+    _assert_parity(se, "distributed", data["qv"], data["qls"],
+                   "pending-lazy-2")
+    assert se.base is base0, "a search paid a fold for lazy deletes"
+    assert not se.compaction_log
+
+
+@pytest.mark.parametrize("backend", ["ivf", "graph"])
+def test_private_lazy_deletes_fixed_structure_contract(backend, data):
+    """ISSUE 5 acceptance (approximate structures): with deletes PENDING
+    the engine must serve them through the fixed-structure tombstone
+    contract — no fold, never a dead id, bit-identical through both
+    executors over the same bitmaps, live results' labels still pass —
+    and a later ``flush`` restores full rebuilt-engine parity (the
+    seeded fold).  A rebuild is not bit-comparable in the pending state:
+    re-running kmeans / Vamana on the survivors changes probe order /
+    adjacency, and these backends are approximate with or without
+    tombstones (tests/test_tombstone_backends.py pins the
+    same-structure oracle instead)."""
+    rng = np.random.default_rng(13)
+    n = 4000
+    x, ls = data["x"][:n], data["ls"][:n]
+    se = StreamingEngine.build(x, ls, mode="eis", c=0.2, backend=backend,
+                               max_delta_fraction=None,
+                               max_tombstone_fraction=None,
+                               **BACKENDS[backend])
+    base0 = se.base
+    dead = rng.choice(n, 300, replace=False)
+    se.delete(dead)
+    assert se.lazy_deletes_active and se._has_base_tombs and not se._dirty
+    for k in KS:
+        d_b, i_b = se.search_batched(data["qv"], data["qls"], k)
+        live = i_b[i_b < n]
+        assert not np.isin(live, dead).any(), f"{backend} returned dead row"
+        for qi, qls_ in enumerate(data["qls"]):
+            for gid in i_b[qi][i_b[qi] < n]:
+                assert set(qls_) <= set(se.label_set(int(gid)))
+        d_l, i_l = se.base.search_looped(data["qv"], data["qls"], k,
+                                         tomb_by_key=se._private_tombs())
+        np.testing.assert_array_equal(i_b, i_l, err_msg=f"{backend} k={k}")
+        np.testing.assert_array_equal(d_b, d_l, err_msg=f"{backend} k={k}")
+    assert se.base is base0 and not se.compaction_log, "search paid a fold"
+    se.flush()                       # the seeded fold: rebuild parity back
+    _assert_parity(se, backend, data["qv"], data["qls"], "after-flush")
+
+
+def test_delete_then_reinsert_never_reuses_ids(data):
+    """ISSUE 5 satellite: deleting rows and re-inserting identical
+    vectors must mint FRESH monotonic stream ids — the dead generation
+    stays dead (id_map -> -1) and the reinserted one renumbers compactly
+    in stream order, on both capability tiers."""
+    for backend in ("flat", "ivf"):
+        se = StreamingEngine.build(
+            data["x"][:800], data["ls"][:800], mode="eis", c=0.2,
+            backend=backend, max_delta_fraction=None,
+            max_tombstone_fraction=None, **BACKENDS[backend])
+        px, pls = data["pool_x"][:30], data["pool_ls"][:30]
+        ids1 = se.insert(px, pls)
+        assert list(ids1) == list(range(800, 830))
+        se.delete(ids1)
+        ids2 = se.insert(px, pls)        # identical vectors, new identity
+        assert list(ids2) == list(range(830, 860)), backend
+        d, i = se.search_batched(data["qv"][:8], [()] * 8, 5)
+        if se.compaction_log:
+            # private tier: the search folded the pending inserts — the
+            # renumbering that matters is that first fold's
+            id_map = se.compaction_log[0]["id_map"]
+        else:
+            # lazy tier: the dead generation is delta-tombstoned and must
+            # not resurface while pending; then fold explicitly
+            assert not np.isin(i, ids1).any(), \
+                f"{backend} resurfaced dead ids"
+            id_map = se.flush()["id_map"]
+        assert np.all(id_map[ids1] == -1), backend
+        mapped = id_map[ids2]
+        assert np.all(mapped >= 0), backend
+        assert np.array_equal(mapped, np.sort(mapped)), backend
+        assert se.stats().live_rows == 830
+
+
+def test_warmup_pretraces_private_tomb_variants(data):
+    """ISSUE 5 satellite: after ``warmup`` on a private-storage backend,
+    the first post-delete batch (lazy bitmaps active) must add NO new
+    traces of the backend's padded program — the tombstone variant was
+    pre-traced on an all-zero bitmap of the same shape."""
+    from repro.index import ivf as ivf_mod
+
+    se = StreamingEngine.build(data["x"][:2000], data["ls"][:2000],
+                               mode="eis", c=0.2, backend="ivf",
+                               max_delta_fraction=None,
+                               max_tombstone_fraction=None,
+                               **BACKENDS["ivf"])
+    k, bucket = 5, 128
+    rep = se.warmup([k], [bucket])
+    assert rep["programs"] > 0
+    traces = ivf_mod._ivf_padded_topk._cache_size()
+    se.delete(np.arange(0, 2000, 7))
+    d, i = se.search_batched(data["qv"][:100], data["qls"][:100], k,
+                             min_bucket=bucket)
+    assert ivf_mod._ivf_padded_topk._cache_size() == traces, \
+        "post-delete batch retraced the ivf program"
+    assert i.shape == (100, k)
+
+
+# fixed interleavings for the private lazy-delete state machine; the
+# hypothesis suite (tests/test_streaming_properties.py) drives the same
+# runner over generated programs in CI
+_PRIVATE_PROGRAMS = [
+    [("delete", 3), ("search", 5), ("delete", 7), ("search", 11)],
+    [("insert", 1), ("search", 2), ("delete", 3), ("search", 4),
+     ("flush", 0), ("search", 6)],
+    [("delete", 9), ("insert", 2), ("search", 3), ("delete", 5),
+     ("flush", 0), ("delete", 8), ("search", 1)],
+]
+
+
+def run_private_interleaving(backend: str, backend_params: dict, prog,
+                             n: int = 260, d: int = 8, q: int = 8,
+                             k: int = 3) -> None:
+    """Drive a private-storage StreamingEngine through an op program and
+    assert the lazy-delete contract at every search: ids always live and
+    valid under the CURRENT numbering, batched ≡ looped over the same
+    bitmaps, folds paid only for inserts/flushes (never for deletes)."""
+    rng0 = np.random.default_rng(61)
+    x = rng0.standard_normal((n, d)).astype(np.float32)
+    ls = generate_label_sets(n, LabelWorkloadConfig(num_labels=6, seed=13))
+    se = StreamingEngine.build(x, ls, mode="eis", c=0.25, backend=backend,
+                               max_delta_fraction=None,
+                               max_tombstone_fraction=None,
+                               **backend_params)
+    assert not se.lazy
+    alive = set(range(n))
+    next_id = n
+    for kind, seed in prog:
+        rng = np.random.default_rng(seed)
+        folds_before = len(se.compaction_log)
+        if kind == "insert":
+            m = int(rng.integers(1, 16))
+            xv = rng.standard_normal((m, d)).astype(np.float32)
+            xls = [tuple(sorted(int(v) for v in rng.choice(
+                6, rng.integers(0, 3), replace=False))) for _ in range(m)]
+            ids = se.insert(xv, xls)
+            assert list(ids) == list(range(next_id, next_id + m))
+            alive |= set(int(v) for v in ids)
+            next_id += m
+        elif kind == "delete":
+            if not alive:
+                continue
+            pool = sorted(alive)
+            take = rng.integers(0, len(pool),
+                                size=int(rng.integers(1, 12)))
+            victims = sorted({pool[t] for t in take})
+            assert se.delete(victims) == len(victims)
+            alive -= set(victims)
+            assert len(se.compaction_log) == folds_before, \
+                "a delete paid a fold"
+        elif kind == "flush":
+            rep = se.flush()
+            id_map = rep["id_map"]
+            alive = {int(id_map[v]) for v in alive}
+            assert -1 not in alive
+            next_id = len(alive)
+        else:   # search
+            qv = rng.standard_normal((q, d)).astype(np.float32)
+            qls = [tuple(sorted(int(v) for v in rng.choice(
+                6, rng.integers(0, 3), replace=False))) for _ in range(q)]
+            d_b, i_b = se.search_batched(qv, qls, k)
+            if len(se.compaction_log) > folds_before:
+                # the search folded pending INSERTS (never bare deletes —
+                # asserted above); renumber the shadow set
+                id_map = se.compaction_log[-1]["id_map"]
+                alive = {int(id_map[v]) for v in alive}
+                next_id = len(alive)
+            live = i_b[i_b < se.sentinel]
+            assert set(int(v) for v in live) <= alive
+            d_l, i_l = se.base.search_looped(qv, qls, k,
+                                             tomb_by_key=se._private_tombs())
+            np.testing.assert_array_equal(i_b, i_l)
+            np.testing.assert_array_equal(d_b, d_l)
+    assert se.stats().live_rows == len(alive)
+
+
+@pytest.mark.parametrize("prog", _PRIVATE_PROGRAMS)
+def test_private_interleavings_fixed_programs(prog):
+    run_private_interleaving("ivf", {"nprobe": 2}, prog)
 
 
 def test_compaction_piggybacks_reselect_on_drift(data):

@@ -10,6 +10,13 @@ delta scan, and a post-compaction fold, so any deviation (a stale
 tombstone, a mis-merged tie, a cursor off-by-one, a norm computed through
 a different f32 association) surfaces as a hard mismatch rather than a
 tolerance flake.
+
+The private-storage lazy-delete state machine (ISSUE 5) is driven over
+generated programs too, through the SAME runner the deterministic
+fixed-program test uses (``test_streaming_engine.run_private_interleaving``
+— locally verified there, generalized here): deletes never pay a fold,
+returned ids are always live under the current numbering, and the two
+executors stay bit-identical over the same per-key bitmaps.
 """
 from __future__ import annotations
 
@@ -131,3 +138,11 @@ def test_any_interleaving_matches_surviving_rows_oracle(prog):
     # the engine survives the whole program with a consistent stats view
     stats = se.stats()
     assert stats.live_rows == len(shadow_ids)
+
+
+@given(prog=programs)
+@settings(max_examples=8, deadline=None)
+def test_private_backend_interleavings_keep_lazy_delete_contract(prog):
+    from test_streaming_engine import run_private_interleaving
+
+    run_private_interleaving("ivf", {"nprobe": 2}, prog)

@@ -5,14 +5,24 @@ the arena's memory/build-time win is recorded in the perf trajectory
 alongside ``BENCH_exp9.json``: per engine we log build/select seconds,
 stored entries, and the nbytes split (shared arena + CSR segment table vs
 per-index private storage — see ``EngineStats``).
+
+The ``storage_frontier`` section sweeps the tiered-precision arena
+(DESIGN.md §3.8) over every storage spec — ``f32``, ``fp16``, ``int8``,
+``fp16+rerank``, ``int8+rerank`` — at the executor's default k′ = 4k
+shortlist, recording the arena bytes/row-vs-recall@10 frontier on the
+10k/500 fixture.  The acceptance bar pinned here: the rerank-free int8
+tier holds recall@10 ≥ 0.99 at ≥ 2× bytes/row reduction over f32.
 """
 import tempfile
 import time
 
 from repro.baselines import BASELINE_REGISTRY
+from repro.core import recall_at_k
 from repro.core.engine import LabelHybridEngine
 
-from .common import emit, emit_json, make_dataset
+from .common import emit, emit_json, ground_truth, make_dataset
+
+STORAGE_SPECS = ("f32", "fp16", "int8", "fp16+rerank", "int8+rerank")
 
 
 def _eli_row(name: str, eng, wall_s: float) -> tuple[dict, dict]:
@@ -30,6 +40,41 @@ def _eli_row(name: str, eng, wall_s: float) -> tuple[dict, dict]:
                "arena_nbytes": st.arena_nbytes,
                "segment_nbytes": st.segment_nbytes}
     return row, payload
+
+
+def _storage_frontier(rows: list, payload: dict, tiny: bool) -> None:
+    """Arena bytes/row vs recall@10 across the five storage specs."""
+    n, q = (1_500, 60) if tiny else (10_000, 500)
+    x, ls, qv, qls = make_dataset(n=n, d=32, q=q)
+    _, gt_i = ground_truth(x, ls, qv, qls, k=10)
+    frontier = {}
+    f32_bpr = None
+    for spec in STORAGE_SPECS:
+        t0 = time.perf_counter()
+        eng = LabelHybridEngine.build(x, ls, mode="eis", c=0.2,
+                                      backend="flat", storage=spec)
+        build_s = time.perf_counter() - t0
+        _, ids = eng.search_batched(qv, qls, 10)   # default k′ = 4k
+        rec = recall_at_k(ids, gt_i, n)
+        st = eng.stats()
+        bpr = st.arena_nbytes / n
+        if spec == "f32":
+            f32_bpr = bpr
+        red = f32_bpr / bpr
+        frontier[spec] = {
+            "bytes_per_row": bpr, "recall_at_10": rec,
+            "reduction_vs_f32": red, "build_s": build_s,
+            "arena_nbytes": st.arena_nbytes,
+            "codes_nbytes": st.codes_nbytes,
+            "scales_nbytes": st.scales_nbytes,
+            "rerank_nbytes": st.rerank_nbytes,
+        }
+        rows.append({"name": f"exp2/storage-{spec}", "us_per_call": "",
+                     "bytes_per_row": f"{bpr:.1f}",
+                     "recall_at_10": f"{rec:.4f}",
+                     "reduction_vs_f32": f"{red:.2f}x"})
+    payload["storage_frontier"] = {"n": n, "q": q, "k": 10,
+                                   "kprime": "4k", "specs": frontier}
 
 
 def run(n=6_000, L=16, out_dir=None, tiny=False):
@@ -61,6 +106,7 @@ def run(n=6_000, L=16, out_dir=None, tiny=False):
         rows.append({"name": f"exp2/{bname}", "us_per_call": "",
                      "build_s": f"{dt:.2f}", "mb": f"{b.nbytes/2**20:.1f}"})
         payload["baselines"][bname] = {"build_s": dt, "nbytes": b.nbytes}
+    _storage_frontier(rows, payload, tiny)
     emit(rows, "exp2")
     emit_json(payload, "exp2", out_dir)
     return rows

@@ -37,7 +37,19 @@ st2 = engine2.stats()
 print(f"SIS under 2x budget: c*={st2.achieved_c:.3f}, "
       f"{st2.total_entries} entries")
 
-# 6. streaming mutations (DESIGN.md §3.6): the corpus is rarely static.
+# 6. tiered-precision storage (DESIGN.md §3.8): at scale memory binds
+#    before FLOPs.  storage="int8" scans per-row scalar-quantized codes
+#    (~2.7x fewer arena bytes/row, recall@10 >= 0.99); "int8+rerank"
+#    adds an f32 rerank tier for exact distances at k' = 4k.
+engine8 = LabelHybridEngine.build(vectors, label_sets, mode="eis", c=0.2,
+                                  backend="flat", storage="int8")
+d8, i8 = engine8.search(queries, query_labels, k=10)
+st8 = engine8.stats()
+print(f"int8 tier: {st8.arena_nbytes / st.arena_nbytes:.2f}x the f32 "
+      f"arena bytes, recall@10 = "
+      f"{recall_at_k(i8, gt_i, len(label_sets)):.4f}")
+
+# 7. streaming mutations (DESIGN.md §3.6): the corpus is rarely static.
 #    insert → search → delete → flush, with search always bit-identical
 #    to an engine rebuilt from scratch on the surviving rows.
 from repro.core import StreamingEngine

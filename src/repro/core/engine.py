@@ -35,7 +35,7 @@ import numpy as np
 
 from ..index.base import (Arena, as_row_ids, check_global_id_contract,
                           dispatch_padded, fallback_search_padded,
-                          get_index_builder, pow2_bucket)
+                          get_index_builder, parse_storage, pow2_bucket)
 from ..kernels import ops as _kernel_ops
 from .eis import EISResult, greedy_eis
 from .elastic import min_elastic_factor
@@ -67,6 +67,15 @@ class EngineStats:
     delta_rows: int = 0          # rows resident in the delta arena
     arena_version: int = 0       # mutation/compaction counter of the arena
     delta_nbytes: int = 0        # delta-arena share of nbytes
+    # tiered-precision surface (DESIGN.md §3.8): the arena's storage spec
+    # and the per-tier byte split of arena_nbytes (+ the delta's tiers,
+    # folded in by the streaming engine).  f32 engines report the vector
+    # bytes under codes_nbytes (the scan tier IS the f32 rows)
+    storage: str = "f32"         # arena storage spec ("int8+rerank", …)
+    codes_nbytes: int = 0        # scan-tier rows (f32 / f16 / u8 codes)
+    scales_nbytes: int = 0       # int8 per-row scale + zero-point columns
+    rerank_nbytes: int = 0       # exact f32 rerank tier (0 = no rerank)
+    tombstone_nbytes: int = 0    # packed delete bitmap(s)
 
 
 class LabelHybridEngine:
@@ -80,7 +89,8 @@ class LabelHybridEngine:
     def __init__(self, vectors: np.ndarray, label_sets: Sequence[tuple[int, ...]],
                  table: GroupTable, selection: EISResult,
                  sis_result: SISResult | None, backend: str, metric: str,
-                 backend_params: dict, select_seconds: float):
+                 backend_params: dict, select_seconds: float,
+                 storage: str = "f32"):
         self.sis_result = sis_result
         self.backend = backend
         self.metric = metric
@@ -88,6 +98,13 @@ class LabelHybridEngine:
         self.backend_params = dict(backend_params)
         self._arena_native = hasattr(builder, "build_view")
         self._seg_backend = backend_params.get("kernel_backend", "ref")
+        parse_storage(storage)   # validate the spec before any device work
+        if storage != "f32" and not self._arena_native:
+            raise ValueError(
+                f"storage={storage!r} needs an arena-native backend (the "
+                f"compressed tiers live in the shared arena, DESIGN.md "
+                f"§3.8); backend {backend!r} keeps private f32 copies")
+        self.storage = storage
 
         self.indexes: dict[tuple[int, ...], object] = {}
         self.rows: dict[tuple[int, ...], np.ndarray] = {}
@@ -141,7 +158,12 @@ class LabelHybridEngine:
         else:
             self.arena = (arena if arena is not None
                           else Arena.from_host(self.vectors,
-                                               self.label_words))
+                                               self.label_words,
+                                               storage=self.storage))
+            if self.arena.storage != self.storage:
+                raise ValueError(
+                    f"installed arena holds {self.arena.storage!r} tiers "
+                    f"but the engine is configured for {self.storage!r}")
         self.apply_selection(selection)
 
     def apply_selection(self, selection: EISResult) -> None:
@@ -216,7 +238,7 @@ class LabelHybridEngine:
               mode: str = "eis", c: float = 0.2, space_budget: int | None = None,
               query_label_sets: Sequence[tuple[int, ...]] | None = None,
               backend: str = "flat", metric: str = "l2",
-              sample_size: int | None = None,
+              sample_size: int | None = None, storage: str = "f32",
               **backend_params) -> "LabelHybridEngine":
         """Select indices (EIS at bound ``c`` or SIS under ``space_budget``)
         and materialize them.
@@ -224,6 +246,10 @@ class LabelHybridEngine:
         ``query_label_sets``: explicit workload; default derives candidates
         from all subsets of observed base label sets (paper default).
         ``sample_size``: use the §4.2 sampled closure-size estimator.
+        ``storage``: arena tier spec (DESIGN.md §3.8) — ``"f32"`` (exact,
+        the default), ``"fp16"``/``"int8"`` compressed scan tiers, or
+        ``"fp16+rerank"``/``"int8+rerank"`` adding the exact in-program
+        rerank stage; arena-native backends only.
         """
         t0 = time.perf_counter()
         qkeys = (observed_query_keys(query_label_sets)
@@ -247,7 +273,7 @@ class LabelHybridEngine:
 
         return LabelHybridEngine(vectors, label_sets, table, selection,
                                  sis_result, backend, metric, backend_params,
-                                 select_seconds)
+                                 select_seconds, storage=storage)
 
     @property
     def sentinel(self) -> int:
@@ -413,7 +439,8 @@ class LabelHybridEngine:
                     qp, lp, self.arena.vectors, self.arena.label_words,
                     self.arena.norms, self._rows_concat_dev, starts, lens,
                     k=k, lmax=lmax, metric=self.metric,
-                    backend=self._seg_backend)
+                    backend=self._seg_backend,
+                    **self.arena.tier_kwargs())
                 # global ids resolved inside the traced program (sentinel n
                 # included): no host remap, and warmup covers the full path
                 pend.append((qids, vals, gi, g))
@@ -573,7 +600,8 @@ class LabelHybridEngine:
                             self.arena.label_words, self.arena.norms,
                             self._rows_concat_dev, zero, zero, k=k,
                             lmax=lmax, metric=self.metric,
-                            backend=self._seg_backend)
+                            backend=self._seg_backend,
+                            **self.arena.tier_kwargs())
                         outs.append(vals)
                 else:
                     for index in self.indexes.values():
@@ -600,6 +628,8 @@ class LabelHybridEngine:
         achieved = min_elastic_factor(qkeys, self.table.closure_sizes,
                                       self.selection.selected)
         arena_nbytes = self.arena.nbytes if self.arena is not None else 0
+        tiers = (self.arena.tier_nbytes if self.arena is not None
+                 else {"codes": 0, "scales": 0, "rerank": 0, "tombstone": 0})
         # the CSR table is device-resident only on arena-native backends;
         # private-storage accounting stays comparable to pre-arena runs
         segment_nbytes = (int(self._rows_concat_dev.nbytes)
@@ -622,6 +652,11 @@ class LabelHybridEngine:
             live_rows=len(self.label_sets),
             arena_version=(self.arena.version
                            if self.arena is not None else 0),
+            storage=self.storage,
+            codes_nbytes=tiers["codes"],
+            scales_nbytes=tiers["scales"],
+            rerank_nbytes=tiers["rerank"],
+            tombstone_nbytes=tiers["tombstone"],
         )
 
 

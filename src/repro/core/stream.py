@@ -109,7 +109,8 @@ class StreamingEngine:
         # construction arguments verbatim (determinism ⇒ parity)
         self._build_kwargs = dict(build_kwargs) if build_kwargs else dict(
             mode="eis", c=engine.selection.c, backend=engine.backend,
-            metric=engine.metric, **engine.backend_params)
+            metric=engine.metric, storage=engine.storage,
+            **engine.backend_params)
         self.compaction_log: list[dict] = []
         self._reset_staging()
 
@@ -148,9 +149,13 @@ class StreamingEngine:
         self._has_base_tombs = False  # any base delete since last compaction
         self._tomb_by_key = None     # per-selected-key bitmaps (private lazy)
         if self.lazy:
+            # the delta holds the SAME tiers as the base arena (inserts
+            # quantize eagerly at append, DESIGN.md §3.8) so compaction
+            # re-folds per tier without a representation change
             self.delta = DeltaArena.empty(eng.vectors.shape[1],
                                           eng.label_words.shape[1],
-                                          self.min_delta_capacity)
+                                          self.min_delta_capacity,
+                                          storage=eng.storage)
         else:
             self.delta = None
 
@@ -430,7 +435,8 @@ class StreamingEngine:
                np.zeros((0, eng.label_words.shape[1]), np.int32))
         new_vecs = np.concatenate([eng.vectors[alive_base], dv])
         new_lw = np.concatenate([eng.label_words[alive_base], dlw])
-        arena = _dc.replace(Arena.from_host(new_vecs, new_lw),
+        arena = _dc.replace(Arena.from_host(new_vecs, new_lw,
+                                            storage=eng.storage),
                             version=eng.arena.version + 1)
         eng.rebase(new_vecs, new_ls, table, selection, arena=arena,
                    label_words=new_lw, rows_hint=rows_hint)
@@ -530,7 +536,8 @@ class StreamingEngine:
                 qp, lp, eng.arena.vectors, eng.arena.label_words,
                 eng.arena.norms, eng._rows_concat_dev, starts, lens,
                 k=k, lmax=lmax, metric=eng.metric,
-                backend=eng._seg_backend, tomb=tomb)
+                backend=eng._seg_backend, tomb=tomb,
+                **eng.arena.tier_kwargs())
             idx = np.full(bvals.shape[0], qb, np.int32)
             idx[:g] = qids                  # pad lanes scatter out of
             base_v, base_g = _kernel_ops.scatter_topk_rows(
@@ -543,7 +550,8 @@ class StreamingEngine:
             dvals, dslot = _kernel_ops.delta_topk(
                 qp_all, lp_all, delta.vectors, delta.label_words,
                 delta.norms, delta.tombstones, delta.count, k=k,
-                metric=eng.metric, backend=eng._seg_backend)
+                metric=eng.metric, backend=eng._seg_backend,
+                **delta.tier_kwargs())
             base_v, base_g = _kernel_ops.merge_topk(
                 base_v, base_g, dvals, dslot, n_base, sentinel, k=k)
         # empty delta: base_g's empty-slot id n_base IS the stream sentinel
@@ -589,7 +597,7 @@ class StreamingEngine:
                 dvals, dslot = _kernel_ops.delta_topk(
                     qz, lz, delta.vectors, delta.label_words, delta.norms,
                     delta.tombstones, delta.count, k=k, metric=eng.metric,
-                    backend=eng._seg_backend)
+                    backend=eng._seg_backend, **delta.tier_kwargs())
                 outs.append(dvals)
                 for lmax in span_tiers:
                     # both tombstone variants: the executor flips between
@@ -600,7 +608,8 @@ class StreamingEngine:
                             eng.arena.label_words, eng.arena.norms,
                             eng._rows_concat_dev, zero, zero,
                             k=k, lmax=lmax, metric=eng.metric,
-                            backend=eng._seg_backend, tomb=tomb)
+                            backend=eng._seg_backend, tomb=tomb,
+                            **eng.arena.tier_kwargs())
                         outs.append(bvals)
                 mv, _ = _kernel_ops.merge_topk(
                     bvals, bgid, dvals, dslot, len(eng.label_sets),
@@ -628,6 +637,8 @@ class StreamingEngine:
         st = self.base.stats()
         dead = int(self._base_dead.sum() + self._delta_dead.sum())
         delta_nbytes = self.delta.nbytes if self.delta is not None else 0
+        dt = (self.delta.tier_nbytes if self.delta is not None
+              else {"codes": 0, "scales": 0, "rerank": 0, "tombstone": 0})
         return _dc.replace(
             st,
             live_rows=self.sentinel - dead,
@@ -637,4 +648,10 @@ class StreamingEngine:
                            if self.base.arena is not None else 0),
             delta_nbytes=delta_nbytes,
             nbytes=st.nbytes + delta_nbytes,
+            # per-tier split covers base + delta (the same representation
+            # lives in both, DESIGN.md §3.8)
+            codes_nbytes=st.codes_nbytes + dt["codes"],
+            scales_nbytes=st.scales_nbytes + dt["scales"],
+            rerank_nbytes=st.rerank_nbytes + dt["rerank"],
+            tombstone_nbytes=st.tombstone_nbytes + dt["tombstone"],
         )

@@ -142,6 +142,98 @@ def pack_tombstones(dead: np.ndarray, n_rows: int | None = None) -> np.ndarray:
     return np.packbits(bits, bitorder="little")
 
 
+# ---------------------------------------------------------------------------
+# Tiered-precision storage (DESIGN.md §3.8)
+# ---------------------------------------------------------------------------
+
+STORAGE_DTYPES = ("f32", "fp16", "int8")
+
+
+def parse_storage(spec: str) -> tuple[str, bool]:
+    """``storage=`` spec string -> (scan-tier dtype, has f32 rerank tier).
+
+    Accepted: ``"f32"`` (today's single-level path, byte-for-byte),
+    ``"fp16"`` / ``"int8"`` (compressed scan tier, distances computed on
+    dequantized codes), ``"fp16+rerank"`` / ``"int8+rerank"`` (compressed
+    shortlist scan to k' candidates, then in-program exact rerank against
+    a retained f32 tier).  ``"f32+rerank"`` is rejected — reranking f32
+    against itself is the identity and would only double storage."""
+    dtype, plus, tail = spec.partition("+")
+    rerank = plus == "+"
+    if dtype not in STORAGE_DTYPES or (rerank and tail != "rerank") \
+            or (not rerank and tail):
+        raise ValueError(
+            f"unknown storage spec {spec!r}; expected one of "
+            f"{STORAGE_DTYPES} optionally suffixed '+rerank'")
+    if rerank and dtype == "f32":
+        raise ValueError("storage 'f32+rerank' is redundant: the f32 scan "
+                         "tier already computes exact distances")
+    return dtype, rerank
+
+
+def quantize_int8(x: np.ndarray) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-row asymmetric uint8 scalar quantizer (host-side, deterministic).
+
+    ``x`` [M, D] f32 -> (codes [M, D] u8, scale [M] f32, zero [M] f32) with
+    ``code = rint((x - zero) / scale)`` clipped to [0, 255], ``zero = row
+    min``, ``scale = (row max - row min) / 255`` (1.0 on zero-range rows,
+    whose codes are all 0 so the dequant ``zero + scale·code`` reproduces
+    them EXACTLY).  Quantization always runs on the host in numpy — the
+    same rows produce the same codes whether they arrive via
+    ``Arena.from_host`` or a ``DeltaArena`` append, which is what keeps the
+    streaming rebuilt-from-scratch parity across compactions
+    (DESIGN.md §3.8)."""
+    x = np.ascontiguousarray(x, dtype=np.float32)
+    m = x.shape[0]
+    if m == 0:
+        return (np.zeros(x.shape, np.uint8), np.ones(0, np.float32),
+                np.zeros(0, np.float32))
+    lo = x.min(axis=1).astype(np.float32)
+    hi = x.max(axis=1).astype(np.float32)
+    scale = np.where(hi > lo, (hi - lo) / np.float32(255.0),
+                     np.float32(1.0)).astype(np.float32)
+    codes = np.clip(np.rint((x - lo[:, None]) / scale[:, None]),
+                    0, 255).astype(np.uint8)
+    return codes, scale, lo
+
+
+def dequantize_int8(codes: np.ndarray, scale: np.ndarray,
+                    zero: np.ndarray) -> np.ndarray:
+    """Numpy dequant ``zero + scale·code`` — elementwise f32 mul+add, so
+    bitwise identical to the in-kernel dequantization (both are single
+    IEEE operations per element; no accumulation order is involved)."""
+    return (zero[:, None]
+            + scale[:, None] * codes.astype(np.float32)).astype(np.float32)
+
+
+def _encode_tier(vectors: np.ndarray, dtype: str):
+    """Host rows -> (device codes, device scales|None, device zeros|None,
+    device norms).  Norms are the squared norms OF THE DEQUANTIZED values,
+    computed with the exact eager ``jnp.sum(xd * xd, axis=1)`` dispatch of
+    ``Arena.from_host`` — the scan program's l2 form gathers them, so they
+    must match what the in-kernel dequant + reduce would produce, and must
+    be identical between a from-scratch upload and a delta append
+    (the §3.6 eager-norm rule extended per tier, DESIGN.md §3.8)."""
+    import jax.numpy as jnp
+
+    x = np.ascontiguousarray(vectors, dtype=np.float32)
+    if dtype == "f32":
+        xd = jnp.asarray(x)
+        return xd, None, None, jnp.sum(xd * xd, axis=1)
+    if dtype == "fp16":
+        codes = jnp.asarray(x.astype(np.float16))
+        xd = codes.astype(jnp.float32)
+        return codes, None, None, jnp.sum(xd * xd, axis=1)
+    if dtype == "int8":
+        codes_h, scale_h, zero_h = quantize_int8(x)
+        codes = jnp.asarray(codes_h)
+        scales = jnp.asarray(scale_h)
+        zeros = jnp.asarray(zero_h)
+        xd = zeros[:, None] + scales[:, None] * codes.astype(jnp.float32)
+        return codes, scales, zeros, jnp.sum(xd * xd, axis=1)
+    raise ValueError(f"unknown storage dtype {dtype!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class Arena:
     """Device-resident shared index storage (DESIGN.md §3).
@@ -162,22 +254,73 @@ class Arena:
     (:meth:`with_tombstones` returns a new Arena sharing the vector
     storage); the un-mutated static engine keeps version 0 and an all-zero
     bitmap, whose mask is the identity.
+
+    Tiered precision (DESIGN.md §3.8): ``dtype`` selects the SCAN tier's
+    storage — ``"f32"`` keeps ``vectors`` as today's f32 rows (byte
+    identical programs), ``"fp16"`` stores half-precision rows, ``"int8"``
+    stores per-row scalar-quantized uint8 codes with ``scales``/``zeros``
+    (dequant = zero + scale·code).  ``norms`` are always the squared norms
+    of the DEQUANTIZED scan-tier values — what the l2 scan gathers.  An
+    optional ``rerank`` tier keeps the exact f32 rows (+ their
+    ``rerank_norms``) for the in-program shortlist rerank; the CSR segment
+    table, sentinel/dtype contract, and tombstone bitmap are tier-blind.
     """
-    vectors: object        # jnp [N, D] f32
+    vectors: object        # jnp [N, D]: f32 | f16 | u8 codes (see dtype)
     label_words: object    # jnp [N, W] i32
-    norms: object          # jnp [N] f32
+    norms: object          # jnp [N] f32 (of the dequantized scan tier)
     tombstones: object = None   # jnp [⌈N/8⌉] u8; bit set ⇒ row deleted
     version: int = 0            # bumps on every mutation / compaction
+    dtype: str = "f32"          # scan-tier storage: f32 | fp16 | int8
+    scales: object = None       # jnp [N] f32 (int8 only)
+    zeros: object = None        # jnp [N] f32 (int8 only)
+    rerank: object = None       # jnp [N, D] f32 exact rows (rerank tier)
+    rerank_norms: object = None  # jnp [N] f32 (rerank tier)
 
     @classmethod
-    def from_host(cls, vectors: np.ndarray, label_words: np.ndarray) -> "Arena":
+    def from_host(cls, vectors: np.ndarray, label_words: np.ndarray,
+                  storage: str = "f32") -> "Arena":
         import jax.numpy as jnp
         n = check_global_id_contract(vectors.shape[0])
-        x = jnp.asarray(np.ascontiguousarray(vectors, dtype=np.float32))
+        dtype, has_rerank = parse_storage(storage)
         lw = jnp.asarray(np.ascontiguousarray(label_words, dtype=np.int32))
-        return cls(vectors=x, label_words=lw,
-                   norms=jnp.sum(x * x, axis=1),
-                   tombstones=jnp.zeros(tombstone_bytes(n), jnp.uint8))
+        codes, scales, zeros, norms = _encode_tier(vectors, dtype)
+        rr = rrn = None
+        if has_rerank:
+            rr = jnp.asarray(np.ascontiguousarray(vectors, dtype=np.float32))
+            rrn = jnp.sum(rr * rr, axis=1)
+        return cls(vectors=codes, label_words=lw, norms=norms,
+                   tombstones=jnp.zeros(tombstone_bytes(n), jnp.uint8),
+                   dtype=dtype, scales=scales, zeros=zeros,
+                   rerank=rr, rerank_norms=rrn)
+
+    @property
+    def storage(self) -> str:
+        """The ``storage=`` spec string this arena was built with."""
+        return self.dtype + ("+rerank" if self.rerank is not None else "")
+
+    def tier_kwargs(self) -> dict:
+        """The tier operands of ``kernels.ops.segmented_topk`` (and
+        ``delta_topk``) — the one place the arena's storage layout is
+        translated into kernel arguments."""
+        return dict(dtype=self.dtype, scales=self.scales, zeros=self.zeros,
+                    rerank=self.rerank, rerank_norms=self.rerank_norms)
+
+    @property
+    def tier_nbytes(self) -> dict:
+        """Per-tier device byte split (satellite 1): codes (the scan-tier
+        vectors), labels, norms, scales (+zeros), rerank (+its norms),
+        tombstone.  ``nbytes`` is exactly the sum of these components."""
+        return {
+            "codes": int(self.vectors.nbytes),
+            "labels": int(self.label_words.nbytes),
+            "norms": int(self.norms.nbytes),
+            "scales": (int(self.scales.nbytes + self.zeros.nbytes)
+                       if self.scales is not None else 0),
+            "rerank": (int(self.rerank.nbytes + self.rerank_norms.nbytes)
+                       if self.rerank is not None else 0),
+            "tombstone": (int(self.tombstones.nbytes)
+                          if self.tombstones is not None else 0),
+        }
 
     def with_tombstones(self, dead: np.ndarray) -> "Arena":
         """New Arena (shared vector storage) whose tombstone bitmap marks
@@ -197,9 +340,7 @@ class Arena:
 
     @property
     def nbytes(self) -> int:
-        tomb = self.tombstones.nbytes if self.tombstones is not None else 0
-        return int(self.vectors.nbytes + self.label_words.nbytes
-                   + self.norms.nbytes + tomb)
+        return sum(self.tier_nbytes.values())
 
 
 MIN_DELTA_CAPACITY = 256
@@ -224,22 +365,47 @@ class DeltaArena:
     current instance.  Norms are computed by the same per-row
     multiply+minor-axis-reduce as ``Arena.from_host``, which the merge's
     ULP-parity contract depends on (DESIGN.md §3.6).
+
+    Tiered precision (DESIGN.md §3.8): same ``dtype``/``scales``/``zeros``/
+    ``rerank`` layout as :class:`Arena`.  Quantized appends quantize
+    EAGERLY on the host (the deterministic :func:`quantize_int8`) and
+    compute norms from the dequantized values with the same eager dispatch
+    — so a compaction that re-quantizes the host mirror produces the exact
+    codes the delta scan already served (the §3.6 parity rule per tier).
     """
-    vectors: object       # jnp [cap, D] f32
+    vectors: object       # jnp [cap, D]: f32 | f16 | u8 codes (see dtype)
     label_words: object   # jnp [cap, W] i32
-    norms: object         # jnp [cap] f32
+    norms: object         # jnp [cap] f32 (of the dequantized scan tier)
     tombstones: object    # jnp [⌈cap/8⌉] u8; bit set ⇒ slot deleted
     count: int = 0        # append cursor: slots [0, count) hold rows
+    dtype: str = "f32"          # scan-tier storage: f32 | fp16 | int8
+    scales: object = None       # jnp [cap] f32 (int8 only)
+    zeros: object = None        # jnp [cap] f32 (int8 only)
+    rerank: object = None       # jnp [cap, D] f32 exact rows (rerank tier)
+    rerank_norms: object = None  # jnp [cap] f32 (rerank tier)
 
     @classmethod
     def empty(cls, dim: int, words: int,
-              capacity: int = MIN_DELTA_CAPACITY) -> "DeltaArena":
+              capacity: int = MIN_DELTA_CAPACITY,
+              storage: str = "f32") -> "DeltaArena":
         import jax.numpy as jnp
         cap = pow2_bucket(capacity)
-        return cls(vectors=jnp.zeros((cap, dim), jnp.float32),
+        dtype, has_rerank = parse_storage(storage)
+        code_dtype = {"f32": jnp.float32, "fp16": jnp.float16,
+                      "int8": jnp.uint8}[dtype]
+        return cls(vectors=jnp.zeros((cap, dim), code_dtype),
                    label_words=jnp.zeros((cap, words), jnp.int32),
                    norms=jnp.zeros((cap,), jnp.float32),
-                   tombstones=jnp.zeros(tombstone_bytes(cap), jnp.uint8))
+                   tombstones=jnp.zeros(tombstone_bytes(cap), jnp.uint8),
+                   dtype=dtype,
+                   scales=(jnp.ones((cap,), jnp.float32)
+                           if dtype == "int8" else None),
+                   zeros=(jnp.zeros((cap,), jnp.float32)
+                          if dtype == "int8" else None),
+                   rerank=(jnp.zeros((cap, dim), jnp.float32)
+                           if has_rerank else None),
+                   rerank_norms=(jnp.zeros((cap,), jnp.float32)
+                                 if has_rerank else None))
 
     @property
     def capacity(self) -> int:
@@ -250,9 +416,42 @@ class DeltaArena:
         return self.vectors.shape[1]
 
     @property
+    def storage(self) -> str:
+        return self.dtype + ("+rerank" if self.rerank is not None else "")
+
+    def tier_kwargs(self) -> dict:
+        return dict(dtype=self.dtype, scales=self.scales, zeros=self.zeros,
+                    rerank=self.rerank, rerank_norms=self.rerank_norms)
+
+    @property
+    def tier_nbytes(self) -> dict:
+        return {
+            "codes": int(self.vectors.nbytes),
+            "labels": int(self.label_words.nbytes),
+            "norms": int(self.norms.nbytes),
+            "scales": (int(self.scales.nbytes + self.zeros.nbytes)
+                       if self.scales is not None else 0),
+            "rerank": (int(self.rerank.nbytes + self.rerank_norms.nbytes)
+                       if self.rerank is not None else 0),
+            "tombstone": int(self.tombstones.nbytes),
+        }
+
+    @property
     def nbytes(self) -> int:
-        return int(self.vectors.nbytes + self.label_words.nbytes
-                   + self.norms.nbytes + self.tombstones.nbytes)
+        return sum(self.tier_nbytes.values())
+
+    def _buffers(self) -> dict:
+        """The cursor-indexed device buffers, as the pytree the generalized
+        append/grow operate over (absent tiers simply aren't keys)."""
+        bufs = {"vectors": self.vectors, "label_words": self.label_words,
+                "norms": self.norms}
+        if self.scales is not None:
+            bufs["scales"] = self.scales
+            bufs["zeros"] = self.zeros
+        if self.rerank is not None:
+            bufs["rerank"] = self.rerank
+            bufs["rerank_norms"] = self.rerank_norms
+        return bufs
 
     def grown(self, min_capacity: int) -> "DeltaArena":
         """Next power-of-two capacity tier holding ``min_capacity`` rows;
@@ -261,24 +460,34 @@ class DeltaArena:
         cap = pow2_bucket(min_capacity)
         if cap <= self.capacity:
             return self
-        return DeltaArena(
-            vectors=jnp.zeros((cap, self.dim), jnp.float32
-                              ).at[:self.capacity].set(self.vectors),
-            label_words=jnp.zeros((cap, self.label_words.shape[1]), jnp.int32
-                                  ).at[:self.capacity].set(self.label_words),
-            norms=jnp.zeros((cap,), jnp.float32
-                            ).at[:self.capacity].set(self.norms),
+        old = self.capacity
+
+        def widen(buf):
+            shape = (cap,) + buf.shape[1:]
+            return jnp.zeros(shape, buf.dtype).at[:old].set(buf)
+
+        grown_bufs = {name: widen(buf)
+                      for name, buf in self._buffers().items()}
+        if "scales" in grown_bufs:
+            # untouched slots keep scale 1.0 (masked by count anyway, but a
+            # degenerate dequant of an all-zero slot stays finite)
+            grown_bufs["scales"] = grown_bufs["scales"].at[old:].set(1.0)
+        return dataclasses.replace(
+            self,
             tombstones=jnp.zeros(tombstone_bytes(cap), jnp.uint8
                                  ).at[:self.tombstones.shape[0]
                                       ].set(self.tombstones),
-            count=self.count)
+            **grown_bufs)
 
     def appended(self, vectors: np.ndarray,
                  label_words: np.ndarray) -> "DeltaArena":
         """Append ``m`` rows at the cursor (functional).  The batch is
         zero-padded to a power of two so the jitted updater traces once per
         (capacity, batch-tier); pad slots beyond the new cursor are masked
-        by ``count`` until a later append overwrites them."""
+        by ``count`` until a later append overwrites them.  Quantized tiers
+        encode the padded batch host-side FIRST (pad rows are constant-zero
+        → code 0, scale 1, zero 0 → dequant exactly 0), then compute norms
+        eagerly from the dequantized device values — see the class note."""
         import jax.numpy as jnp
         m = vectors.shape[0]
         if m == 0:
@@ -291,17 +500,22 @@ class DeltaArena:
         rows[:m] = vectors
         lws = np.zeros((m_pad, out.label_words.shape[1]), np.int32)
         lws[:m] = label_words
-        rows_dev = jnp.asarray(rows)
         # norms EAGERLY, with the exact dispatch Arena.from_host uses: the
         # fused-in-jit mul+reduce drifts from the eager one at ULP level,
         # and a folded arena gathers these values — they must be
-        # bit-identical to a from-scratch upload (DESIGN.md §3.6)
-        norms = jnp.sum(rows_dev * rows_dev, axis=1)
-        v, lw, nr = _delta_append(out.vectors, out.label_words, out.norms,
-                                  rows_dev, jnp.asarray(lws), norms,
-                                  jnp.int32(out.count))
-        return dataclasses.replace(out, vectors=v, label_words=lw, norms=nr,
-                                   count=out.count + m)
+        # bit-identical to a from-scratch upload (DESIGN.md §3.6/§3.8)
+        codes, scales, zeros, norms = _encode_tier(rows, out.dtype)
+        parts = {"vectors": codes, "label_words": jnp.asarray(lws),
+                 "norms": norms}
+        if scales is not None:
+            parts["scales"] = scales
+            parts["zeros"] = zeros
+        if out.rerank is not None:
+            rr = jnp.asarray(rows)
+            parts["rerank"] = rr
+            parts["rerank_norms"] = jnp.sum(rr * rr, axis=1)
+        new_bufs = _delta_append(out._buffers(), parts, jnp.int32(out.count))
+        return dataclasses.replace(out, count=out.count + m, **new_bufs)
 
     def with_tombstones(self, dead: np.ndarray) -> "DeltaArena":
         """New DeltaArena whose bitmap marks the host bool mask ``dead``
@@ -314,23 +528,24 @@ class DeltaArena:
 _DELTA_APPEND_JIT = None
 
 
-def _delta_append(vbuf, lbuf, nbuf, rows, lws, norms, start):
-    """Jitted cursor append (lazy so this module stays importable without
-    touching jax); one trace per (capacity, batch-tier) shape pair.  Norms
-    arrive precomputed — see ``DeltaArena.appended``."""
+def _delta_append(bufs: dict, parts: dict, start):
+    """Jitted cursor append over a dict-of-buffers pytree (lazy so this
+    module stays importable without touching jax); one trace per
+    (capacity, batch-tier, tier-structure) signature.  Norms/codes arrive
+    precomputed — see ``DeltaArena.appended``."""
     global _DELTA_APPEND_JIT
     if _DELTA_APPEND_JIT is None:
         import jax
 
         @jax.jit
-        def upd(vbuf, lbuf, nbuf, rows, lws, norms, start):
-            v = jax.lax.dynamic_update_slice(vbuf, rows, (start, 0))
-            lw = jax.lax.dynamic_update_slice(lbuf, lws, (start, 0))
-            n = jax.lax.dynamic_update_slice(nbuf, norms, (start,))
-            return v, lw, n
+        def upd(bufs, parts, start):
+            def one(buf, part):
+                idx = (start,) + (0,) * (buf.ndim - 1)
+                return jax.lax.dynamic_update_slice(buf, part, idx)
+            return jax.tree.map(one, bufs, parts)
 
         _DELTA_APPEND_JIT = upd
-    return _DELTA_APPEND_JIT(vbuf, lbuf, nbuf, rows, lws, norms, start)
+    return _DELTA_APPEND_JIT(bufs, parts, start)
 
 
 class VectorIndex(Protocol):

@@ -178,7 +178,8 @@ class FlatArenaView:
                     q, lq, self.arena.vectors, self.arena.label_words,
                     self.arena.norms, self._rows, starts, lens, k=_k,
                     lmax=_lmax, metric=self.metric,
-                    backend=self.kernel_backend, tomb=tomb)
+                    backend=self.kernel_backend, tomb=tomb,
+                    **self.arena.tier_kwargs())
                 # segment positions ARE local ids (ascending global order);
                 # normalize the empty-slot sentinel to num_vectors
                 ids = jnp.where(pos >= self.length, self.length, pos)

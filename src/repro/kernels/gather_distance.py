@@ -60,10 +60,43 @@ def _seg_gather_kernel(ids_ref, lens_ref, q_ref, lq_ref, x_ref, lx_ref,
     out_ref[0, 0] = jnp.where(ok & valid, d, INF)
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def _seg_gather_kernel_int8(ids_ref, lens_ref, q_ref, lq_ref, x_ref, lx_ref,
+                            s_ref, z_ref, out_ref, *, metric: str,
+                            dcols: int | None):
+    """Int8 variant of :func:`_seg_gather_kernel` (DESIGN.md §3.8): the
+    candidate row arrives as uint8 CODES — a quarter of the f32 row's DMA
+    bytes, and it stays uint8 in VMEM until this step's dequant.  The
+    per-row scale/zero-point ride the same index_map as the row ([1, 1]
+    blocks of the [N, 1] scale/zero columns), so dequant = zero + scale ·
+    code is one fused mul+add here, bitwise the eager upload-time value.
+    ``dcols`` masks lane-padding columns: a padded CODE byte of 0 would
+    dequantize to the row's zero-point, not 0, so lanes >= dcols are
+    forced back to 0 before the distance reduce."""
+    qi = pl.program_id(0)
+    li = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)          # [1, D]
+    xr = z_ref[0, 0] + s_ref[0, 0] * x_ref[...].astype(jnp.float32)
+    if dcols is not None and dcols < xr.shape[1]:
+        lane = jax.lax.broadcasted_iota(jnp.int32, xr.shape, 1)
+        xr = jnp.where(lane < dcols, xr, 0.0)
+    ip = jnp.sum(q * xr)
+    if metric == "ip":
+        d = -ip
+    else:
+        d = jnp.sum((q - xr) ** 2)
+    lq = lq_ref[...]                            # [1, W]
+    lx = lx_ref[...]                            # [1, W]
+    ok = jnp.all((lq & lx) == lq)
+    valid = li < lens_ref[qi]
+    out_ref[0, 0] = jnp.where(ok & valid, d, INF)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret", "dcols"))
 def segmented_gather_distance_pallas(q, lq, x, lxw, gids, lens, *,
                                      metric: str = "l2",
-                                     interpret: bool = True):
+                                     interpret: bool = True,
+                                     scales=None, zeros=None,
+                                     dcols: int | None = None):
     """Segmented arena gather + fused filtered distance (DESIGN.md §3).
 
     ``q`` [Q, D] f32, ``lq`` [Q, W] i32; ``x`` [N, D] arena vectors;
@@ -79,6 +112,12 @@ def segmented_gather_distance_pallas(q, lq, x, lxw, gids, lens, *,
     extended with a second grid axis and the fused label filter.  Note the
     id table lives in SMEM: callers bound Q·L (the ops wrapper chunks the
     candidate span).
+
+    ``scales``/``zeros`` ([N] f32, int8 scan tier only, DESIGN.md §3.8):
+    ``x`` then holds uint8 codes which stay uint8 through the DMA and in
+    VMEM; the per-row scale/zero-point are gathered by the SAME
+    ``ids_ref[i, j]`` index_map (as [1, 1] blocks of their [N, 1] column
+    layout) and the dequant fuses into the distance step.
     """
     if pltpu is None:  # pragma: no cover
         raise RuntimeError("pallas tpu grid specs unavailable")
@@ -86,25 +125,38 @@ def segmented_gather_distance_pallas(q, lq, x, lxw, gids, lens, *,
     D = q.shape[1]
     W = lq.shape[1]
 
+    in_specs = [
+        pl.BlockSpec((1, D), lambda i, j, ids_ref, lens_ref: (i, 0)),
+        pl.BlockSpec((1, W), lambda i, j, ids_ref, lens_ref: (i, 0)),
+        pl.BlockSpec((1, D),
+                     lambda i, j, ids_ref, lens_ref: (ids_ref[i, j], 0)),
+        pl.BlockSpec((1, W),
+                     lambda i, j, ids_ref, lens_ref: (ids_ref[i, j], 0)),
+    ]
+    operands = [q, lq, x, lxw]
+    kernel = _seg_gather_kernel
+    if scales is not None:
+        in_specs += [
+            pl.BlockSpec((1, 1),
+                         lambda i, j, ids_ref, lens_ref: (ids_ref[i, j], 0)),
+            pl.BlockSpec((1, 1),
+                         lambda i, j, ids_ref, lens_ref: (ids_ref[i, j], 0)),
+        ]
+        operands += [scales.astype(jnp.float32)[:, None],
+                     zeros.astype(jnp.float32)[:, None]]
+        kernel = functools.partial(_seg_gather_kernel_int8, dcols=dcols)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(Q, L),
-        in_specs=[
-            pl.BlockSpec((1, D), lambda i, j, ids_ref, lens_ref: (i, 0)),
-            pl.BlockSpec((1, W), lambda i, j, ids_ref, lens_ref: (i, 0)),
-            pl.BlockSpec((1, D),
-                         lambda i, j, ids_ref, lens_ref: (ids_ref[i, j], 0)),
-            pl.BlockSpec((1, W),
-                         lambda i, j, ids_ref, lens_ref: (ids_ref[i, j], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1), lambda i, j, ids_ref, lens_ref: (i, j)),
     )
     return pl.pallas_call(
-        functools.partial(_seg_gather_kernel, metric=metric),
+        functools.partial(kernel, metric=metric),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Q, L), jnp.float32),
         interpret=interpret,
-    )(gids.astype(jnp.int32), lens.astype(jnp.int32), q, lq, x, lxw)
+    )(gids.astype(jnp.int32), lens.astype(jnp.int32), *operands)
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))

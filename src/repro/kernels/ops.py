@@ -130,11 +130,13 @@ SEG_CHUNK = 2048
 
 
 @functools.partial(jax.jit, static_argnames=("k", "lmax", "chunk", "metric",
-                                             "backend", "interpret"))
+                                             "backend", "interpret", "dtype",
+                                             "kprime", "dcols"))
 def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
-                    tomb=None, *,
+                    tomb=None, scales=None, zeros=None, rr=None, rrn=None, *,
                     k: int, lmax: int, chunk: int, metric: str, backend: str,
-                    interpret: bool):
+                    interpret: bool, dtype: str = "f32",
+                    kprime: int | None = None, dcols: int | None = None):
     """Chunked segmented arena top-k — bit-identical to the unchunked
     oracle ``ref.segmented_filtered_topk``.
 
@@ -151,6 +153,20 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
     into the existing label filter, touching no distance value and adding
     no dispatch key (``None``, the static engine's setting, traces the
     mutation-free program exactly as before).
+
+    Tiered precision (DESIGN.md §3.8): ``dtype`` selects the scan tier —
+    ``"f32"`` (the default) runs byte-for-byte today's program;
+    ``"fp16"``/``"int8"`` scan dequantized codes (int8 gathers the per-row
+    ``scales``/``zeros`` alongside, and on the pallas backend the codes
+    stay uint8 in VMEM).  With a rerank tier (``rr``/``rrn``, the exact
+    f32 rows + norms) the scan instead keeps a k' = ``kprime`` shortlist
+    which a second in-program stage reranks exactly: the shortlist is
+    re-sorted by segment position (so ``lax.top_k``'s lower-index
+    tie-break reproduces the (distance, position) lexicographic order of
+    the single-level program), exact distances are gathered from the
+    rerank tier, and the final top-k comes out of the SAME traced program
+    — one dispatch per (k, Q-bucket, span tier, dtype), and warmup covers
+    scan + rerank together.
     """
     Q = q.shape[0]
     R = rows_concat.shape[0]
@@ -158,9 +174,12 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
         raise ValueError(f"chunk {chunk} must divide lmax {lmax}")
     if metric not in ("l2", "ip"):
         raise ValueError(f"unknown metric {metric!r}")
+    # shortlist width: k' bounded by the span (a span-sized shortlist is
+    # already exhaustive), never below k (the output width)
+    kp = k if rr is None else max(k, min(kprime or 4 * k, lmax))
     qn = jnp.sum(q * q, axis=1)
-    init = (jnp.full((Q, k), jnp.inf, jnp.float32),
-            jnp.full((Q, k), lmax, jnp.int32))
+    init = (jnp.full((Q, kp), jnp.inf, jnp.float32),
+            jnp.full((Q, kp), lmax, jnp.int32))
 
     def body(carry, c0):
         run_v, run_p = carry
@@ -171,14 +190,18 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
         if backend == "pallas":
             d = segmented_gather_distance_pallas(
                 q, lq, ax, alw, gid, jnp.clip(lens - c0, 0, chunk),
-                metric=metric, interpret=interpret)
+                metric=metric, interpret=interpret,
+                scales=scales, zeros=zeros, dcols=dcols)
             if tomb is not None:
                 # the kernel fuses label filter + lens mask; the tombstone
                 # AND composes outside it — it can only add +inf lanes,
                 # never touch a surviving distance
                 d = jnp.where(ref.tombstone_mask(tomb, gid), d, jnp.inf)
         else:
-            xg = ax[gid]                                       # [Q, C, D]
+            xg = ref.dequantize_rows(
+                ax[gid], dtype,
+                None if scales is None else scales[gid],
+                None if zeros is None else zeros[gid])         # [Q, C, D]
             # explicit multiply + minor-axis reduce, NOT a dot_general: XLA
             # tiles batched contractions differently per batch size, which
             # perturbs f32 accumulation order at ULP level — a reduce over
@@ -195,11 +218,42 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
         cat_v = jnp.concatenate([run_v, d], axis=1)
         cat_p = jnp.concatenate(
             [run_p, jnp.broadcast_to(pos[None, :], (Q, chunk))], axis=1)
-        neg, sel = jax.lax.top_k(-cat_v, k)
+        neg, sel = jax.lax.top_k(-cat_v, kp)
         return (-neg, jnp.take_along_axis(cat_p, sel, axis=1)), None
 
     (vals, pos), _ = jax.lax.scan(body, init,
                                   jnp.arange(0, lmax, chunk, dtype=jnp.int32))
+    if rr is not None:
+        # ---- stage 2: exact rerank of the compressed-scan shortlist ----
+        # re-sort by segment position: shortlist order is (scan-distance,
+        # position), but the final tie-break must be (EXACT distance,
+        # position) — position-ascending input makes lax.top_k's
+        # lower-index preference reproduce exactly that (empties, pos ==
+        # lmax, sort to the tail)
+        spos = jnp.sort(pos, axis=1)
+        listed = spos < lmax
+        sp = jnp.clip(starts[:, None] + spos, 0, max(R - 1, 0))
+        sgid = rows_concat[jnp.where(listed, sp, 0)]           # [Q, kp]
+        if backend == "pallas":
+            # shortlist rows already passed the label/tombstone filter;
+            # position-sorted means the first sum(listed) lanes are the
+            # live ones, which is exactly the kernel's lens mask
+            d = segmented_gather_distance_pallas(
+                q, lq, rr, alw, sgid,
+                jnp.sum(listed, axis=1).astype(jnp.int32),
+                metric=metric, interpret=interpret)
+        else:
+            xg = rr[sgid]                                      # [Q, kp, D]
+            ip = jnp.sum(xg * q[:, None, :], axis=-1)
+            d = -ip if metric == "ip" else \
+                qn[:, None] - 2.0 * ip + rrn[sgid]
+            d = jnp.where(listed, d, jnp.inf)
+        if kp < k:   # lmax < k: pad the shortlist out to the output width
+            d = jnp.pad(d, ((0, 0), (0, k - kp)), constant_values=jnp.inf)
+            spos = jnp.pad(spos, ((0, 0), (0, k - kp)), constant_values=lmax)
+        neg, sel = jax.lax.top_k(-d, k)
+        vals = -neg
+        pos = jnp.take_along_axis(spos, sel, axis=1)
     empty = jnp.isinf(vals)
     pos = jnp.where(empty, lmax, pos)
     vals = jnp.where(empty, jnp.float32(jnp.inf), vals)
@@ -214,7 +268,9 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
 
 def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
                    lmax: int, metric: str = "l2", backend: str = "ref",
-                   chunk: int | None = None, tomb=None):
+                   chunk: int | None = None, tomb=None, dtype: str = "f32",
+                   scales=None, zeros=None, rerank=None, rerank_norms=None,
+                   kprime: int | None = None):
     """Single-dispatch segmented arena search (DESIGN.md §3).
 
     One traced program per (k, Q-bucket, lmax, metric, backend) serves every
@@ -232,22 +288,37 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
     ``tomb``: optional packed tombstone bitmap (streaming engine only; the
     static engine passes ``None`` and traces the exact pre-mutation
     program).
+
+    Tiered precision (DESIGN.md §3.8): ``dtype`` + the arena's tier
+    operands select the scan representation (``scales``/``zeros`` for
+    int8), and ``rerank``/``rerank_norms`` (exact f32 rows + eager norms)
+    turn the program two-level — compressed scan to a ``kprime`` (default
+    4k) shortlist, exact in-program rerank.  ``dtype="f32"`` with no tier
+    operands is byte-for-byte the pre-tier program.
     """
+    dcols = None
     if backend == "pallas":
+        if dtype == "int8":
+            dcols = ax.shape[1]      # mask lane padding inside the kernel
         ax = _pad_axis(ax, 1, 128)
         q = _pad_axis(q, 1, 128)
+        if rerank is not None:
+            rerank = _pad_axis(rerank, 1, 128)
     return _segmented_topk(
         jnp.asarray(q, jnp.float32), jnp.asarray(lq, jnp.int32),
         ax, alw, axn, rows_concat,
         jnp.asarray(starts, jnp.int32), jnp.asarray(lens, jnp.int32),
-        tomb,
+        tomb, scales, zeros, rerank, rerank_norms,
         k=k, lmax=lmax, chunk=chunk or min(SEG_CHUNK, lmax), metric=metric,
-        backend=backend, interpret=default_interpret())
+        backend=backend, interpret=default_interpret(), dtype=dtype,
+        kprime=kprime, dcols=dcols)
 
 
 def delta_topk(q, lq, dx, dlw, dxn, tomb, count: int, *, k: int,
                metric: str = "l2", backend: str = "ref",
-               chunk: int | None = None):
+               chunk: int | None = None, dtype: str = "f32",
+               scales=None, zeros=None, rerank=None, rerank_norms=None,
+               kprime: int | None = None):
     """Brute-force label-filtered top-k over the streaming delta arena
     (DESIGN.md §3.6) — one traced program per (k, Q-bucket, capacity-tier).
 
@@ -272,7 +343,10 @@ def delta_topk(q, lq, dx, dlw, dxn, tomb, count: int, *, k: int,
     lens = jnp.full((Q,), min(count, cap), jnp.int32)
     vals, pos, _ = segmented_topk(q, lq, dx, dlw, dxn, ident, starts, lens,
                                   k=k, lmax=cap, metric=metric,
-                                  backend=backend, chunk=chunk, tomb=tomb)
+                                  backend=backend, chunk=chunk, tomb=tomb,
+                                  dtype=dtype, scales=scales, zeros=zeros,
+                                  rerank=rerank, rerank_norms=rerank_norms,
+                                  kprime=kprime)
     return vals, pos
 
 

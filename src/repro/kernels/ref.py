@@ -87,9 +87,56 @@ def tombstone_mask(tomb: jnp.ndarray, gid: jnp.ndarray) -> jnp.ndarray:
     return ((byte >> (gid & 7)) & 1) == 0
 
 
+def dequantize_rows(xg, dtype: str, scales_g=None, zeros_g=None):
+    """Gathered scan-tier rows -> f32 values the distance math consumes.
+
+    ``xg`` [..., D] (f32 / f16 / u8 codes per ``dtype``); for int8 the
+    gathered per-row ``scales_g``/``zeros_g`` [...] broadcast over the
+    feature axis: dequant = zero + scale·code — one IEEE mul + add per
+    element, so the value is identical whether computed here, eagerly at
+    upload time (``index.base._encode_tier``), or inside the Pallas kernel.
+    """
+    if dtype == "f32":
+        return xg
+    if dtype == "fp16":
+        return xg.astype(jnp.float32)
+    if dtype == "int8":
+        return (zeros_g[..., None]
+                + scales_g[..., None] * xg.astype(jnp.float32))
+    raise ValueError(f"unknown storage dtype {dtype!r}")
+
+
+def np_quantized_distances(q, codes, scale, zero, lq_words, lx_words,
+                           metric: str = "l2") -> "np.ndarray":
+    """Numpy quantized-scan oracle (DESIGN.md §3.8): float64 distances of
+    every query to every DEQUANTIZED int8 row, +inf where the label filter
+    fails.  The f32 dequant is bitwise the kernel's (elementwise); the f64
+    accumulation defines the reference ordering the compressed-scan
+    shortlist is checked against (shortlist membership up to f32-rounding
+    boundary ties — tests/test_quantized_arena.py)."""
+    import numpy as np
+
+    xd = (zero[:, None].astype(np.float32)
+          + scale[:, None].astype(np.float32)
+          * codes.astype(np.float32)).astype(np.float64)
+    qd = np.asarray(q, np.float64)
+    ip = qd @ xd.T
+    if metric == "ip":
+        d = -ip
+    else:
+        d = (np.sum(qd * qd, axis=1)[:, None] - 2.0 * ip
+             + np.sum(xd * xd, axis=1)[None, :])
+    lq = np.asarray(lq_words)[:, None, :]
+    lx = np.asarray(lx_words)[None, :, :]
+    keep = np.all((lq & lx) == lq, axis=-1)
+    return np.where(keep, d, np.inf)
+
+
 def segmented_filtered_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
                             k: int, lmax: int, metric: str = "l2",
-                            tomb=None):
+                            tomb=None, dtype: str = "f32", scales=None,
+                            zeros=None, rerank=None, rerank_norms=None,
+                            kprime: int | None = None):
     """Segmented arena top-k oracle (DESIGN.md §3): one batch, one program.
 
     Every query carries its own candidate segment — a ``(start, len)`` span
@@ -112,32 +159,65 @@ def segmented_filtered_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
     ``tomb``: optional packed tombstone bitmap [⌈N/8⌉] u8 fused into the
     keep mask (see :func:`tombstone_mask`); ``None`` keeps the static
     (mutation-free) program unchanged.
+
+    Tiered precision (DESIGN.md §3.8): ``dtype``/``scales``/``zeros``
+    select the scan tier (distances on :func:`dequantize_rows` values —
+    ``"f32"`` is byte-for-byte today's path); with a ``rerank`` tier the
+    scan keeps a k' = ``kprime`` (default 4k) shortlist, which is then
+    re-sorted by segment position and reranked against the exact f32 rows
+    — the unchunked oracle of the two-level ``ops._segmented_topk``.
     """
     Q = q.shape[0]
     R = rows_concat.shape[0]
+    kp = k if rerank is None else max(k, min(kprime or 4 * k, lmax))
     pos = jnp.arange(lmax, dtype=jnp.int32)[None, :]          # [1, L]
     valid = pos < lens[:, None]                               # [Q, L]
     p = jnp.clip(starts[:, None] + pos, 0, max(R - 1, 0))
     gid = rows_concat[jnp.where(valid, p, 0)]                 # [Q, L]
-    xg = ax[gid]                                              # [Q, L, D]
+    xg = dequantize_rows(ax[gid], dtype,
+                         None if scales is None else scales[gid],
+                         None if zeros is None else zeros[gid])  # [Q, L, D]
     # multiply + minor-axis reduce (not dot_general): batch-composition
     # independent f32 accumulation — see kernels.ops._segmented_topk
     ip = jnp.sum(xg * q[:, None, :], axis=-1)
+    qn = jnp.sum(q * q, axis=1)
     if metric == "ip":
         d = -ip
     else:
-        qn = jnp.sum(q * q, axis=1)
         d = qn[:, None] - 2.0 * ip + axn[gid]
     keep = jnp.all((lq[:, None, :] & alw[gid]) == lq[:, None, :], axis=-1)
     if tomb is not None:
         keep = keep & tombstone_mask(tomb, gid)
     d = jnp.where(keep & valid, d, FILTERED)
-    if k > lmax:   # fewer candidates than requested: pad the span
-        d = jnp.pad(d, ((0, 0), (0, k - lmax)), constant_values=jnp.inf)
-    neg, sel = jax.lax.top_k(-d, k)
+    if kp > lmax:   # fewer candidates than requested: pad the span
+        d = jnp.pad(d, ((0, 0), (0, kp - lmax)), constant_values=jnp.inf)
+    neg, sel = jax.lax.top_k(-d, kp)
     vals = -neg
     sel = jnp.where(jnp.isinf(vals), lmax, sel)
     vals = jnp.where(jnp.isinf(vals), FILTERED, vals)
+    if rerank is not None:
+        # re-sort the shortlist by segment position: lax.top_k breaks
+        # value ties toward the lower index, so position order makes the
+        # final (exact-distance, position) order identical to the
+        # single-level f32 program's whenever the shortlist covers it
+        order = jnp.argsort(sel, axis=1, stable=True)
+        spos = jnp.take_along_axis(sel, order, axis=1)
+        listed = spos < lmax
+        sp = jnp.clip(starts[:, None] + spos, 0, max(R - 1, 0))
+        sgid = rows_concat[jnp.where(listed, sp, 0)]
+        xg = rerank[sgid]                                     # [Q, kp, D]
+        ip = jnp.sum(xg * q[:, None, :], axis=-1)
+        d = -ip if metric == "ip" else \
+            qn[:, None] - 2.0 * ip + rerank_norms[sgid]
+        d = jnp.where(listed, d, FILTERED)
+        if kp < k:   # lmax < k: pad the shortlist out to k
+            d = jnp.pad(d, ((0, 0), (0, k - kp)), constant_values=jnp.inf)
+            spos = jnp.pad(spos, ((0, 0), (0, k - kp)), constant_values=lmax)
+        neg, rsel = jax.lax.top_k(-d, k)
+        vals = -neg
+        sel = jnp.take_along_axis(spos, rsel, axis=1)
+        sel = jnp.where(jnp.isinf(vals), lmax, sel)
+        vals = jnp.where(jnp.isinf(vals), FILTERED, vals)
     return vals, sel.astype(jnp.int32)
 
 

@@ -248,3 +248,15 @@ class RetrievalAugmentedEngine:
     def flush(self) -> dict:
         """Force a compaction of pending corpus mutations."""
         return self._streaming().flush()
+
+    # -- reporting ------------------------------------------------------------
+    def retrieval_stats(self):
+        """The retrieval engine's :class:`~repro.core.engine.EngineStats`,
+        including the tiered-storage byte split (DESIGN.md §3.8).  A
+        memory-tight deployment builds the engine with
+        ``storage="int8"`` (or ``"int8+rerank"`` for exact distances) and
+        reads ``codes_nbytes``/``scales_nbytes``/``rerank_nbytes`` here to
+        see the arena footprint the compressed scan tier actually holds —
+        the serving-side view of the bytes/row-vs-recall frontier
+        (benchmarks/exp2_index_cost.py)."""
+        return self.eli.stats()

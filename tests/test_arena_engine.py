@@ -108,6 +108,81 @@ def test_streaming_memory_bound(fix):
     assert st2.nbytes <= bound2, (st2.nbytes, bound2)
 
 
+# -- tiered-precision byte accounting (DESIGN.md §3.8) ----------------------
+# closed-form per-tier bytes for n rows at dim d / w label words:
+#   codes      n·d·itemsize(dtype)
+#   labels     n·w·4          norms   n·4         tombstone  ⌈n/8⌉
+#   scales     2·n·4 (int8 scale + zero-point columns, else 0)
+#   rerank     n·(d+1)·4 (exact f32 rows + their norms, else 0)
+
+_TIER_ITEM = {"f32": 4, "fp16": 2, "int8": 1}
+
+
+def _tier_bytes(n: int, d: int, w: int, storage: str) -> dict:
+    from repro.index.base import parse_storage
+    dtype, has_rerank = parse_storage(storage)
+    return dict(codes=n * d * _TIER_ITEM[dtype], labels=n * w * 4,
+                norms=n * 4, scales=(2 * n * 4 if dtype == "int8" else 0),
+                rerank=(n * (d + 1) * 4 if has_rerank else 0),
+                tombstone=-(-n // 8))
+
+
+@pytest.mark.parametrize("storage", ["f32", "fp16", "int8",
+                                     "fp16+rerank", "int8+rerank"])
+def test_arena_memory_bound_per_dtype(fix, storage):
+    """ISSUE 6 satellite: the per-dtype closed-form arena bound, and the
+    EngineStats per-tier split summing back to arena_nbytes exactly."""
+    N, D = 800, fix["D"]
+    eng = LabelHybridEngine.build(fix["x"][:N], fix["ls"][:N], mode="eis",
+                                  c=0.2, backend="flat", storage=storage)
+    st = eng.stats()
+    W = eng.label_words.shape[1]
+    t = _tier_bytes(N, D, W, storage)
+    assert st.storage == storage
+    assert st.codes_nbytes == t["codes"]
+    assert st.scales_nbytes == t["scales"]
+    assert st.rerank_nbytes == t["rerank"]
+    assert st.tombstone_nbytes == t["tombstone"]
+    assert st.arena_nbytes == sum(t.values())
+    assert eng.arena.tier_nbytes == t
+    assert st.nbytes == st.arena_nbytes + st.segment_nbytes
+    # the compressed scan tier must actually shrink the vector bytes
+    if storage in ("fp16", "int8"):
+        f32_rows = N * D * 4
+        assert st.codes_nbytes + st.scales_nbytes < f32_rows
+
+
+@pytest.mark.parametrize("storage", ["f32", "int8", "int8+rerank"])
+def test_streaming_memory_bound_per_dtype(fix, storage):
+    """The delta arena holds the SAME tiers as the base: the streaming
+    bound extends per dtype with the delta's capacity-tier closed form,
+    and the streaming stats' per-tier split covers base + delta."""
+    from repro.core import StreamingEngine
+
+    N, D = 800, fix["D"]
+    se = StreamingEngine.build(fix["x"][:N], fix["ls"][:N], mode="eis",
+                               c=0.2, backend="flat", storage=storage,
+                               max_delta_fraction=None,
+                               max_tombstone_fraction=None)
+    rng = np.random.default_rng(6)
+    se.insert(rng.standard_normal((100, D)).astype(np.float32), [(0,)] * 100)
+    se.delete([0, 1, 2])
+    st = se.stats()
+    W = se.base.label_words.shape[1]
+    cap = se.delta.capacity
+    assert cap == 256
+    tb = _tier_bytes(N, D, W, storage)
+    td = _tier_bytes(cap, D, W, storage)
+    assert st.delta_nbytes == sum(td.values())
+    assert st.codes_nbytes == tb["codes"] + td["codes"]
+    assert st.scales_nbytes == tb["scales"] + td["scales"]
+    assert st.rerank_nbytes == tb["rerank"] + td["rerank"]
+    assert st.tombstone_nbytes == tb["tombstone"] + td["tombstone"]
+    assert st.nbytes == (st.arena_nbytes + st.segment_nbytes
+                         + st.delta_nbytes)
+    assert se.delta.tier_nbytes == td
+
+
 def test_views_share_one_arena_and_own_nothing(fix):
     eng = fix["eng"]
     arenas = {id(ix.arena) for ix in eng.indexes.values()}

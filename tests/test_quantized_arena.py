@@ -1,0 +1,487 @@
+"""Tiered-precision arena (ISSUE 6 tentpole, DESIGN.md §3.8).
+
+Pins the two-level correctness contract:
+
+  1. **quantizer** — the per-row asymmetric uint8 quantizer round-trips
+     within scale/2 per element, is exact on constant rows, and is
+     host-deterministic (the streaming rebuilt-from-scratch parity across
+     compactions rests on it);
+  2. **shortlist** — the compressed scan's k′ shortlist matches the
+     float64 numpy quantized oracle (``ref.np_quantized_distances``) up to
+     f32-rounding boundary ties, on tie-heavy integer data;
+  3. **rerank** — with the f32 rerank tier, results are BITWISE the
+     full-precision engine's whenever the shortlist covers the true
+     top-k (k′ = span makes that unconditional);
+  4. **f32 config** — ``storage="f32"`` is byte-for-byte the pre-tier
+     engine (no tier operand reaches the traced program);
+  5. **streaming** — quantized deltas append eagerly-quantized codes that
+     equal a from-scratch ``Arena.from_host`` encode, so search stays
+     bit-identical to a rebuilt engine across insert/delete/compaction;
+  6. **dispatch** — warmup pre-traces the quantized scan + rerank (and
+     streaming delta/merge) variants: zero new traces on the first
+     post-warmup quantized batch.
+
+Each property is written as a plain ``check_*`` function driven both by
+pinned examples (always run — the container may lack hypothesis) and, when
+hypothesis is importable, by generated cases.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LabelHybridEngine,
+    LabelWorkloadConfig,
+    StreamingEngine,
+    generate_label_sets,
+    generate_query_label_sets,
+)
+from repro.core.labels import encode_many, masks_to_int32_words
+from repro.index.base import (
+    Arena,
+    DeltaArena,
+    dequantize_int8,
+    parse_storage,
+    quantize_int8,
+)
+from repro.kernels import ops, ref
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYP = True
+except ImportError:  # container without hypothesis: pinned examples only
+    HAVE_HYP = False
+
+
+# ---------------------------------------------------------------------------
+# fixture
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def fix():
+    rng = np.random.default_rng(33)
+    N, D, Q = 2000, 24, 64
+    x = rng.standard_normal((N, D)).astype(np.float32)
+    ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=8, seed=5))
+    qv = rng.standard_normal((Q, D)).astype(np.float32)
+    qls = generate_query_label_sets(ls, Q, seed=6, from_base_fraction=0.75)
+    return dict(x=x, ls=ls, qv=qv, qls=qls, N=N, D=D)
+
+
+# ---------------------------------------------------------------------------
+# 1. the scalar quantizer
+# ---------------------------------------------------------------------------
+
+
+def check_quantizer_roundtrip(x: np.ndarray) -> None:
+    x = np.asarray(x, np.float32)
+    codes, scale, zero = quantize_int8(x)
+    assert codes.dtype == np.uint8 and codes.shape == x.shape
+    assert scale.shape == zero.shape == (x.shape[0],)
+    xd = dequantize_int8(codes, scale, zero)
+    # rint to the nearest code ⇒ per-element error ≤ scale/2 (+1 ulp slack
+    # for the f32 dequant arithmetic)
+    tol = scale[:, None] / 2 + np.abs(x) * 1e-6 + 1e-7
+    assert np.all(np.abs(xd - x) <= tol), np.max(np.abs(xd - x) - tol)
+    # row extremes hit codes 0 / 255 exactly for non-constant rows
+    spread = x.max(axis=1) > x.min(axis=1)
+    assert np.all(codes[spread].min(axis=1) == 0)
+    assert np.all(codes[spread].max(axis=1) == 255)
+    # host determinism: byte-identical re-encode
+    codes2, scale2, zero2 = quantize_int8(x)
+    assert np.array_equal(codes, codes2)
+    assert np.array_equal(scale, scale2)
+    assert np.array_equal(zero, zero2)
+
+
+def test_quantizer_roundtrip_pinned():
+    rng = np.random.default_rng(0)
+    check_quantizer_roundtrip(rng.standard_normal((64, 16)) * 3.0)
+    check_quantizer_roundtrip(rng.uniform(-1e-4, 1e-4, (8, 4)))
+    check_quantizer_roundtrip(rng.integers(-5, 5, (32, 8)).astype(np.float32))
+
+
+def test_quantizer_constant_rows_exact():
+    """Zero-range rows take the 1.0 scale guard → codes 0 → exact."""
+    x = np.full((4, 6), 2.5, np.float32)
+    x[1] = 0.0
+    x[2] = -7.0
+    codes, scale, zero = quantize_int8(x)
+    assert np.all(codes == 0) and np.all(scale == 1.0)
+    assert np.array_equal(dequantize_int8(codes, scale, zero), x)
+
+
+def test_quantizer_empty():
+    codes, scale, zero = quantize_int8(np.zeros((0, 5), np.float32))
+    assert codes.shape == (0, 5) and scale.shape == (0,)
+
+
+if HAVE_HYP:
+
+    @settings(deadline=None, max_examples=30)
+    @given(
+        st.integers(1, 40),
+        st.integers(1, 24),
+        st.integers(0, 2**32 - 1),
+        st.floats(1e-3, 1e3),
+    )
+    def test_quantizer_roundtrip_property(m, d, seed, spread):
+        rng = np.random.default_rng(seed)
+        x = (rng.standard_normal((m, d)) * spread).astype(np.float32)
+        check_quantizer_roundtrip(x)
+
+
+# ---------------------------------------------------------------------------
+# 2. shortlist membership vs the float64 numpy oracle
+# ---------------------------------------------------------------------------
+
+
+def check_shortlist_vs_oracle(x: np.ndarray, q: np.ndarray, k: int) -> None:
+    """The compressed scan's top-k′ over quantized codes must match the
+    float64 oracle ordering, tolerating only boundary ties at the f32
+    rounding edge (rows whose oracle distance ties the k′-th value)."""
+    N, _ = x.shape
+    lw = np.zeros((N, 2), np.int32)
+    lq = np.zeros((q.shape[0], 2), np.int32)
+    a = Arena.from_host(x, lw, storage="int8")
+    rows = jnp.arange(N, dtype=jnp.int32)
+    starts = jnp.zeros(q.shape[0], jnp.int32)
+    lens = jnp.full((q.shape[0],), N, jnp.int32)
+    _, _, gid = ops.segmented_topk(
+        jnp.asarray(q),
+        jnp.asarray(lq),
+        a.vectors,
+        a.label_words,
+        a.norms,
+        rows,
+        starts,
+        lens,
+        k=k,
+        lmax=N,
+        metric="l2",
+        backend="ref",
+        **a.tier_kwargs(),
+    )
+    gid = np.asarray(gid)
+    d64 = ref.np_quantized_distances(
+        q,
+        np.asarray(a.vectors),
+        np.asarray(a.scales),
+        np.asarray(a.zeros),
+        lq,
+        lw,
+    )
+    for qi in range(q.shape[0]):
+        order = np.argsort(d64[qi], kind="stable")
+        thresh = d64[qi][order[min(k, N) - 1]]
+        # every returned row must sit within the oracle's k-th distance
+        # (strictly better rows can only be displaced by boundary ties)
+        returned = gid[qi][gid[qi] < N]
+        assert np.all(d64[qi][returned] <= thresh + 1e-4 * (1 + abs(thresh)))
+
+
+def test_shortlist_vs_oracle_pinned_tie_heavy():
+    """Integer-grid data maximizes exact distance ties — the adversarial
+    case for ordering parity between f32 scan and f64 oracle."""
+    rng = np.random.default_rng(3)
+    x = rng.integers(-2, 3, (300, 8)).astype(np.float32)
+    q = rng.integers(-2, 3, (6, 8)).astype(np.float32)
+    check_shortlist_vs_oracle(x, q, k=12)
+
+
+def test_shortlist_vs_oracle_pinned_gaussian():
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((250, 12)).astype(np.float32)
+    q = rng.standard_normal((5, 12)).astype(np.float32)
+    check_shortlist_vs_oracle(x, q, k=10)
+
+
+if HAVE_HYP:
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.integers(0, 2**32 - 1), st.integers(1, 4), st.integers(1, 10))
+    def test_shortlist_vs_oracle_property(seed, lo, k):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-lo, lo + 1, (150, 6)).astype(np.float32)
+        q = rng.integers(-lo, lo + 1, (4, 6)).astype(np.float32)
+        check_shortlist_vs_oracle(x, q, k=k)
+
+
+# ---------------------------------------------------------------------------
+# 3. distance-order preservation through the rerank stage
+# ---------------------------------------------------------------------------
+
+
+def test_rerank_recovers_f32_when_shortlist_covers(fix):
+    """k′ = span ⇒ the shortlist trivially covers the true top-k, and the
+    rerank stage must reproduce the f32 program BITWISE — values, segment
+    positions, and global ids."""
+    x, lw = fix["x"][:400], np.zeros((400, 2), np.int32)
+    q = fix["qv"][:8]
+    lq = np.zeros((8, 2), np.int32)
+    rows = jnp.arange(400, dtype=jnp.int32)
+    starts = jnp.zeros(8, jnp.int32)
+    lens = jnp.full((8,), 400, jnp.int32)
+    a32 = Arena.from_host(x, lw)
+    ar = Arena.from_host(x, lw, storage="int8+rerank")
+    base = ops.segmented_topk(
+        jnp.asarray(q),
+        jnp.asarray(lq),
+        a32.vectors,
+        a32.label_words,
+        a32.norms,
+        rows,
+        starts,
+        lens,
+        k=10,
+        lmax=400,
+        metric="l2",
+        backend="ref",
+    )
+    two = ops.segmented_topk(
+        jnp.asarray(q),
+        jnp.asarray(lq),
+        ar.vectors,
+        ar.label_words,
+        ar.norms,
+        rows,
+        starts,
+        lens,
+        k=10,
+        lmax=400,
+        metric="l2",
+        backend="ref",
+        kprime=400,
+        **ar.tier_kwargs(),
+    )
+    for b, t in zip(base, two):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(t))
+
+
+def test_rerank_distances_are_exact_at_default_kprime(fix):
+    """At the default k′ = 4k the returned DISTANCES must be exact f32
+    values (the rerank tier computed them), i.e. every returned (id, val)
+    pair appears in the full-precision distance map."""
+    N = 400
+    x, lw = fix["x"][:N], np.zeros((N, 2), np.int32)
+    q = fix["qv"][:8]
+    lq = np.zeros((8, 2), np.int32)
+    rows = jnp.arange(N, dtype=jnp.int32)
+    starts = jnp.zeros(8, jnp.int32)
+    lens = jnp.full((8,), N, jnp.int32)
+    ar = Arena.from_host(x, lw, storage="fp16+rerank")
+    vals, _, gid = ops.segmented_topk(
+        jnp.asarray(q),
+        jnp.asarray(lq),
+        ar.vectors,
+        ar.label_words,
+        ar.norms,
+        rows,
+        starts,
+        lens,
+        k=10,
+        lmax=N,
+        metric="l2",
+        backend="ref",
+        **ar.tier_kwargs(),
+    )
+    vals, gid = np.asarray(vals), np.asarray(gid)
+    # exact f32 distance map, same multiply+reduce arithmetic in numpy f32
+    ip = np.einsum("qd,nd->qn", q.astype(np.float32), x, dtype=np.float32)
+    qn = np.sum(q * q, axis=1)
+    xn = np.asarray(ar.rerank_norms)
+    dmap = qn[:, None] - 2.0 * ip + xn[None, :]
+    for qi in range(8):
+        live = gid[qi] < N
+        got = vals[qi][live]
+        want = dmap[qi][gid[qi][live]]
+        # einsum's reduction order differs from the kernel's; allclose is
+        # the right bar for THIS cross-check (bitwise is pinned above)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 4. engine-level: f32 identity, quantized recall, warmup dispatch
+# ---------------------------------------------------------------------------
+
+
+def _build(fix, **kw):
+    return LabelHybridEngine.build(
+        fix["x"],
+        fix["ls"],
+        mode="eis",
+        c=0.2,
+        backend="flat",
+        **kw,
+    )
+
+
+def test_storage_f32_engine_bitwise_identical(fix):
+    e0 = _build(fix)
+    e1 = _build(fix, storage="f32")
+    d0, i0 = e0.search_batched(fix["qv"], fix["qls"], 10)
+    d1, i1 = e1.search_batched(fix["qv"], fix["qls"], 10)
+    np.testing.assert_array_equal(d0, d1)
+    np.testing.assert_array_equal(i0, i1)
+    assert e1.stats().storage == "f32"
+
+
+def test_invalid_storage_specs_rejected():
+    assert parse_storage("int8+rerank") == ("int8", True)
+    for bad in ("f32+rerank", "int4", "fp16+rr", ""):
+        with pytest.raises(ValueError):
+            parse_storage(bad)
+    with pytest.raises(ValueError):
+        LabelHybridEngine.build(
+            np.zeros((4, 2), np.float32),
+            [(0,)] * 4,
+            mode="eis",
+            c=0.2,
+            backend="ivf",
+            storage="int8",
+        )
+
+
+def test_quantized_engine_recall_and_rerank_identity(fix):
+    from repro.core.engine import brute_force_filtered, recall_at_k
+
+    e32 = _build(fix)
+    e8r = _build(fix, storage="int8+rerank")
+    d32, i32 = e32.search_batched(fix["qv"], fix["qls"], 10)
+    d8, i8 = e8r.search_batched(fix["qv"], fix["qls"], 10)
+    # rerank distances are exact f32: wherever the row sets agree the
+    # values must agree bitwise
+    same = [np.array_equal(a, b) for a, b in zip(i8, i32)]
+    assert np.mean(same) > 0.9  # shortlist covers almost every query
+    for qi, s in enumerate(same):
+        if s:
+            np.testing.assert_array_equal(d8[qi], d32[qi])
+    _, truth = brute_force_filtered(fix["x"], fix["ls"], fix["qv"], fix["qls"], 10)
+    assert recall_at_k(i8, truth, fix["N"]) >= 0.99
+
+
+def test_warmup_covers_quantized_variants(fix):
+    """ISSUE 6 satellite: zero new traces on the first post-warmup
+    quantized batch — static AND streaming engines."""
+    eng = _build(fix, storage="int8+rerank")
+    eng.warmup([10], [64])
+    before = ops._segmented_topk._cache_size()
+    eng.search_batched(fix["qv"], fix["qls"], 10, min_bucket=64)
+    assert ops._segmented_topk._cache_size() == before
+
+    se = StreamingEngine.build(
+        fix["x"],
+        fix["ls"],
+        mode="eis",
+        c=0.2,
+        backend="flat",
+        storage="int8",
+        max_delta_fraction=None,
+        max_tombstone_fraction=None,
+    )
+    se.warmup([10], [64])
+    se.insert(fix["x"][:50], fix["ls"][:50])
+    se.delete([3, 4])
+    before = ops._segmented_topk._cache_size()
+    se.search_batched(fix["qv"], fix["qls"], 10, min_bucket=64)
+    assert ops._segmented_topk._cache_size() == before
+
+
+# ---------------------------------------------------------------------------
+# 5. streaming: eager quantize + rebuilt-from-scratch parity
+# ---------------------------------------------------------------------------
+
+
+def test_delta_append_quantizes_eagerly_like_from_host(fix):
+    """DESIGN.md §3.8 eager-quantize rule: a delta append encodes with the
+    SAME host quantizer + eager-norm dispatch as ``Arena.from_host``, so
+    codes, scales, and norms are byte-identical either way — the invariant
+    that makes compaction re-folds representation-preserving."""
+    x = fix["x"][:150]
+    lw = masks_to_int32_words(encode_many([tuple(s) for s in fix["ls"][:150]]))
+    for storage in ("fp16", "int8", "int8+rerank"):
+        da = DeltaArena.empty(
+            x.shape[1],
+            lw.shape[1],
+            capacity=256,
+            storage=storage,
+        ).appended(x, lw)
+        ah = Arena.from_host(x, lw, storage=storage)
+        assert np.array_equal(np.asarray(da.vectors[:150]), np.asarray(ah.vectors))
+        assert np.array_equal(np.asarray(da.norms[:150]), np.asarray(ah.norms))
+        if "int8" in storage:
+            assert np.array_equal(
+                np.asarray(da.scales[:150]),
+                np.asarray(ah.scales),
+            )
+            assert np.array_equal(
+                np.asarray(da.zeros[:150]),
+                np.asarray(ah.zeros),
+            )
+        if storage.endswith("+rerank"):
+            assert np.array_equal(
+                np.asarray(da.rerank[:150]),
+                np.asarray(ah.rerank),
+            )
+        # growth preserves every tier byte-for-byte
+        dg = da.grown(512)
+        assert np.array_equal(
+            np.asarray(dg.vectors[:150]),
+            np.asarray(da.vectors[:150]),
+        )
+
+
+@pytest.mark.parametrize("storage", ["int8", "int8+rerank"])
+def test_streaming_quantized_parity_with_rebuild(fix, storage):
+    """Search over the mutated quantized stream == an engine rebuilt from
+    scratch on the survivors (modulo the monotonic renumbering), pending
+    AND post-compaction."""
+    N = 1200
+    x, ls = fix["x"][: N + 200], fix["ls"][: N + 200]
+    qv, qls = fix["qv"][:32], fix["qls"][:32]
+    se = StreamingEngine.build(
+        x[:N],
+        ls[:N],
+        mode="eis",
+        c=0.2,
+        backend="flat",
+        storage=storage,
+        max_delta_fraction=None,
+        max_tombstone_fraction=None,
+    )
+    se.insert(x[N : N + 200], ls[N : N + 200])
+    dead = list(range(0, 60))
+    se.delete(dead)
+    ds, is_ = se.search_batched(qv, qls, 10)
+
+    alive = np.ones(N + 200, bool)
+    alive[dead] = False
+    reb = LabelHybridEngine.build(
+        x[alive],
+        [ls[i] for i in np.flatnonzero(alive)],
+        mode="eis",
+        c=0.2,
+        backend="flat",
+        storage=storage,
+    )
+    dr, ir = reb.search_batched(qv, qls, 10)
+    id_map = np.full(N + 200 + 1, -1, np.int64)
+    id_map[np.flatnonzero(alive)] = np.arange(alive.sum())
+    id_map[N + 200] = int(alive.sum())  # sentinel → sentinel
+    np.testing.assert_array_equal(ds, dr)
+    np.testing.assert_array_equal(id_map[is_], ir)
+
+    # compaction re-folds per tier; results (and the engine's storage
+    # spec) must be unchanged
+    se.flush()
+    assert se.base.storage == storage
+    assert se.base.arena.storage == storage
+    df, if_ = se.search_batched(qv, qls, 10)
+    np.testing.assert_array_equal(df, dr)
+    np.testing.assert_array_equal(if_, ir)

@@ -1,0 +1,263 @@
+"""exp11: open-loop serving — continuous-batching runtime vs synchronous
+baseline (ROADMAP serving item; the regime of the in-depth filtering
+study's throughput/latency tradeoffs).
+
+Offered-load sweep: requests arrive open-loop (Poisson and bursty
+processes at matched offered QPS), and we compare
+
+  * **runtime**: ``serve.ServingRuntime`` — bounded admission queue,
+    bucket-aware micro-batcher under a latency budget, retrieval
+    interleaved with decode, prefills admitted into freed slots;
+  * **baseline**: the synchronous ``RetrievalAugmentedEngine.serve()``
+    loop — every arrived request batched, retrieval + ``decoder.run()``
+    to completion, later arrivals wait for the whole batch (head-of-line
+    blocking).
+
+Both systems are warmed identically (``warmup_serving`` + a pilot batch
+for the prefill/embed programs), so the curves measure scheduling, not
+compilation.  Latency is accounted from the *scheduled* arrival (the
+open-loop discipline: queueing delay shows up in p50/p99 instead of
+stretching the arrival process).  QPS points scale from a measured
+closed-loop capacity estimate so the sweep lands at comparable utilization
+on any machine.  → BENCH_exp11.json
+"""
+
+from __future__ import annotations
+
+import gc
+import time
+
+import jax
+import numpy as np
+
+from repro import arch as A
+from repro.configs import reduced_arch
+from repro.core.engine import LabelHybridEngine
+from repro.models.common import init_params
+from repro.serve import (
+    BatchedDecoder,
+    Request,
+    RetrievalAugmentedEngine,
+    ServingRuntime,
+)
+
+from .common import emit, emit_json, make_dataset
+
+# long enough that decode dominates service time (the serving regime:
+# a synchronous server's head-of-line penalty scales with generation
+# length, and the effect has to clear scheduler/OS noise)
+MAX_NEW = 12
+PROMPT_LENS = (6, 10)
+
+
+def _make_requests(n, vocab, qls, rng):
+    reqs = []
+    for i in range(n):
+        size = int(rng.choice(PROMPT_LENS))
+        prompt = rng.integers(0, vocab, size=size).astype(np.int32)
+        ls = tuple(qls[i % len(qls)])
+        reqs.append(Request(prompt=prompt, max_new=MAX_NEW, label_set=ls, rid=i))
+    return reqs
+
+
+def _warm_model_programs(rag, vocab, qls, rng, n_req, k):
+    """Trace every model-side program either system can dispatch: the
+    embed forward per (batch-bucket, seq-bucket) — the runtime's
+    micro-batches land on small buckets, the baseline's backlog batches
+    on large ones — and the prefill per decode_input length, including
+    the short-context lengths a query whose group holds fewer than k
+    rows produces (a single unseen length mid-measurement is a
+    multi-second XLA compile poisoning that rep's tail).  max_new=1
+    requests finish at admission, so most of this never spins the
+    decode loop.  Without this the latency curves measure who eats
+    which compile, not scheduling."""
+    sizes = {1, n_req}
+    b = 2
+    while b < n_req:
+        sizes.add(b)
+        b *= 2
+    for s in sorted(sizes):
+        for ln in PROMPT_LENS:
+            batch = []
+            for i in range(s):
+                prompt = rng.integers(0, vocab, size=ln).astype(np.int32)
+                ls = tuple(qls[i % len(qls)])
+                batch.append(Request(prompt=prompt, max_new=1, label_set=ls))
+            rag.serve(batch)
+    dec = rag.decoder
+    for ln in PROMPT_LENS:
+        for ctx in range(k + 1):
+            prompt = rng.integers(0, vocab, size=ln).astype(np.int32)
+            req = Request(prompt=prompt, max_new=1)
+            req.decode_input = rng.integers(0, vocab, size=ln + ctx).astype(np.int32)
+            dec.admit(req)
+    dec.step()
+    # and the decode-step program (max_new=1 never leaves admission)
+    rag.serve(_make_requests(dec.B, vocab, qls, rng))
+
+
+def poisson_offsets(n, qps, rng):
+    return np.cumsum(rng.exponential(1.0 / qps, size=n))
+
+
+def bursty_offsets(n, qps, rng, burst=8):
+    """Bursts of ``burst`` simultaneous arrivals, spaced so the *offered*
+    rate matches ``qps`` (the adversarial arrival process for a
+    micro-batcher: queue depth spikes per burst)."""
+    n_bursts = (n + burst - 1) // burst
+    starts = np.arange(n_bursts) * (burst / qps)
+    jitter = rng.exponential(0.1 / qps, size=n)
+    return np.repeat(starts, burst)[:n] + jitter
+
+
+def _percentiles(lat):
+    lat = np.asarray(lat)
+    return {
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "mean_ms": float(lat.mean() * 1e3),
+        "max_ms": float(lat.max() * 1e3),
+    }
+
+
+def run_baseline(rag, arrivals, max_seconds=300.0, max_batch=64):
+    """Synchronous serve loop: batch everything arrived (chunked at the
+    warmed ``max_batch`` so a deep backlog stays on pre-traced
+    programs), run to completion, repeat.  Returns per-request latency
+    from scheduled arrival."""
+    t0 = time.monotonic()
+    lat = []
+    i = 0
+    while i < len(arrivals):
+        now = time.monotonic() - t0
+        batch = []
+        while i < len(arrivals) and arrivals[i][0] <= now:
+            if len(batch) >= max_batch:
+                break
+            batch.append(arrivals[i])
+            i += 1
+        if not batch:
+            time.sleep(min(max(arrivals[i][0] - now, 0.0), 1e-3))
+            continue
+        rag.serve([r for _, r in batch])
+        t_done = time.monotonic() - t0
+        lat.extend(t_done - t_arr for t_arr, _ in batch)
+        if now > max_seconds:
+            raise TimeoutError("baseline exceeded time budget")
+    return lat
+
+
+def run_runtime(rag, arrivals, max_coalesce, budget_s):
+    rt = ServingRuntime(
+        rag,
+        queue_depth=4096,
+        max_coalesce=max_coalesce,
+        latency_budget_s=budget_s,
+        warmup=False,
+    )
+    done = rt.run_open_loop(arrivals)
+    rt.assert_no_new_traces()  # the zero-per-request-compilation pin
+    return [r.latency for r in done], rt.stats()
+
+
+def _capacity_estimate(rag, reqs):
+    """Closed-loop throughput (req/s) of the synchronous server on a
+    pre-generated batch — the yardstick the offered-QPS grid scales
+    from."""
+    t0 = time.monotonic()
+    rag.serve(list(reqs))
+    return len(reqs) / (time.monotonic() - t0)
+
+
+def run(tiny: bool = False, out_dir: str = "."):
+    spec = reduced_arch("mamba2_130m")
+    params = init_params(jax.random.PRNGKey(0), A.param_specs(spec))
+    slots = 4
+    dec = BatchedDecoder(spec, params, batch_slots=slots, max_len=64)
+    n = 4000 if tiny else 10_000
+    x, ls, qv, qls = make_dataset(n=n, d=16, n_labels=10, q=64, seed=11)
+    eli = LabelHybridEngine.build(x, ls, mode="eis", c=0.2, backend="flat")
+    # the coalesce cap tracks decode capacity: a wider retrieval batch
+    # has no amortization to offer once programs are warm — its tail
+    # just waits longer in the ready stage for a slot
+    rag = RetrievalAugmentedEngine(dec, eli, k=3, min_bucket=4)
+    max_coalesce = 2 * slots
+    budget_s = 0.002
+    rag.warmup_serving(max_batch=64)  # baseline batches can exceed the cap
+
+    rng = np.random.default_rng(17)
+    vocab = spec.cfg.vocab
+    n_req = 32 if tiny else 240
+    reps = 1 if tiny else 5
+    _warm_model_programs(rag, vocab, qls, rng, min(n_req, 64), k=3)
+    # the capacity run also traces the decode-step program
+    cap = _capacity_estimate(rag, _make_requests(64, vocab, qls, rng))
+    # the sweep starts where queueing is real: below ~0.6 utilization
+    # small-batch service costs put BOTH systems in the same metastable
+    # batch-forming regime and the p99 gap is scheduler noise
+    utilizations = (0.7,) if tiny else (0.6, 0.8, 0.95)
+    processes = {"poisson": poisson_offsets}
+    if not tiny:
+        processes["bursty"] = bursty_offsets
+
+    results = {
+        "capacity_qps_estimate": cap,
+        "n_requests": n_req,
+        "reps": reps,
+        "max_coalesce": max_coalesce,
+        "decoder_slots": slots,
+        "sweep": {},
+    }
+    rows = []
+    for pname, proc in processes.items():
+        for util in utilizations:
+            qps = cap * util
+            point = {"offered_qps": qps, "utilization": util}
+            # reps pool latencies before the percentile: a single
+            # open-loop pass's p99 is one order statistic of a queueing
+            # process — rep-to-rep variance swamps the systems gap
+            pooled = {"baseline": [], "runtime": []}
+            gc.collect()
+            # a GC pause mid-stream is pure tail noise for either system
+            gc.disable()
+            for rep in range(reps):
+                offs = proc(n_req, qps, np.random.default_rng(23 + rep))
+                for system in ("baseline", "runtime"):
+                    rng_req = np.random.default_rng(29 + rep)
+                    reqs = _make_requests(n_req, vocab, qls, rng_req)
+                    arrivals = list(zip(offs.tolist(), reqs))
+                    if system == "baseline":
+                        lat = run_baseline(rag, arrivals)
+                    else:
+                        lat, st = run_runtime(rag, arrivals, max_coalesce, budget_s)
+                        point["runtime_stats"] = {
+                            "batch_size_hist": st.batch_size_hist,
+                            "queue_depth_max": st.queue_depth_max,
+                            "decode_steps": st.decode_steps,
+                            "deadline_misses": st.deadline_misses,
+                            "new_segmented_traces": st.new_segmented_traces,
+                        }
+                    pooled[system].extend(lat)
+            gc.enable()
+            for system in ("baseline", "runtime"):
+                point[system] = _percentiles(pooled[system])
+            b99 = point["baseline"]["p99_ms"]
+            r99 = point["runtime"]["p99_ms"]
+            point["p99_speedup"] = b99 / r99
+            results["sweep"][f"{pname}_u{util}"] = point
+            row = {
+                "name": f"exp11_{pname}_u{util}",
+                "us_per_call": r99 * 1e3,
+                "offered_qps": round(qps, 1),
+                "runtime_p99_ms": round(r99, 2),
+                "baseline_p99_ms": round(b99, 2),
+                "p99_speedup": round(point["p99_speedup"], 2),
+            }
+            rows.append(row)
+    emit(rows, "exp11")
+    emit_json(results, "exp11", out_dir)
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -622,6 +622,20 @@ class LabelHybridEngine:
             jax.block_until_ready(jnp.asarray(o))
         return {"seconds": time.perf_counter() - t0, "programs": len(outs)}
 
+    def warmup_serving(self, ks: Sequence[int], min_bucket: int,
+                       max_batch: int, **search_params) -> dict:
+        """Serving-shaped :meth:`warmup`: pre-trace every (k, Q-bucket)
+        program a bucket-aware micro-batcher can dispatch — the full
+        power-of-two ladder from ``min_bucket`` to ``max_batch``
+        (``index.base.serving_buckets``), not just the buckets one request
+        list happens to produce.  After this, a runtime coalescing batches
+        of any size ≤ ``max_batch`` adds zero new search traces (the
+        zero-per-request-compilation invariant the serving runtime
+        asserts)."""
+        from ..index.base import serving_buckets
+        return self.warmup(ks, serving_buckets(min_bucket, max_batch),
+                           **search_params)
+
     # -- reporting --------------------------------------------------------------
     def stats(self) -> EngineStats:
         qkeys = [k for k in self.table.closure_sizes if k != EMPTY_KEY]

@@ -626,6 +626,63 @@ class StreamingEngine:
             jax.block_until_ready(jnp.asarray(o))
         return {"seconds": time.perf_counter() - t0, "programs": len(outs)}
 
+    def warmup_serving(self, ks: Sequence[int], min_bucket: int,
+                       max_batch: int, *, delta_rows_hint: int | None = None,
+                       **search_params) -> dict:
+        """Serving-shaped warmup with mutations in-flight: the full
+        power-of-two Q-bucket ladder a micro-batcher can emit
+        (``index.base.serving_buckets``), PLUS — on arena-native backends —
+        the delta-scan program for every capacity tier the delta can grow
+        through before the fill trigger compacts it.  The delta scan is
+        keyed on its capacity tier (``delta_topk`` traces per (k, Q-bucket,
+        capacity)), so without this a mid-serve insert that doubles the
+        delta would pay a fresh trace on the very next search — the one
+        latency spike warmup exists to remove.
+
+        ``delta_rows_hint``: expected delta occupancy before the next
+        flush; defaults to the ``max_delta_fraction`` trigger point (the
+        most the delta can hold), or just the current tier when the
+        trigger is disabled."""
+        from ..index.base import DeltaArena, pow2_bucket, serving_buckets
+
+        buckets = serving_buckets(min_bucket, max_batch)
+        out = self.warmup(ks, buckets, **search_params)
+        if not self.lazy:
+            return out
+        import jax
+        import jax.numpy as jnp
+
+        t0 = time.perf_counter()
+        eng = self.base
+        if delta_rows_hint is None:
+            delta_rows_hint = (
+                int(self.max_delta_fraction * max(1, len(eng.label_sets)))
+                if self.max_delta_fraction is not None else 0)
+        D = eng.vectors.shape[1]
+        W = eng.label_words.shape[1]
+        cap = self.delta.capacity
+        top = pow2_bucket(max(delta_rows_hint, cap))
+        outs: list[object] = []
+        c = cap * 2
+        while c <= top:
+            dummy = DeltaArena.empty(D, W, c, storage=eng.storage)
+            for k in ks:
+                for b in buckets:
+                    qz = np.zeros((b, D), np.float32)
+                    lz = np.zeros((b, W), np.int32)
+                    dvals, _ = _kernel_ops.delta_topk(
+                        qz, lz, dummy.vectors, dummy.label_words,
+                        dummy.norms, dummy.tombstones, dummy.count, k=k,
+                        metric=eng.metric, backend=eng._seg_backend,
+                        **dummy.tier_kwargs())
+                    outs.append(dvals)
+            c *= 2
+        for o in outs:
+            jax.block_until_ready(jnp.asarray(o))
+        out["seconds"] += time.perf_counter() - t0
+        out["programs"] += len(outs)
+        return out
+
     # -- reporting ------------------------------------------------------------
     def stats(self):
         """Base-engine stats with the streaming surface filled in

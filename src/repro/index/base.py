@@ -588,6 +588,22 @@ def pow2_bucket(g: int, min_bucket: int = 1) -> int:
     return 1 << (max(g, min_bucket, 1) - 1).bit_length()
 
 
+def serving_buckets(min_bucket: int, max_batch: int) -> list[int]:
+    """The power-of-two Q-bucket ladder a bucket-aware micro-batcher can
+    emit: every bucket from the executor's ``min_bucket`` floor up to
+    ``pow2_bucket(max_batch)`` inclusive.  The single home of the ladder —
+    warmup (``LabelHybridEngine.warmup_serving``) and the serving runtime's
+    micro-batcher both enumerate it, so every batch the runtime coalesces
+    lands on a pre-traced (k, Q-bucket) program by construction."""
+    b = pow2_bucket(min_bucket)
+    top = pow2_bucket(max(max_batch, b))
+    ladder = []
+    while b <= top:
+        ladder.append(b)
+        b *= 2
+    return ladder
+
+
 def dispatch_padded(search_padded, queries, query_label_words, k,
                     min_bucket: int = 1, **search_params):
     """Zero-pad a raw group to its power-of-two bucket and dispatch.

@@ -33,13 +33,20 @@ from .. import arch as A
 
 @dataclasses.dataclass
 class Request:
-    prompt: np.ndarray                    # [S] int32
+    prompt: np.ndarray                    # [S] int32 — NEVER mutated by serving
     max_new: int = 16
     label_set: tuple[int, ...] = ()
     rid: int = -1
+    # serving-runtime metadata (repro.serve.runtime)
+    tenant: str = "default"
+    deadline: float | None = None         # absolute clock() seconds, or None
     # filled by the engine
     generated: list[int] = dataclasses.field(default_factory=list)
     neighbors: np.ndarray | None = None
+    # decode input built per serve attempt (retrieved context pseudo-tokens
+    # + prompt); kept separate from ``prompt`` so re-serving the same
+    # Request — the runtime's retry path — never compounds stale context
+    decode_input: np.ndarray | None = None
 
 
 class BatchedDecoder:
@@ -66,6 +73,14 @@ class BatchedDecoder:
         self.last_token = np.zeros(batch_slots, np.int32)
         self.live = np.zeros(batch_slots, bool)
         self.slot_req: list[Request | None] = [None] * batch_slots
+        # requests whose finish condition was already met at admission
+        # (max_new == 1: the prefill argmax IS the single generated token);
+        # they never occupy a slot and are drained by the next step()
+        self._admit_done: list[Request] = []
+
+    @property
+    def free_slots(self) -> int:
+        return int((~self.live).sum())
 
     # -- slot management -------------------------------------------------------
     def _splice(self, cache_b, slot: int):
@@ -84,20 +99,33 @@ class BatchedDecoder:
         return jax.tree.map(one, self.cache, cache_b)
 
     def admit(self, req: Request) -> bool:
-        """Prefill ``req`` into a free slot.  False if engine is full."""
+        """Prefill ``req`` into a free slot.  False if engine is full.
+
+        The finish condition is checked AT admission: the prefill argmax is
+        generated token #1, so a ``max_new == 1`` request is complete right
+        here — it never occupies a slot (immediate reuse) and surfaces from
+        the next :meth:`step` alongside slot finishers.  ``generated`` is
+        reset first so re-serving the same Request (the runtime's retry
+        path) yields exactly ``max_new`` tokens, not an accumulation.
+        """
         free = np.flatnonzero(~self.live)
         if free.size == 0:
             return False
         slot = int(free[0])
-        S = req.prompt.shape[0]
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        req.generated = []
+        inp = req.decode_input if req.decode_input is not None else req.prompt
+        S = inp.shape[0]
+        tokens = jnp.asarray(inp, jnp.int32)[None]
         positions = jnp.arange(S, dtype=jnp.int32)[None]
         logits, cache_b = self._prefill1(self.params,
                                          {"tokens": tokens,
                                           "positions": positions})
-        self.cache = self._splice(cache_b, slot)
         tok = int(jnp.argmax(logits[0]))
         req.generated.append(tok)
+        if len(req.generated) >= req.max_new or S + 1 >= self.max_len:
+            self._admit_done.append(req)
+            return True
+        self.cache = self._splice(cache_b, slot)
         self.positions[slot] = S
         self.last_token[slot] = tok
         self.live[slot] = True
@@ -105,14 +133,16 @@ class BatchedDecoder:
         return True
 
     def step(self) -> list[Request]:
-        """One decode step for all live slots; returns finished requests."""
+        """One decode step for all live slots; returns finished requests
+        (including any that finished at admission since the last step)."""
         if not self.live.any():
-            return []
+            done, self._admit_done = self._admit_done, []
+            return done
         batch = {"token": jnp.asarray(self.last_token),
                  "position": jnp.asarray(self.positions)}
         logits, self.cache = self._decode(self.params, self.cache, batch)
         next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        done: list[Request] = []
+        done, self._admit_done = self._admit_done, []
         for slot in np.flatnonzero(self.live):
             req = self.slot_req[slot]
             req.generated.append(int(next_tok[slot]))
@@ -130,7 +160,7 @@ class BatchedDecoder:
         """Serve a request list to completion (admission + decode loop)."""
         pending = list(requests)[::-1]
         finished: list[Request] = []
-        while pending or self.live.any():
+        while pending or self.live.any() or self._admit_done:
             while pending and self.admit(pending[-1]):
                 pending.pop()
             finished.extend(self.step())
@@ -152,10 +182,14 @@ class RetrievalAugmentedEngine:
         # collapses the small-group tail onto one compiled (index, k,
         # bucket) program per backend instead of one per {1, 2, 4}
         self.min_bucket = min_bucket
+        # the default embedder needs the real prompt lengths to mask its
+        # mean (pad positions must not leak into the query embedding);
+        # custom embed_fns keep the plain prompts-only signature
+        self._embed_default = embed_fn is None
         self.embed_fn = embed_fn or self._default_embed
         spec = decoder.spec
         self._hidden = jax.jit(
-            lambda p, t, pos: self._mean_hidden(p, t, pos, spec))
+            lambda p, t, pos, ln: self._mean_hidden(p, t, pos, ln, spec))
         # pre-trace the retrieval dispatch tables so the first request
         # batch doesn't pay tracing + XLA compilation (the engine's cold
         # path; see LabelHybridEngine.warmup and BENCH_exp9.json).  Warm
@@ -163,63 +197,111 @@ class RetrievalAugmentedEngine:
         # the executor's min_bucket floor up to the decoder's slot count
         # (the natural request-batch size) — not just the floor
         if warmup:
-            from ..index.base import pow2_bucket
-            b = pow2_bucket(min_bucket)
-            top = pow2_bucket(max(min_bucket, decoder.B))
-            buckets = []
-            while b <= top:
-                buckets.append(b)
-                b *= 2
-            eli_engine.warmup([k], buckets)
+            self.warmup_serving()
+
+    def warmup_serving(self, max_batch: int | None = None) -> dict:
+        """Pre-trace every retrieval program a serve()/runtime micro-batch
+        can dispatch: Q-buckets from the ``min_bucket`` floor up to
+        ``max_batch`` (default: the decoder's slot count — the natural
+        request-batch size; the runtime passes its micro-batch cap).  After
+        this returns, serving is zero-per-request-compilation on the
+        retrieval path (the invariant the runtime's stats assert)."""
+        return self.eli.warmup_serving(
+            [self.k], self.min_bucket,
+            max_batch if max_batch is not None else self.decoder.B)
 
     @staticmethod
-    def _mean_hidden(params, tokens, positions, spec):
+    def _mean_hidden(params, tokens, positions, lengths, spec):
         from ..models import hybrid as hy
         from ..models import transformer as tf
         if spec.family == "transformer":
             h, _ = tf.forward(params, tokens, positions, spec.cfg)
         else:
             h = hy.forward(params, tokens, positions, spec.cfg)
-        return jnp.mean(h.astype(jnp.float32), axis=1)
+        h = h.astype(jnp.float32)
+        # masked mean over REAL token positions only: both families are
+        # causal, so h[:, :len] is independent of the zero-padding behind
+        # it, and masking makes the embedding batch-independent (a short
+        # prompt's embedding must not depend on the longest prompt it
+        # happens to be batched with)
+        S = h.shape[1]
+        mask = (jnp.arange(S, dtype=jnp.int32)[None, :]
+                < lengths[:, None]).astype(jnp.float32)
+        return (jnp.sum(h * mask[:, :, None], axis=1)
+                / jnp.maximum(lengths[:, None], 1).astype(jnp.float32))
 
-    def _default_embed(self, prompts: np.ndarray) -> np.ndarray:
-        """Mean final hidden state of the served model = query embedding."""
+    def _default_embed(self, prompts: np.ndarray,
+                       lengths: np.ndarray | None = None) -> np.ndarray:
+        """Masked mean final hidden state of the served model = query
+        embedding.  ``lengths`` [B] are the real token counts per row;
+        ``None`` means every row is full-length (no padding)."""
         S = prompts.shape[1]
+        if lengths is None:
+            lengths = np.full(prompts.shape[0], S, np.int32)
         pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
                                prompts.shape)
-        h = self._hidden(self.decoder.params, jnp.asarray(prompts), pos)
+        h = self._hidden(self.decoder.params, jnp.asarray(prompts), pos,
+                         jnp.asarray(lengths, jnp.int32))
         h = np.asarray(h)
         d = self.eli.vectors.shape[1]
         if h.shape[1] < d:
             h = np.pad(h, [(0, 0), (0, d - h.shape[1])])
         return np.ascontiguousarray(h[:, :d], np.float32)
 
-    def serve(self, requests: Sequence[Request]) -> list[Request]:
-        # 1. retrieval (one ELI sub-index per request, paper Exp-3) through
-        #    the batched executor: the whole request batch is routed in one
-        #    vectorized pass; on arena-native backends every touched
-        #    sub-index is a segment of ONE shared arena and the batch costs
-        #    O(#span tiers) segmented-kernel launches total, on
-        #    private-storage backends one jit-cached search per touched
-        #    index — never one per request (all registered backends
-        #    implement the bucketed search_padded contract)
-        maxS = max(r.prompt.shape[0] for r in requests)
-        prompts = np.stack([np.pad(r.prompt, (0, maxS - r.prompt.shape[0]))
-                            for r in requests])
-        emb = self.embed_fn(prompts)
-        dists, ids = self.eli.search_batched(
+    # -- serving stages (driven by serve() below and by runtime.ServingRuntime)
+    def embed_requests(self, requests: Sequence[Request]) -> np.ndarray:
+        """Stage 1: query embeddings for a request batch.  Both axes are
+        zero-padded to power-of-two buckets — sequence length AND batch
+        (floored at ``min_bucket``, the retrieval executor's own ladder) —
+        so the embed program jit-caches across jittery micro-batch shapes
+        instead of retracing per (batch, length) combination.  Harmless
+        because the default embedder masks its mean to the real lengths
+        (pad rows/positions never leak into an embedding)."""
+        from ..index.base import pow2_bucket
+        B = len(requests)
+        lengths = np.zeros(pow2_bucket(B, self.min_bucket), np.int32)
+        lengths[:B] = [r.prompt.shape[0] for r in requests]
+        maxS = pow2_bucket(int(lengths.max()))
+        prompts = np.zeros((lengths.shape[0], maxS), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i, :r.prompt.shape[0]] = r.prompt
+        emb = (self._default_embed(prompts, lengths) if self._embed_default
+               else self.embed_fn(prompts))
+        return emb[:B]
+
+    def retrieve(self, requests: Sequence[Request]) -> None:
+        """Stage 2: label-filtered AKNN through the batched executor (one
+        ELI sub-index per request, paper Exp-3): the whole batch is routed
+        in one vectorized pass; on arena-native backends every touched
+        sub-index is a segment of ONE shared arena and the batch costs
+        O(#span tiers) segmented-kernel launches total, on private-storage
+        backends one jit-cached search per touched index — never one per
+        request.  Fills ``r.neighbors`` and builds ``r.decode_input`` =
+        [context pseudo-tokens | prompt]; ``r.prompt`` itself is immutable
+        serving state, so re-serving (the runtime's retry path) rebuilds
+        the decode input from scratch instead of compounding stale
+        context."""
+        emb = self.embed_requests(requests)
+        _, ids = self.eli.search_batched(
             emb, [r.label_set for r in requests], self.k,
             min_bucket=self.min_bucket)
-        # 2. splice neighbor ids into the prompt as context pseudo-tokens
-        #    (sentinel = empty slot; on a streaming engine it is the stream
-        #    cardinality, which grows with inserts — ask the engine)
+        # splice neighbor ids as context pseudo-tokens (sentinel = empty
+        # slot: both LabelHybridEngine and StreamingEngine expose it —
+        # on a streaming engine it is the stream cardinality, which grows
+        # with inserts, and is NOT len(label_sets) in general)
         vocab = self.decoder.vocab
-        sentinel = getattr(self.eli, "sentinel", len(self.eli.label_sets))
+        sentinel = self.eli.sentinel
         for i, r in enumerate(requests):
             r.neighbors = ids[i]
             ctx = (ids[i][ids[i] < sentinel] % vocab).astype(np.int32)
-            r.prompt = np.concatenate([ctx, r.prompt]).astype(np.int32)
-        # 3. generate
+            r.decode_input = np.concatenate([ctx, r.prompt]).astype(np.int32)
+
+    def serve(self, requests: Sequence[Request]) -> list[Request]:
+        """Synchronous convenience: retrieve, then generate to completion.
+        The continuous-batching runtime (``repro.serve.runtime``) drives
+        the same stages — :meth:`retrieve` then per-slot admission — but
+        interleaved with decode steps instead of run-to-completion."""
+        self.retrieve(requests)
         return self.decoder.run(requests)
 
     # -- streaming mutations (DESIGN.md §3.6) ---------------------------------

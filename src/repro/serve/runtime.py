@@ -1,0 +1,394 @@
+"""Continuous-batching async serving runtime (ROADMAP: serving item).
+
+``serve/engine.py`` serves a *fixed request list* synchronously; real
+traffic is an open-loop stream.  :class:`ServingRuntime` drives the same
+serving stages — embed → retrieve → admit → decode step — as a
+continuous-batching event loop:
+
+  * **admission queue**: bounded total depth with one FIFO per tenant;
+    a full queue rejects with a typed :class:`ServeResult` instead of
+    blocking the stream (open-loop clients don't wait);
+  * **per-tenant fairness**: micro-batches are formed round-robin, one
+    request per tenant per turn, so a flooding tenant cannot starve a
+    light one (its surplus waits, the light tenant's requests ride every
+    batch);
+  * **bucket-aware micro-batcher**: arrived requests coalesce into the
+    already-warmed power-of-two (k, Q-bucket) retrieval programs —
+    demand-driven flush (a free decode slot, or batch fill, or
+    latency-budget expiry while every slot is busy; see
+    ``_should_flush``).  The bucket ladder is
+    ``index.base.serving_buckets(min_bucket, max_coalesce)``, the exact
+    set ``warmup_serving`` pre-traces, so a post-warmup runtime never
+    compiles on the request path (the flashinfer idiom: plan every
+    wrapper at startup, serve with zero per-request compilation —
+    ``engine.warmup`` is the planning half);
+  * **interleaved execution**: each tick dispatches the next
+    micro-batch's retrieval *between* decode steps of the current
+    residents and admits retrieved prefills into freed slots every step
+    — the decoder is never drained to make room for retrieval (the
+    head-of-line blocking that dominates the synchronous baseline's p99,
+    benchmarks/exp11_serving.py);
+  * **graceful degradation**: queue-full submissions return
+    ``REJECTED``; per-request deadlines are checked at every stage and
+    surfaced as ``TIMEOUT`` results (never silently dropped).
+
+The retrieval engine may be a ``core.stream.StreamingEngine`` —
+mutations land between ticks via :meth:`ServingRuntime.insert` /
+``delete`` / ``flush``, and ``StreamingEngine.warmup_serving``
+pre-traces the delta capacity tiers inserts can grow through, so
+mutations in-flight stay retrace-free too.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from collections import deque
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..kernels import ops as _kernel_ops
+from .engine import Request, RetrievalAugmentedEngine
+
+
+class ServeStatus(enum.Enum):
+    PENDING = "pending"
+    OK = "ok"
+    REJECTED = "rejected_queue_full"
+    TIMEOUT = "deadline_timeout"
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Typed per-request outcome — the runtime's unit of accounting.
+
+    ``submit`` returns it immediately (status ``PENDING``, or ``REJECTED``
+    when the admission queue is full) and mutates it in place as the
+    request moves through the stages; terminal results are also appended
+    to ``ServingRuntime.completed``."""
+
+    request: Request
+    status: ServeStatus
+    t_submit: float  # clock() seconds at admission
+    t_finish: float | None = None  # clock() seconds at terminal state
+
+    @property
+    def latency(self) -> float | None:
+        return None if self.t_finish is None else self.t_finish - self.t_submit
+
+
+@dataclasses.dataclass
+class RuntimeStats:
+    """``retrieval_stats``-style reporting surface for the runtime."""
+
+    submitted: int
+    completed_ok: int
+    rejected: int
+    deadline_misses: int
+    decode_steps: int
+    retrieval_batches: int
+    batch_size_hist: dict[int, int]  # micro-batch size -> count
+    queue_depth_max: int
+    queue_depth_mean: float
+    # zero-per-request-compilation invariant: new traces of the segmented
+    # retrieval program since the post-warmup baseline (0 after a
+    # warmed-up runtime has served any stream whose batches fit the
+    # ladder — pinned by tests/test_serve_runtime.py)
+    new_segmented_traces: int
+
+
+class ServingRuntime:
+    """Continuous-batching event loop around a
+    :class:`~repro.serve.engine.RetrievalAugmentedEngine`.
+
+    Single-threaded and explicitly clocked: ``clock`` is any monotonic
+    ``() -> seconds`` callable — ``time.monotonic`` in production,
+    a hand-advanced counter in tests (every scheduling decision becomes
+    deterministic).  Drive it with :meth:`submit` + :meth:`tick`, or the
+    :meth:`run_open_loop` / :meth:`run_until_idle` conveniences.
+    """
+
+    def __init__(
+        self,
+        rag: RetrievalAugmentedEngine,
+        *,
+        queue_depth: int = 64,
+        max_coalesce: int | None = None,
+        latency_budget_s: float = 0.005,
+        clock: Callable[[], float] = time.monotonic,
+        warmup: bool = True,
+        delta_rows_hint: int | None = None,
+    ):
+        self.rag = rag
+        self.decoder = rag.decoder
+        self.queue_depth = queue_depth
+        self.max_coalesce = max_coalesce or max(self.decoder.B, rag.min_bucket)
+        self.latency_budget_s = latency_budget_s
+        self.clock = clock
+        if warmup:
+            eli = rag.eli
+            if hasattr(eli, "warmup_serving") and hasattr(eli, "delta"):
+                # streaming engine: also pre-trace the delta capacity tiers
+                eli.warmup_serving(
+                    [rag.k],
+                    rag.min_bucket,
+                    self.max_coalesce,
+                    delta_rows_hint=delta_rows_hint,
+                )
+            else:
+                rag.warmup_serving(self.max_coalesce)
+        # the zero-new-trace baseline is recorded AFTER warmup: every
+        # trace the stream adds past this point is a per-request
+        # compilation the runtime promised not to pay
+        self._trace_base = _kernel_ops._segmented_topk._cache_size()
+
+        self._tenants: dict[str, deque[ServeResult]] = {}
+        self._rr: deque[str] = deque()  # round-robin tenant order
+        self._queued_total = 0
+        self._ready: deque[ServeResult] = deque()  # retrieved, need slot
+        self._by_req: dict[int, ServeResult] = {}  # id(Request) -> result
+        self.completed: list[ServeResult] = []
+        # counters
+        self._submitted = 0
+        self._rejected = 0
+        self._deadline_misses = 0
+        self._decode_steps = 0
+        self._batch_hist: dict[int, int] = {}
+        self._depth_samples: list[int] = []
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, req: Request, *, at: float | None = None) -> ServeResult:
+        """Admit ``req`` (tenant/deadline ride on the Request).  Returns a
+        typed result immediately: ``PENDING`` on admission, ``REJECTED``
+        when the bounded queue is full.  ``at`` overrides the submission
+        timestamp (open-loop drivers pass the *scheduled* arrival so
+        latency accounting starts at arrival, not at the loop's
+        convenience)."""
+        now = self.clock() if at is None else at
+        res = ServeResult(request=req, status=ServeStatus.PENDING, t_submit=now)
+        self._submitted += 1
+        if self._queued_total >= self.queue_depth:
+            res.status = ServeStatus.REJECTED
+            res.t_finish = now
+            self._rejected += 1
+            self.completed.append(res)
+            return res
+        q = self._tenants.get(req.tenant)
+        if q is None:
+            q = self._tenants[req.tenant] = deque()
+            self._rr.append(req.tenant)
+        q.append(res)
+        self._queued_total += 1
+        self._by_req[id(req)] = res
+        return res
+
+    # -- stage plumbing ------------------------------------------------------
+    def _expire(self, now: float) -> None:
+        """Surface deadline misses in the queued and ready stages."""
+        for q in self._tenants.values():
+            kept = deque(r for r in q if not self._miss(r, now))
+            self._queued_total -= len(q) - len(kept)
+            q.clear()
+            q.extend(kept)
+        self._ready = deque(r for r in self._ready if not self._miss(r, now))
+
+    def _miss(self, res: ServeResult, now: float) -> bool:
+        dl = res.request.deadline
+        if dl is None or now <= dl:
+            return False
+        res.status = ServeStatus.TIMEOUT
+        res.t_finish = now
+        self._deadline_misses += 1
+        self.completed.append(res)
+        self._by_req.pop(id(res.request), None)
+        return True
+
+    def _oldest_wait(self, now: float) -> float:
+        heads = [q[0].t_submit for q in self._tenants.values() if q]
+        return now - min(heads) if heads else 0.0
+
+    def _should_flush(self, now: float) -> bool:
+        """Micro-batch formation policy.  Retrieval is synchronous inside
+        the tick, so dispatching it buys nothing until the batch can be
+        consumed — flushing early just fragments the queue into
+        fixed-cost retrieval calls (the mid-load pathology: one ~fixed-ms
+        embed per 1-2 requests while a synchronous server amortizes over
+        its whole backlog).  Hence demand-driven coalescing:
+
+          * never while a retrieved batch is still waiting for slots
+            (one unconsumed micro-batch in flight, maximal coalescing
+            behind it);
+          * bucket fill: the queue alone fills a micro-batch;
+          * demand: a decode slot is free right now — serve immediately,
+            the latency budget must never idle an empty decoder;
+          * budget expiry: slots are all busy, but the oldest queued
+            request has waited long enough — pre-position its batch so
+            admission happens the moment a slot frees."""
+        if self._queued_total == 0 or self._ready:
+            return False
+        if self._queued_total >= self.max_coalesce:
+            return True
+        if self.decoder.free_slots > 0:
+            return True
+        return self._oldest_wait(now) >= self.latency_budget_s
+
+    def _form_microbatch(self) -> list[ServeResult]:
+        """Round-robin one request per tenant per turn until the batch
+        fills or the queues drain — the fairness discipline."""
+        batch: list[ServeResult] = []
+        while len(batch) < self.max_coalesce and self._queued_total:
+            for _ in range(len(self._rr)):
+                t = self._rr[0]
+                self._rr.rotate(-1)
+                q = self._tenants[t]
+                if q:
+                    batch.append(q.popleft())
+                    self._queued_total -= 1
+                    break
+            else:
+                break
+        return batch
+
+    def _admit_ready(self) -> int:
+        admitted = 0
+        while self._ready and self.decoder.admit(self._ready[0].request):
+            self._ready.popleft()
+            admitted += 1
+        return admitted
+
+    # -- the event loop ------------------------------------------------------
+    def tick(self, now: float | None = None) -> int:
+        """One scheduling round: expire deadlines, admit retrieved
+        prefills into free slots, dispatch the next micro-batch's
+        retrieval if flush-ready, admit again, advance every live decode
+        slot one step.  Returns the number of events (admissions +
+        retrievals + finishes + live slots stepped) — 0 means the tick
+        was pure waiting and the caller may sleep."""
+        now = self.clock() if now is None else now
+        events = 0
+        self._expire(now)
+        events += self._admit_ready()
+        if self._should_flush(now):
+            batch = self._form_microbatch()
+            if batch:
+                self.rag.retrieve([r.request for r in batch])
+                self._ready.extend(batch)
+                self._batch_hist[len(batch)] = self._batch_hist.get(len(batch), 0) + 1
+                events += 1
+                events += self._admit_ready()
+        live = int(self.decoder.live.sum())
+        finished = self.decoder.step()
+        if live or finished:
+            self._decode_steps += 1
+        events += live
+        t_done = self.clock()
+        for req in finished:
+            res = self._by_req.pop(id(req), None)
+            if res is None:
+                continue  # request not owned by runtime
+            res.t_finish = t_done
+            # a finish past the deadline is surfaced, not silently OK'd
+            # (the generated tokens stay attached for the caller to keep)
+            if req.deadline is not None and t_done > req.deadline:
+                res.status = ServeStatus.TIMEOUT
+                self._deadline_misses += 1
+            else:
+                res.status = ServeStatus.OK
+            self.completed.append(res)
+            events += 1
+        self._depth_samples.append(self._queued_total)
+        return events
+
+    @property
+    def idle(self) -> bool:
+        return (
+            self._queued_total == 0
+            and not self._ready
+            and not self.decoder.live.any()
+            and not self.decoder._admit_done
+        )
+
+    def run_until_idle(
+        self, *, max_seconds: float = 120.0, sleep_s: float = 1e-4
+    ) -> list[ServeResult]:
+        """Tick until every submitted request reaches a terminal state."""
+        t0 = self.clock()
+        while not self.idle:
+            if self.tick() == 0:
+                time.sleep(sleep_s)
+            if self.clock() - t0 > max_seconds:
+                raise TimeoutError(f"runtime not idle after {max_seconds}s")
+        return self.completed
+
+    def run_open_loop(
+        self,
+        arrivals: Sequence[tuple[float, Request]],
+        *,
+        max_seconds: float = 300.0,
+        sleep_s: float = 1e-4,
+    ) -> list[ServeResult]:
+        """Serve an open-loop arrival schedule ``[(t_offset_s, request)]``
+        (offsets from loop start, ascending).  Requests are submitted when
+        the wall clock passes their offset, with latency accounted from
+        the *scheduled* arrival — the open-loop discipline under which
+        queueing delay shows up in p99 instead of silently stretching the
+        arrival process."""
+        arrivals = sorted(arrivals, key=lambda a: a[0])
+        t0 = self.clock()
+        i = 0
+        while i < len(arrivals) or not self.idle:
+            now = self.clock() - t0
+            while i < len(arrivals) and arrivals[i][0] <= now:
+                self.submit(arrivals[i][1], at=t0 + arrivals[i][0])
+                i += 1
+            if self.tick() == 0:
+                time.sleep(sleep_s)
+            if self.clock() - t0 > max_seconds:
+                raise TimeoutError(
+                    f"open-loop run exceeded {max_seconds}s "
+                    f"({i}/{len(arrivals)} submitted)"
+                )
+        return self.completed
+
+    # -- streaming mutations (in-flight; DESIGN.md §3.6) ---------------------
+    def insert(
+        self, vectors: np.ndarray, label_sets: Sequence[tuple[int, ...]]
+    ) -> np.ndarray:
+        return self.rag.insert(vectors, label_sets)
+
+    def delete(self, ids) -> int:
+        return self.rag.delete(ids)
+
+    def flush(self) -> dict:
+        return self.rag.flush()
+
+    # -- reporting -----------------------------------------------------------
+    def stats(self) -> RuntimeStats:
+        depths = self._depth_samples or [0]
+        completed_ok = sum(1 for r in self.completed if r.status is ServeStatus.OK)
+        traces = _kernel_ops._segmented_topk._cache_size() - self._trace_base
+        return RuntimeStats(
+            submitted=self._submitted,
+            completed_ok=completed_ok,
+            rejected=self._rejected,
+            deadline_misses=self._deadline_misses,
+            decode_steps=self._decode_steps,
+            retrieval_batches=sum(self._batch_hist.values()),
+            batch_size_hist=dict(sorted(self._batch_hist.items())),
+            queue_depth_max=max(depths),
+            queue_depth_mean=float(np.mean(depths)),
+            new_segmented_traces=traces,
+        )
+
+    def assert_no_new_traces(self) -> None:
+        """Raise unless the stream stayed on pre-traced programs — the
+        zero-per-request-compilation invariant, checked after warmup."""
+        st = self.stats()
+        if st.new_segmented_traces:
+            raise AssertionError(
+                f"{st.new_segmented_traces} segmented-search program(s) "
+                "were traced on the request path; warmup_serving must "
+                "cover every bucket the micro-batcher can emit"
+            )

@@ -1,5 +1,5 @@
 """Serving engine: slot batching semantics + decode==prefill consistency
-+ ELI RAG integration."""
++ ELI RAG integration + continuous-batching runtime coverage."""
 
 import jax
 import numpy as np
@@ -10,7 +10,8 @@ from repro.configs import reduced_arch
 from repro.core.engine import LabelHybridEngine
 from repro.data.pipeline import VectorLabelDataset
 from repro.models.common import init_params
-from repro.serve import BatchedDecoder, Request, RetrievalAugmentedEngine
+from repro.serve import (BatchedDecoder, Request, RetrievalAugmentedEngine,
+                         ServeStatus, ServingRuntime)
 
 
 @pytest.fixture(scope="module", params=["mamba2_130m", "gemma2_9b"])
@@ -74,3 +75,216 @@ def test_rag_engine_routes_and_generates():
             if nid < n:
                 assert set(r.label_set) <= set(label_sets[nid]), \
                     (r.label_set, label_sets[nid])
+
+
+# ---------------------------------------------------------------------------
+# serving-layer regression tests (ISSUE 7 bugfixes) + runtime coverage
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def rag_fix():
+    spec = reduced_arch("mamba2_130m")
+    params = init_params(jax.random.PRNGKey(0), A.param_specs(spec))
+    dec = BatchedDecoder(spec, params, batch_slots=3, max_len=64)
+    ds = VectorLabelDataset(n=1500, dim=16, n_labels=8, seed=3)
+    vectors, label_sets = ds.generate()
+    eli = LabelHybridEngine.build(vectors, label_sets, mode="eis", c=0.2,
+                                  backend="flat")
+    rag = RetrievalAugmentedEngine(dec, eli, k=3, min_bucket=4)
+    return {"spec": spec, "dec": dec, "rag": rag, "label_sets": label_sets}
+
+
+def _reqs(fix, n, max_new=3, lens=(5, 9, 7, 6, 11), label_sets=None,
+          seed=7, **kw):
+    rng = np.random.default_rng(seed)
+    vocab = fix["spec"].cfg.vocab
+    out = []
+    for i in range(n):
+        ls = () if label_sets is None else label_sets[i % len(label_sets)]
+        out.append(Request(
+            prompt=rng.integers(0, vocab, size=lens[i % len(lens)]
+                                ).astype(np.int32),
+            max_new=max_new, label_set=ls, rid=i, **kw))
+    return out
+
+
+def test_embed_batch_independence(rag_fix):
+    """Bugfix 1: a prompt's query embedding is independent of the other
+    prompts it is batched with — the mean is masked to real token
+    positions, so zero-padding up to the batch max length contributes
+    nothing."""
+    rag = rag_fix["rag"]
+    short, long_ = _reqs(rag_fix, 2, lens=(5, 21))
+    solo = rag.embed_requests([short])
+    ragged = rag.embed_requests([short, long_])
+    # identical up to the documented batch-shape ULP drift of XLA matmul
+    # tiling (DESIGN.md §3.4) — the pre-fix mean over pad positions was
+    # wrong by whole hidden-state magnitudes, not ULPs
+    np.testing.assert_allclose(ragged[0], solo[0], rtol=1e-5, atol=1e-6)
+
+
+def test_max_new_1_exact_and_slot_reuse(rag_fix):
+    """Bugfix 2: a max_new=1 request finishes AT admission — exactly one
+    generated token (the prefill argmax), no decode slot occupied, and
+    the slot capacity is immediately available to the next request."""
+    dec = rag_fix["dec"]
+    assert not dec.live.any()
+    [r1] = _reqs(rag_fix, 1, max_new=1)
+    assert dec.admit(r1)
+    assert len(r1.generated) == 1
+    assert not dec.live.any()            # never took a slot
+    # immediate reuse: a full slot count is admittable right now
+    more = _reqs(rag_fix, dec.B, max_new=2, seed=8)
+    assert all(dec.admit(r) for r in more)
+    done = []
+    while dec.live.any() or dec._admit_done:
+        done.extend(dec.step())
+    assert any(r is r1 for r in done)    # surfaced, not silently dropped
+    assert len(r1.generated) == 1
+    assert all(len(r.generated) == 2 for r in more)
+    # and through run(): a max_new=1-only workload terminates cleanly
+    [r2] = dec.run(_reqs(rag_fix, 1, max_new=1, seed=9))
+    assert len(r2.generated) == 1
+
+
+def test_reserve_idempotent(rag_fix):
+    """Bugfix 3: serve() never mutates r.prompt; re-serving the same
+    Request objects (the runtime's retry path) reproduces the identical
+    neighbors and generation instead of compounding context."""
+    rag = rag_fix["rag"]
+    reqs = _reqs(rag_fix, 3, label_sets=[(0,), (1, 2), ()])
+    originals = [r.prompt.copy() for r in reqs]
+    done1 = sorted(rag.serve(reqs), key=lambda r: r.rid)
+    first = [(list(r.generated), r.neighbors.copy(),
+              r.decode_input.copy()) for r in done1]
+    for r, p in zip(reqs, originals):
+        np.testing.assert_array_equal(r.prompt, p)
+    done2 = sorted(rag.serve(reqs), key=lambda r: r.rid)
+    for r, (gen, nb, di) in zip(done2, first):
+        assert list(r.generated) == gen
+        np.testing.assert_array_equal(r.neighbors, nb)
+        np.testing.assert_array_equal(r.decode_input, di)
+    for r, p in zip(reqs, originals):
+        np.testing.assert_array_equal(r.prompt, p)
+
+
+class _SentinelEli:
+    """Minimal retrieval engine whose label_sets list is NOT row-aligned
+    with the id space (like a StreamingEngine mid-stream): the old
+    len(label_sets) fallback would misclassify here."""
+    sentinel = 10
+    label_sets = [(0,)] * 3              # deliberately mis-sized
+    vectors = np.zeros((3, 16), np.float32)
+
+    def __init__(self, ids):
+        self._ids = ids
+
+    def search_batched(self, emb, qls, k, min_bucket=1):
+        d = np.zeros((len(qls), k), np.float32)
+        return d, np.asarray(self._ids, np.int32)
+
+
+def test_sentinel_from_engine_not_label_sets(rag_fix):
+    """Bugfix 4: serve asks the engine for its sentinel — ids in
+    [len(label_sets), sentinel) are REAL rows (a streaming delta), and
+    only id == sentinel marks an empty slot."""
+    dec = rag_fix["dec"]
+    # ids 7 and 9 are live delta rows (≥ len(label_sets) == 3 but <
+    # sentinel == 10); 10 is the genuine empty slot
+    fake = _SentinelEli([[7, 9, 10]])
+    rag = RetrievalAugmentedEngine(dec, fake, k=3)
+    [req] = _reqs(rag_fix, 1, max_new=2)
+    rag.retrieve([req])
+    vocab = dec.vocab
+    expect = np.array([7 % vocab, 9 % vocab], np.int32)
+    np.testing.assert_array_equal(req.decode_input[:2], expect)
+    assert req.decode_input.shape[0] == 2 + req.prompt.shape[0]
+
+
+# -- continuous-batching runtime ---------------------------------------------
+
+class _ManualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def test_runtime_queue_full_rejection(rag_fix):
+    rt = ServingRuntime(rag_fix["rag"], queue_depth=2, warmup=False,
+                        latency_budget_s=0.0, clock=_ManualClock())
+    reqs = _reqs(rag_fix, 3, max_new=2)
+    r0, r1, r2 = (rt.submit(r) for r in reqs)
+    assert r0.status is ServeStatus.PENDING
+    assert r1.status is ServeStatus.PENDING
+    assert r2.status is ServeStatus.REJECTED          # typed, immediate
+    assert r2.latency == 0.0
+    assert rt.stats().rejected == 1
+    while not rt.idle:
+        rt.tick()
+    assert r0.status is ServeStatus.OK
+    assert r1.status is ServeStatus.OK
+    assert len(r0.request.generated) == 2
+
+
+def test_runtime_deadline_timeout_surfaced(rag_fix):
+    clock = _ManualClock()
+    rt = ServingRuntime(rag_fix["rag"], latency_budget_s=10.0,
+                        warmup=False, clock=clock)
+    [req] = _reqs(rag_fix, 1, max_new=2, deadline=1.0)
+    res = rt.submit(req)
+    clock.advance(2.0)                   # deadline passes while queued
+    rt.tick()
+    assert res.status is ServeStatus.TIMEOUT
+    assert res.t_finish == 2.0
+    assert rt.stats().deadline_misses == 1
+    assert res in rt.completed           # surfaced, not dropped
+    assert rt.idle
+
+
+def test_runtime_two_tenant_fairness(rag_fix):
+    """A flooding tenant cannot starve a light one: micro-batches are
+    formed round-robin one-per-tenant, so the light tenant's requests
+    ride the earliest batches and finish long before the flood drains."""
+    rt = ServingRuntime(rag_fix["rag"], max_coalesce=4,
+                        latency_budget_s=0.0, warmup=False)
+    flood = _reqs(rag_fix, 12, max_new=2, tenant="flood", seed=10)
+    light = _reqs(rag_fix, 3, max_new=2, tenant="light", seed=11)
+    for r in flood:                      # the flood arrives FIRST
+        rt.submit(r)
+    for r in light:
+        rt.submit(r)
+    done = rt.run_until_idle()
+    assert len(done) == 15
+    order = {id(res.request): i for i, res in enumerate(done)}
+    light_ranks = [order[id(r)] for r in light]
+    assert max(light_ranks) < 9, light_ranks   # FIFO would rank them last
+
+
+def test_runtime_retrieval_parity_with_solo_serve(rag_fix):
+    """Batched-vs-one-at-a-time parity through the runtime path: the
+    neighbors a request retrieves inside a coalesced micro-batch are
+    bit-identical to serving it alone through the synchronous engine."""
+    rag = rag_fix["rag"]
+    label_sets = [(0,), (1, 2), (), (3,), (1,), (2,)]
+    # uniform prompt length: solo and coalesced embeds then run the SAME
+    # padded (batch, length) program, so parity is bitwise, not modulo
+    # the batch-shape ULP drift of XLA matmul tiling (DESIGN.md §3.4)
+    through_runtime = _reqs(rag_fix, 6, max_new=2, lens=(8,),
+                            label_sets=label_sets)
+    rt = ServingRuntime(rag, max_coalesce=4, latency_budget_s=0.0,
+                        warmup=False)
+    for r in through_runtime:
+        rt.submit(r)
+    done = rt.run_until_idle()
+    assert all(r.status is ServeStatus.OK for r in done)
+    assert rt.stats().retrieval_batches >= 2     # actually coalesced
+    solo = _reqs(rag_fix, 6, max_new=2, lens=(8,), label_sets=label_sets)
+    for rt_req, solo_req in zip(through_runtime, solo):
+        rag.serve([solo_req])
+        np.testing.assert_array_equal(rt_req.neighbors, solo_req.neighbors)
+        assert rt_req.generated == solo_req.generated

@@ -1,0 +1,122 @@
+"""Continuous-batching runtime: the zero-per-request-compilation pins.
+
+ISSUE 7 acceptance: after ``warmup_serving`` a runtime-served stream must
+trace ZERO new ``_segmented_topk`` programs — the micro-batcher only
+emits Q-buckets on the pre-traced power-of-two ladder
+(``index.base.serving_buckets``), and on a streaming engine the delta
+capacity tiers that inserts grow through are pre-traced too, so
+mutations in flight stay retrace-free.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import arch as A
+from repro.configs import reduced_arch
+from repro.core.engine import LabelHybridEngine
+from repro.core.stream import StreamingEngine
+from repro.data.pipeline import VectorLabelDataset
+from repro.index.base import serving_buckets
+from repro.kernels import ops
+from repro.models.common import init_params
+from repro.serve import (
+    BatchedDecoder,
+    Request,
+    RetrievalAugmentedEngine,
+    ServeStatus,
+    ServingRuntime,
+)
+
+
+@pytest.fixture(scope="module")
+def fix():
+    spec = reduced_arch("mamba2_130m")
+    params = init_params(jax.random.PRNGKey(0), A.param_specs(spec))
+    ds = VectorLabelDataset(n=1500, dim=16, n_labels=8, seed=3)
+    vectors, label_sets = ds.generate()
+    return {"spec": spec, "params": params, "x": vectors, "ls": label_sets}
+
+
+def _decoder(fix, slots=3):
+    return BatchedDecoder(fix["spec"], fix["params"], batch_slots=slots, max_len=64)
+
+
+def _reqs(fix, n, max_new=2, lens=(5, 9, 7, 6, 11), seed=7):
+    rng = np.random.default_rng(seed)
+    vocab = fix["spec"].cfg.vocab
+    ls_pool = [(0,), (1, 2), (), (3,), (1,)]
+    out = []
+    for i in range(n):
+        prompt = rng.integers(0, vocab, size=lens[i % len(lens)]).astype(np.int32)
+        ls = ls_pool[i % len(ls_pool)]
+        out.append(Request(prompt=prompt, max_new=max_new, label_set=ls, rid=i))
+    return out
+
+
+def _submit_and_drain(rt, fix, sizes, seed0=100):
+    """Serve bursts of varied sizes — every micro-batch size the
+    coalescer can emit, so each power-of-two Q-bucket on the ladder is
+    exercised."""
+    for j, n in enumerate(sizes):
+        for r in _reqs(fix, n, seed=seed0 + j):
+            rt.submit(r)
+        done = rt.run_until_idle()
+        assert all(r.status is ServeStatus.OK for r in done)
+
+
+def test_serving_buckets_ladder():
+    assert serving_buckets(4, 16) == [4, 8, 16]
+    assert serving_buckets(4, 9) == [4, 8, 16]  # rounds the top up
+    assert serving_buckets(8, 4) == [8]  # floor dominates
+    assert serving_buckets(3, 3) == [4]
+
+
+def test_runtime_zero_new_traces_static(fix):
+    """The pinned acceptance test: a post-warmup runtime serve with
+    varied micro-batch sizes compiles nothing on the request path."""
+    eli = LabelHybridEngine.build(
+        fix["x"], fix["ls"], mode="eis", c=0.2, backend="flat"
+    )
+    rag = RetrievalAugmentedEngine(_decoder(fix), eli, k=3, min_bucket=4)
+    rt = ServingRuntime(rag, max_coalesce=8, latency_budget_s=0.0, warmup=True)
+    # decode-side programs (prefill per decode_input length) are not part
+    # of the retrieval pin; trace them outside the measured window
+    rag.serve(_reqs(fix, 8, seed=99))
+    before = ops._segmented_topk._cache_size()
+    assert rt.stats().new_segmented_traces == 0
+    _submit_and_drain(rt, fix, sizes=(1, 3, 5, 8))
+    assert ops._segmented_topk._cache_size() == before
+    assert rt.stats().new_segmented_traces == 0
+    rt.assert_no_new_traces()
+    st = rt.stats()
+    assert st.completed_ok == 1 + 3 + 5 + 8
+    assert sum(st.batch_size_hist.values()) == st.retrieval_batches > 0
+
+
+def test_runtime_zero_new_traces_streaming_mutations_in_flight(fix):
+    """Mutations between ticks stay retrace-free: warmup_serving
+    pre-traces the delta-scan program for every capacity tier the delta
+    can grow through before the fill trigger, so an insert burst that
+    doubles the delta (256 -> 512) costs zero new segmented traces on
+    the very next micro-batch."""
+    se = StreamingEngine.build(fix["x"], fix["ls"], mode="eis", c=0.2, backend="flat")
+    assert se.lazy
+    rag = RetrievalAugmentedEngine(_decoder(fix), se, k=3, min_bucket=4)
+    rt = ServingRuntime(rag, max_coalesce=8, latency_budget_s=0.0, warmup=True)
+    rag.serve(_reqs(fix, 8, seed=98))  # decode-side programs
+    cap0 = se.delta.capacity
+    before = ops._segmented_topk._cache_size()
+
+    _submit_and_drain(rt, fix, sizes=(4,), seed0=200)
+    rng = np.random.default_rng(5)
+    ins = rng.standard_normal((cap0 + 44, 16)).astype(np.float32)
+    ls_ins = [fix["ls"][i % len(fix["ls"])] for i in range(len(ins))]
+    ids = rt.insert(ins, ls_ins)
+    assert se.delta.capacity == 2 * cap0  # grew through a tier
+    rt.delete(ids[:3])  # tombstones in flight too
+    _submit_and_drain(rt, fix, sizes=(3, 6), seed0=300)
+
+    assert ops._segmented_topk._cache_size() == before
+    rt.assert_no_new_traces()
+    assert rt.stats().new_segmented_traces == 0

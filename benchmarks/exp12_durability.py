@@ -1,0 +1,171 @@
+"""Exp-12 (ISSUE 8): what crash consistency costs, and what it buys.
+
+Three measurements land in ``BENCH_exp12.json``:
+
+  * ``insert_qps`` — streamed insert throughput (batches of 256 rows —
+    one fsync per batch; at this disk's ~0.6 ms fsync latency smaller
+    batches measure the disk, not the log) three ways: plain
+    ``StreamingEngine`` (no durability), WAL-enabled
+    ``DurableStreamingEngine`` with ``fsync=True`` (the crash-safe
+    configuration: every batch is checksummed, appended, and fsynced
+    before it is applied), and ``fsync=False`` (ack-on-page-cache, the
+    middle ground).  The acceptance bar: zero-fault WAL-enabled insert
+    stays within 1.5× of the non-WAL path (``wal_overhead`` ≤ 1.5) —
+    log-first durability must ride the mutation stream, not throttle it.
+  * ``snapshot`` — published snapshot bytes vs the live arena device
+    bytes it restores (the snapshot stores host mirrors + staged state;
+    quantized tiers re-encode deterministically on restore, so they are
+    not persisted twice).
+  * ``recovery`` — time of ``recover()`` (newest snapshot + WAL-tail
+    replay) vs the no-durability alternative: rebuild from the original
+    dataset and re-apply every mutation from scratch.  Both paths pay a
+    deterministic base build (device state is rebuilt, not mmapped —
+    DESIGN.md §5 "replayed vs rebuilt"), so the win comes from the
+    history the snapshot absorbed: the compaction folded before the
+    snapshot is replayed by the rebuild path but NOT by recovery, and
+    the margin grows with the mutation history.
+
+``tiny=True`` (the ci_tier1 smoke / bench-smoke job) shrinks sizes and
+writes the JSON to a temp dir unless the caller routes it with an
+explicit ``out_dir``, so a smoke run never clobbers the recorded perf
+artifact.
+"""
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import StreamingEngine
+from repro.core.durability import DurableStreamingEngine, recover
+from repro.index.base import pow2_bucket
+
+from .common import emit, emit_json, make_dataset
+from .exp10_streaming import insert_pool
+
+
+def _dir_bytes(path: Path) -> int:
+    return sum(f.stat().st_size for f in Path(path).rglob("*")
+               if f.is_file())
+
+
+def _time_inserts(eng, px, pls, batch: int) -> float:
+    t0 = time.perf_counter()
+    for i in range(0, len(px), batch):
+        eng.insert(px[i:i + batch], pls[i:i + batch])
+    return time.perf_counter() - t0
+
+
+# Each variant is rebuilt + re-timed this many times and the best pass
+# is recorded: single fsyncs on this filesystem spike 0.6→2 ms, and one
+# spike inside a dozen-batch window would otherwise decide the ratio.
+REPEATS = 3
+
+
+def run(n=4_000, k=10, out_dir=None, tiny=False):
+    if tiny:
+        n = 600
+    if out_dir is None:
+        out_dir = tempfile.mkdtemp(prefix="exp12_tiny_") if tiny else "."
+    q = 40
+    batch = 256
+    batches = 4 if tiny else 12
+    m = batch * batches
+    x, ls, qv, qls = make_dataset(n=n, n_labels=12, q=q, seed=9)
+    px, pls = insert_pool(m + batch, x.shape[1], seed=33)
+    kw = dict(mode="eis", c=0.2, backend="flat",
+              max_delta_fraction=None, max_tombstone_fraction=None,
+              min_delta_capacity=pow2_bucket(m + batch))
+    rows, payload = [], {"n": n, "k": k, "insert_batch": batch,
+                         "insert_batches": batches, "tiny": tiny}
+
+    # -- insert QPS: plain vs WAL (fsync on/off), zero faults injected ----
+    variants = {}
+    for rep in range(REPEATS):
+        se = StreamingEngine.build(x, ls, **kw)
+        se.insert(px[m:], pls[m:])               # warm the append programs
+        s = _time_inserts(se, px[:m], pls[:m], batch)
+        variants["plain"] = min(variants.get("plain", s), s)
+    for name, fsync in (("wal_fsync", True), ("wal_nofsync", False)):
+        for rep in range(REPEATS):
+            with tempfile.TemporaryDirectory() as d:
+                eng = DurableStreamingEngine.build(x, ls, Path(d) / "dur",
+                                                   fsync=fsync, **kw)
+                eng.insert(px[m:], pls[m:])      # warm
+                s = _time_inserts(eng, px[:m], pls[:m], batch)
+                variants[name] = min(variants.get(name, s), s)
+                eng.close()
+    payload["insert_qps"] = {
+        name: {"seconds": s, "rows_per_s": m / max(s, 1e-9)}
+        for name, s in variants.items()}
+    overhead = variants["wal_fsync"] / max(variants["plain"], 1e-9)
+    payload["insert_qps"]["wal_overhead"] = overhead
+    payload["insert_qps"]["within_1p5x"] = bool(overhead <= 1.5)
+    rows.append({"name": "exp12/insert_wal",
+                 "us_per_call": f"{variants['wal_fsync'] / batches * 1e6:.0f}",
+                 "rows_per_s_plain": f"{m / variants['plain']:.0f}",
+                 "rows_per_s_wal": f"{m / variants['wal_fsync']:.0f}",
+                 "wal_overhead": f"{overhead:.2f}"})
+
+    # -- snapshot bytes vs arena bytes + recovery vs rebuild --------------
+    with tempfile.TemporaryDirectory() as d:
+        dur = Path(d) / "dur"
+        eng = DurableStreamingEngine.build(x, ls, dur, **kw)
+        for i in range(0, m // 2, batch):        # pre-snapshot mutations
+            eng.insert(px[i:i + batch], pls[i:i + batch])
+        eng.delete(np.arange(0, n, 61, dtype=np.int64))
+        eng.flush()          # the snapshot persists the COMPACTED state
+        t0 = time.perf_counter()
+        snap = eng.snapshot()
+        snapshot_s = time.perf_counter() - t0
+        arena_bytes = eng.engine.base.arena.nbytes + eng.engine.delta.nbytes
+        payload["snapshot"] = {
+            "snapshot_bytes": _dir_bytes(snap),
+            "arena_bytes": int(arena_bytes),
+            "snapshot_s": snapshot_s,
+            "bytes_ratio": _dir_bytes(snap) / max(arena_bytes, 1)}
+        for i in range(m // 2, m, batch):        # the WAL tail to replay
+            eng.insert(px[i:i + batch], pls[i:i + batch])
+        eng.delete(np.arange(1, n, 97, dtype=np.int64))
+        want = eng.search_batched(qv, qls, k)
+        wal_bytes = (dur / "wal.log").stat().st_size
+        eng.close()
+
+        t0 = time.perf_counter()
+        rec = recover(dur)
+        recover_s = time.perf_counter() - t0
+        got = rec.search_batched(qv, qls, k)
+        assert np.array_equal(np.asarray(want[1]), np.asarray(got[1]))
+        rec.close()
+
+        # the no-durability alternative: rebuild from the original data
+        # and re-apply every mutation from scratch
+        t0 = time.perf_counter()
+        sv = StreamingEngine.build(x, ls, **kw)
+        for i in range(0, m // 2, batch):
+            sv.insert(px[i:i + batch], pls[i:i + batch])
+        sv.delete(np.arange(0, n, 61, dtype=np.int64))
+        sv.flush()
+        for i in range(m // 2, m, batch):
+            sv.insert(px[i:i + batch], pls[i:i + batch])
+        sv.delete(np.arange(1, n, 97, dtype=np.int64))
+        rebuild_s = time.perf_counter() - t0
+    payload["recovery"] = {
+        "recover_s": recover_s, "full_rebuild_s": rebuild_s,
+        "wal_tail_bytes": int(wal_bytes),
+        "speedup_vs_rebuild": rebuild_s / max(recover_s, 1e-9)}
+    rows.append({"name": "exp12/recovery",
+                 "us_per_call": f"{recover_s * 1e6:.0f}",
+                 "full_rebuild_us": f"{rebuild_s * 1e6:.0f}",
+                 "speedup_vs_rebuild":
+                 f"{payload['recovery']['speedup_vs_rebuild']:.2f}",
+                 "snapshot_mb":
+                 f"{payload['snapshot']['snapshot_bytes'] / 1e6:.2f}"})
+
+    emit(rows, "exp12")
+    emit_json(payload, "exp12", out_dir)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -20,7 +20,7 @@ import traceback
 from . import (exp1_qps_recall, exp2_index_cost, exp3_shard_scaling,
                exp5_distributions, exp6_label_universe, exp7_vs_optimal,
                exp8_adaptive, exp9_backends, exp10_streaming,
-               exp11_serving, fig6_elastic_factor)
+               exp11_serving, exp12_durability, fig6_elastic_factor)
 
 ALL = {
     "fig6": fig6_elastic_factor.run,
@@ -34,6 +34,7 @@ ALL = {
     "exp9": exp9_backends.run,
     "exp10": exp10_streaming.run,
     "exp11": exp11_serving.run,
+    "exp12": exp12_durability.run,
 }
 
 

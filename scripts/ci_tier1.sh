@@ -19,5 +19,9 @@ export HYPOTHESIS_PROFILE="${HYPOTHESIS_PROFILE:-ci}"
 python -m pytest -q -p no:randomly --durations=10 "$@"
 # streaming-path smoke (ISSUE 4): tiny-sized exp10 exercises insert/delete/
 # flush + warmup end to end so the mutation subsystem can't silently rot;
-# --tiny writes its JSON to a temp dir, never over the recorded artifact
-python -m benchmarks.run --only exp10 --tiny
+# durability smoke (ISSUE 8): tiny-sized exp12 exercises WAL-ahead insert,
+# snapshot publish, and a full recover() with a search-parity assert (the
+# crash matrix itself runs subprocess-isolated inside the pytest pass via
+# tests/test_crash_matrix.py); --tiny writes JSONs to a temp dir, never
+# over the recorded artifacts
+python -m benchmarks.run --only exp10,exp12 --tiny

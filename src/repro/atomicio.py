@@ -1,0 +1,80 @@
+"""Crash-atomic filesystem primitives (ISSUE 8).
+
+The ONE verified home of the tmp-write + fsync + ``os.replace`` idiom —
+both the training :class:`~repro.checkpoint.Checkpointer` and the
+streaming durability layer (``core/durability.py``) publish through these
+helpers, so the crash-atomicity argument is made (and regression-tested)
+once:
+
+  * a file/directory is visible under its final name only after its
+    bytes are durable (fsync before rename);
+  * a crash at ANY instant leaves either the old state or the new state,
+    never a torn hybrid — a half-written ``*.tmp`` is invisible to
+    readers and cleaned up by the next writer;
+  * the parent directory is fsynced after the rename so the rename
+    itself survives power loss (POSIX: a rename is metadata, durable only
+    with the directory entry).
+
+Dependency-free (stdlib only) so the durability layer stays importable
+without jax.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import shutil
+from pathlib import Path
+
+
+def fsync_dir(path: str | Path) -> None:
+    """fsync a DIRECTORY so renames/creates inside it are durable."""
+    fd = os.open(str(path), os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def sha256_bytes(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def atomic_write_bytes(path: str | Path, data: bytes, *,
+                       fsync: bool = True) -> None:
+    """Write ``data`` to ``path`` atomically: tmp sibling + fsync +
+    ``os.replace``.  Readers see the old content or the new content,
+    never a prefix."""
+    path = Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        if fsync:
+            f.flush()
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+    if fsync:
+        fsync_dir(path.parent)
+
+
+def publish_dir(tmp: str | Path, final: str | Path, *,
+                fsync: bool = True) -> None:
+    """Atomically publish a fully-written temp directory under its final
+    name: fsync every file + the directory itself, then one rename.  An
+    existing ``final`` is replaced (remove-then-rename: the reader
+    contract is "a published dir with a manifest is complete", so the
+    brief absence window is a fallback-to-previous, not corruption)."""
+    tmp, final = Path(tmp), Path(final)
+    if fsync:
+        for p in sorted(tmp.rglob("*")):
+            if p.is_file():
+                fd = os.open(str(p), os.O_RDONLY)
+                try:
+                    os.fsync(fd)
+                finally:
+                    os.close(fd)
+        fsync_dir(tmp)
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    if fsync:
+        fsync_dir(final.parent)

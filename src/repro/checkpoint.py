@@ -10,7 +10,7 @@ Layout (one directory per step, atomic rename on completion):
         001_params.blocks.attn.wq.npy
         ...
 
-Production notes (DESIGN.md §5):
+Production notes (DESIGN.md §6):
   * **async** — `save()` snapshots device arrays to host (device_get) and
     hands the serialization to a writer thread; the train loop's bubble is
     the device->host copy only.  `wait()` joins before the next save or
@@ -32,7 +32,6 @@ Production notes (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import json
 import re
 import shutil
@@ -43,7 +42,12 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from .atomicio import publish_dir, sha256_bytes
 from .compat import tree_flatten_with_path
+from .core.faults import faultpoint, register_fault_point
+
+register_fault_point("checkpoint.mid_write",
+                     "Checkpointer.save: some leaves written, not published")
 
 
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
@@ -58,7 +62,7 @@ def _leaf_paths(tree) -> list[tuple[str, Any]]:
 
 
 def _sha256(a: np.ndarray) -> str:
-    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+    return sha256_bytes(np.ascontiguousarray(a).tobytes())
 
 
 # numpy can't serialize ml_dtypes (bf16/fp8) natively — store raw bits
@@ -114,13 +118,14 @@ class Checkpointer:
                 fname = f"{i:04d}_{re.sub(r'[^A-Za-z0-9_.-]', '_', name)}.npy"
                 stored, dtype_name = _to_storable(arr)
                 np.save(tmp / fname, stored)
+                faultpoint("checkpoint.mid_write")
                 manifest["leaves"].append({
                     "name": name, "file": fname, "shape": list(arr.shape),
                     "dtype": dtype_name, "sha256": _sha256(stored)})
             (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-            if final.exists():
-                shutil.rmtree(final)
-            tmp.rename(final)                      # atomic publish
+            # fsync + atomic rename: a crash leaves the previous step's
+            # checkpoint intact, never a half-written final dir
+            publish_dir(tmp, final)
             self._gc()
 
         if blocking:

@@ -10,6 +10,9 @@ Public surface:
   * engine   — LabelHybridEngine: build/search over physical index backends
   * stream   — StreamingEngine: insert/delete/flush mutations over a
                LabelHybridEngine (delta arena + tombstones, DESIGN.md §3.6)
+  * durability — WAL + snapshot/restore crash consistency for the
+               streaming engine (DESIGN.md §5)
+  * faults   — deterministic named-fault-point injection harness
 """
 from .labels import (  # noqa: F401
     MAX_LABELS,
@@ -48,3 +51,7 @@ from .engine import (  # noqa: F401
 from .adaptive import (AdaptiveEngine, WorkloadMonitor,  # noqa: F401,E402
                        selection_from_weighted, weighted_select)
 from .stream import StreamingEngine  # noqa: F401,E402
+from .faults import (FAULT_POINTS, FaultPlan, FaultRule,  # noqa: F401,E402
+                     InjectedFault, faultpoint, inject, register_fault_point)
+from .durability import (DurableStreamingEngine,  # noqa: F401,E402
+                         RecoveryError, WriteAheadLog, recover, replay_wal)

@@ -70,14 +70,23 @@ from typing import Sequence
 
 import numpy as np
 
-from ..index.base import (Arena, DeltaArena, MIN_DELTA_CAPACITY, as_row_ids,
-                          check_global_id_contract, pack_tombstones)
+from ..index.base import (Arena, CapacityError, DeltaArena,
+                          MIN_DELTA_CAPACITY, as_row_ids,
+                          check_global_id_contract, pack_tombstones,
+                          pow2_bucket)
 from ..kernels import ops as _kernel_ops
 from .adaptive import WorkloadMonitor, selection_from_weighted, weighted_select
 from .eis import EISResult
 from .engine import LabelHybridEngine
+from .faults import faultpoint, register_fault_point
 from .groups import EMPTY_KEY, GroupTable
 from .labels import encode_many, key_to_mask, masks_to_int32_words
+
+# crash site inside the compaction: survivors computed, nothing rebased
+# yet — the in-memory engine is mid-fold and must be recoverable from the
+# durable state alone (core/durability.py; tests/test_crash_matrix.py)
+register_fault_point("compact.mid_fold",
+                     "flush(): after _survivors, before the fold")
 
 
 class StreamingEngine:
@@ -87,6 +96,7 @@ class StreamingEngine:
                  max_delta_fraction: float | None = 0.25,
                  max_tombstone_fraction: float | None = 0.25,
                  min_delta_capacity: int = MIN_DELTA_CAPACITY,
+                 max_delta_capacity: int | None = None,
                  monitor: WorkloadMonitor | None = None,
                  drift_threshold: float = 0.25,
                  min_queries: int = 200,
@@ -97,6 +107,7 @@ class StreamingEngine:
         self.max_delta_fraction = max_delta_fraction
         self.max_tombstone_fraction = max_tombstone_fraction
         self.min_delta_capacity = min_delta_capacity
+        self.max_delta_capacity = max_delta_capacity
         # escape hatch (and the exp10 A/B baseline): False restores the
         # PR 4 fold-per-delete behavior on private-storage backends
         self._lazy_deletes = lazy_deletes
@@ -120,6 +131,7 @@ class StreamingEngine:
               max_delta_fraction: float | None = 0.25,
               max_tombstone_fraction: float | None = 0.25,
               min_delta_capacity: int = MIN_DELTA_CAPACITY,
+              max_delta_capacity: int | None = None,
               monitor: WorkloadMonitor | None = None,
               drift_threshold: float = 0.25,
               min_queries: int = 200,
@@ -132,7 +144,8 @@ class StreamingEngine:
         return StreamingEngine(
             engine, max_delta_fraction=max_delta_fraction,
             max_tombstone_fraction=max_tombstone_fraction,
-            min_delta_capacity=min_delta_capacity, monitor=monitor,
+            min_delta_capacity=min_delta_capacity,
+            max_delta_capacity=max_delta_capacity, monitor=monitor,
             drift_threshold=drift_threshold, min_queries=min_queries,
             space_budget=space_budget, build_kwargs=build_kwargs,
             lazy_deletes=lazy_deletes)
@@ -155,7 +168,8 @@ class StreamingEngine:
             self.delta = DeltaArena.empty(eng.vectors.shape[1],
                                           eng.label_words.shape[1],
                                           self.min_delta_capacity,
-                                          storage=eng.storage)
+                                          storage=eng.storage,
+                                          max_capacity=self.max_delta_capacity)
         else:
             self.delta = None
 
@@ -228,6 +242,11 @@ class StreamingEngine:
         lw = masks_to_int32_words(encode_many(label_sets))
         ids = np.arange(self.sentinel, self.sentinel + m, dtype=np.int64)
 
+        # the functional append runs FIRST: it is the step that can raise
+        # (typed CapacityError at the max_delta_capacity ceiling), and a
+        # failed insert must leave the engine bit-for-bit unchanged — no
+        # half-staged host parts, no advanced cursor
+        new_delta = self.delta.appended(vectors, lw) if self.lazy else None
         self._delta_vec_parts.append(vectors)
         self._delta_lw_parts.append(lw)
         self._delta_ls.extend(label_sets)
@@ -235,10 +254,28 @@ class StreamingEngine:
             [self._delta_dead, np.zeros(m, dtype=bool)])
         self._n_inserted += m
         if self.lazy:
-            self.delta = self.delta.appended(vectors, lw)
+            self.delta = new_delta
         else:
             self._dirty = True
         return ids
+
+    def ensure_insert_capacity(self, m: int) -> None:
+        """Raise :class:`CapacityError` iff ``insert`` of ``m`` rows would
+        — after any delta-fill flush the insert itself would trigger —
+        exceed ``max_delta_capacity``.  State is never touched; the
+        durability layer calls this BEFORE logging a record so the WAL
+        only ever holds mutations whose replay succeeds."""
+        if m == 0 or not self.lazy or self.max_delta_capacity is None:
+            return
+        will_flush = (self.max_delta_fraction is not None
+                      and self._n_inserted + m > self.max_delta_fraction
+                      * max(1, len(self.base.label_sets)))
+        count = 0 if will_flush else self.delta.count
+        need = count + pow2_bucket(m)
+        if need > pow2_bucket(self.max_delta_capacity):
+            raise CapacityError(
+                f"inserting {m} rows needs delta capacity {need} "
+                f"(max_delta_capacity {self.max_delta_capacity})")
 
     def delete(self, ids) -> int:
         """Tombstone rows by global stream id; returns how many were newly
@@ -338,6 +375,7 @@ class StreamingEngine:
         t0 = time.perf_counter()
         eng = self.base
         alive_base, alive_delta, id_map, new_ls = self._survivors()
+        faultpoint("compact.mid_fold")
         dropped = int((~alive_base).sum() + (~alive_delta).sum())
         folded = int(alive_delta.sum())
         reselected = False
@@ -682,6 +720,58 @@ class StreamingEngine:
         out["seconds"] += time.perf_counter() - t0
         out["programs"] += len(outs)
         return out
+
+    # -- durability hooks (core/durability.py; DESIGN.md §5) ------------------
+    def staged_state(self) -> dict:
+        """The host-side mutation staging a snapshot must persist — every
+        pending insert/delete since the last compaction, with the original
+        append batching preserved (``part_lens``) so a restore replays the
+        exact power-of-two growth sequence the delta arena went through
+        (byte-identical device buffers, not just equal live rows)."""
+        return {
+            "base_dead": self._base_dead.copy(),
+            "delta_dead": self._delta_dead.copy(),
+            "delta_vectors": (np.concatenate(self._delta_vec_parts)
+                              if self._delta_vec_parts else
+                              np.zeros((0, self.base.vectors.shape[1]),
+                                       np.float32)),
+            "part_lens": np.asarray(
+                [len(p) for p in self._delta_vec_parts], np.int64),
+            "delta_ls": list(self._delta_ls),
+            "n_inserted": self._n_inserted,
+            "dirty": self._dirty,
+            "has_base_tombs": self._has_base_tombs,
+        }
+
+    def restore_staged_state(self, state: dict) -> None:
+        """Inverse of :meth:`staged_state` on a freshly-built engine:
+        re-stage the pending mutations WITHOUT re-running compaction
+        triggers (the snapshot captured post-trigger state — replaying
+        triggers here would fold what the survivor engine had pending)."""
+        self._reset_staging()
+        ls = [tuple(s) for s in state["delta_ls"]]
+        vecs = np.ascontiguousarray(state["delta_vectors"], np.float32)
+        off = 0
+        for n in np.asarray(state["part_lens"], np.int64):
+            part = vecs[off:off + int(n)]
+            lw = masks_to_int32_words(encode_many(ls[off:off + int(n)]))
+            self._delta_vec_parts.append(part)
+            self._delta_lw_parts.append(lw)
+            if self.lazy:
+                self.delta = self.delta.appended(part, lw)
+            off += int(n)
+        self._delta_ls = ls
+        self._n_inserted = int(state["n_inserted"])
+        self._base_dead = np.asarray(state["base_dead"], bool).copy()
+        self._delta_dead = np.asarray(state["delta_dead"], bool).copy()
+        self._dirty = bool(state["dirty"])
+        self._has_base_tombs = bool(state["has_base_tombs"])
+        if self.lazy:
+            if self._has_base_tombs:
+                self.base.arena = self.base.arena.with_tombstones(
+                    self._base_dead)
+            if self._delta_dead.any():
+                self.delta = self.delta.with_tombstones(self._delta_dead)
 
     # -- reporting ------------------------------------------------------------
     def stats(self):

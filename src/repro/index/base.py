@@ -100,6 +100,14 @@ import numpy as np
 ROW_ID_DTYPE = np.int32
 
 
+class CapacityError(RuntimeError):
+    """An insert would push the :class:`DeltaArena` past its maximum
+    capacity tier (``max_capacity``).  Typed so callers — the serving
+    runtime above all — can surface "corpus full, compact or shard"
+    as a result instead of a crash (ISSUE 8 satellite); the raising
+    paths are all functional, so the engine state is unchanged."""
+
+
 def check_global_id_contract(n: int) -> int:
     """Assert the sentinel/dtype contract: ids AND the empty sentinel ``n``
     must fit int32 (the device id dtype).  Returns ``n`` for chaining."""
@@ -383,13 +391,21 @@ class DeltaArena:
     zeros: object = None        # jnp [cap] f32 (int8 only)
     rerank: object = None       # jnp [cap, D] f32 exact rows (rerank tier)
     rerank_norms: object = None  # jnp [cap] f32 (rerank tier)
+    max_capacity: int | None = None  # growth ceiling; exceeding raises
 
     @classmethod
     def empty(cls, dim: int, words: int,
               capacity: int = MIN_DELTA_CAPACITY,
-              storage: str = "f32") -> "DeltaArena":
+              storage: str = "f32",
+              max_capacity: int | None = None) -> "DeltaArena":
         import jax.numpy as jnp
         cap = pow2_bucket(capacity)
+        if max_capacity is not None:
+            max_capacity = pow2_bucket(max_capacity)
+            if cap > max_capacity:
+                raise CapacityError(
+                    f"initial delta capacity {cap} exceeds "
+                    f"max_capacity {max_capacity}")
         dtype, has_rerank = parse_storage(storage)
         code_dtype = {"f32": jnp.float32, "fp16": jnp.float16,
                       "int8": jnp.uint8}[dtype]
@@ -405,7 +421,8 @@ class DeltaArena:
                    rerank=(jnp.zeros((cap, dim), jnp.float32)
                            if has_rerank else None),
                    rerank_norms=(jnp.zeros((cap,), jnp.float32)
-                                 if has_rerank else None))
+                                 if has_rerank else None),
+                   max_capacity=max_capacity)
 
     @property
     def capacity(self) -> int:
@@ -460,6 +477,11 @@ class DeltaArena:
         cap = pow2_bucket(min_capacity)
         if cap <= self.capacity:
             return self
+        if self.max_capacity is not None and cap > self.max_capacity:
+            raise CapacityError(
+                f"delta arena cannot grow to {cap} rows "
+                f"(max_capacity {self.max_capacity}, {self.count} held); "
+                f"flush() to fold the delta into the base arena")
         old = self.capacity
 
         def widen(buf):

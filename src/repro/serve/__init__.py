@@ -1,4 +1,4 @@
 from .engine import (BatchedDecoder, Request,  # noqa: F401
                      RetrievalAugmentedEngine)
-from .runtime import (RuntimeStats, ServeResult,  # noqa: F401
-                      ServeStatus, ServingRuntime)
+from .runtime import (MutationResult, RuntimeStats,  # noqa: F401
+                      ServeResult, ServeStatus, ServingRuntime)

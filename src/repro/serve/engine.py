@@ -29,6 +29,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import arch as A
+from ..core.faults import faultpoint, register_fault_point
+
+register_fault_point("serve.retrieve",
+                     "RetrievalAugmentedEngine.retrieve: before the embed")
+register_fault_point("serve.decode",
+                     "BatchedDecoder.step: before the decode dispatch")
 
 
 @dataclasses.dataclass
@@ -132,9 +138,25 @@ class BatchedDecoder:
         self.slot_req[slot] = req
         return True
 
+    def evict_all(self) -> list[Request]:
+        """Evict every resident request (live slots AND admission-finished
+        stragglers) without decoding further — the runtime's containment
+        path after a failed decode step.  Slot caches need no scrubbing:
+        a slot is reusable the moment ``live`` clears (admission
+        overwrites cache rows wholesale)."""
+        evicted: list[Request] = []
+        for slot in np.flatnonzero(self.live):
+            evicted.append(self.slot_req[slot])
+            self.slot_req[slot] = None
+        self.live[:] = False
+        evicted.extend(self._admit_done)
+        self._admit_done = []
+        return evicted
+
     def step(self) -> list[Request]:
         """One decode step for all live slots; returns finished requests
         (including any that finished at admission since the last step)."""
+        faultpoint("serve.decode")
         if not self.live.any():
             done, self._admit_done = self._admit_done, []
             return done
@@ -281,6 +303,7 @@ class RetrievalAugmentedEngine:
         serving state, so re-serving (the runtime's retry path) rebuilds
         the decode input from scratch instead of compounding stale
         context."""
+        faultpoint("serve.retrieve")
         emb = self.embed_requests(requests)
         _, ids = self.eli.search_batched(
             emb, [r.label_set for r in requests], self.k,

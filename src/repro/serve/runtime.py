@@ -30,7 +30,18 @@ continuous-batching event loop:
     benchmarks/exp11_serving.py);
   * **graceful degradation**: queue-full submissions return
     ``REJECTED``; per-request deadlines are checked at every stage and
-    surfaced as ``TIMEOUT`` results (never silently dropped).
+    surfaced as ``TIMEOUT`` results (never silently dropped);
+  * **failure containment** (DESIGN.md §5): a retrieval, admission or
+    decode exception never escapes :meth:`tick` and never strands a
+    resident — affected requests are retried with bounded exponential
+    backoff (deadline-aware: a retry that cannot land before the
+    deadline is not attempted) and surface as typed ``FAILED`` results
+    with the error attached once retries are exhausted; a failed decode
+    step evicts every resident (:meth:`BatchedDecoder.evict_all`) so the
+    slot engine is immediately reusable.  Corpus mutations surface typed
+    :class:`MutationResult`\\ s — a capacity-exhausted insert
+    (:class:`~repro.index.base.CapacityError`) is an ``ok=False`` result,
+    not a crashed serving loop.
 
 The retrieval engine may be a ``core.stream.StreamingEngine`` —
 mutations land between ticks via :meth:`ServingRuntime.insert` /
@@ -49,6 +60,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from ..index.base import CapacityError
 from ..kernels import ops as _kernel_ops
 from .engine import Request, RetrievalAugmentedEngine
 
@@ -58,6 +70,7 @@ class ServeStatus(enum.Enum):
     OK = "ok"
     REJECTED = "rejected_queue_full"
     TIMEOUT = "deadline_timeout"
+    FAILED = "failed"
 
 
 @dataclasses.dataclass
@@ -73,10 +86,28 @@ class ServeResult:
     status: ServeStatus
     t_submit: float  # clock() seconds at admission
     t_finish: float | None = None  # clock() seconds at terminal state
+    # failure containment (status FAILED / retry bookkeeping)
+    error: str | None = None       # last exception, "Type: message"
+    attempts: int = 0              # serve attempts that raised
+    t_retry: float | None = None   # earliest clock() second to retry at
 
     @property
     def latency(self) -> float | None:
         return None if self.t_finish is None else self.t_finish - self.t_submit
+
+
+@dataclasses.dataclass
+class MutationResult:
+    """Typed outcome of a corpus mutation through the serving runtime.
+
+    ``ok=False`` carries the error (e.g. a
+    :class:`~repro.index.base.CapacityError` from a delta arena at its
+    growth ceiling) instead of letting it crash the serving loop; ``ids``
+    holds the assigned ids of a successful insert."""
+
+    ok: bool
+    ids: np.ndarray | None = None
+    error: str | None = None
 
 
 @dataclasses.dataclass
@@ -87,6 +118,8 @@ class RuntimeStats:
     completed_ok: int
     rejected: int
     deadline_misses: int
+    failed: int      # terminal FAILED results (retries exhausted)
+    retries: int     # re-serve attempts scheduled after a contained fault
     decode_steps: int
     retrieval_batches: int
     batch_size_hist: dict[int, int]  # micro-batch size -> count
@@ -117,6 +150,8 @@ class ServingRuntime:
         queue_depth: int = 64,
         max_coalesce: int | None = None,
         latency_budget_s: float = 0.005,
+        max_retries: int = 2,
+        retry_backoff_s: float = 0.002,
         clock: Callable[[], float] = time.monotonic,
         warmup: bool = True,
         delta_rows_hint: int | None = None,
@@ -126,6 +161,8 @@ class ServingRuntime:
         self.queue_depth = queue_depth
         self.max_coalesce = max_coalesce or max(self.decoder.B, rag.min_bucket)
         self.latency_budget_s = latency_budget_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self.clock = clock
         if warmup:
             eli = rag.eli
@@ -154,6 +191,8 @@ class ServingRuntime:
         self._submitted = 0
         self._rejected = 0
         self._deadline_misses = 0
+        self._failed = 0
+        self._retries = 0
         self._decode_steps = 0
         self._batch_hist: dict[int, int] = {}
         self._depth_samples: list[int] = []
@@ -234,16 +273,18 @@ class ServingRuntime:
             return True
         return self._oldest_wait(now) >= self.latency_budget_s
 
-    def _form_microbatch(self) -> list[ServeResult]:
+    def _form_microbatch(self, now: float) -> list[ServeResult]:
         """Round-robin one request per tenant per turn until the batch
-        fills or the queues drain — the fairness discipline."""
+        fills or the queues drain — the fairness discipline.  A tenant
+        head still inside its retry backoff window (``t_retry > now``)
+        stays queued; the tenant is skipped this turn."""
         batch: list[ServeResult] = []
         while len(batch) < self.max_coalesce and self._queued_total:
             for _ in range(len(self._rr)):
                 t = self._rr[0]
                 self._rr.rotate(-1)
                 q = self._tenants[t]
-                if q:
+                if q and (q[0].t_retry is None or q[0].t_retry <= now):
                     batch.append(q.popleft())
                     self._queued_total -= 1
                     break
@@ -251,9 +292,49 @@ class ServingRuntime:
                 break
         return batch
 
-    def _admit_ready(self) -> int:
+    # -- failure containment -------------------------------------------------
+    def _fail_or_retry(self, res: ServeResult, now: float,
+                       exc: BaseException) -> None:
+        """A serve attempt for ``res`` raised: schedule a bounded
+        deadline-aware retry, or surface a terminal ``FAILED`` result.
+        The retry re-enters at the head of its tenant queue (bypassing
+        ``queue_depth`` — containment must not convert a transient fault
+        into a drop) and waits out an exponential backoff; a retry whose
+        backoff cannot land before the request's deadline is pointless
+        and fails immediately instead."""
+        res.attempts += 1
+        res.error = f"{type(exc).__name__}: {exc}"
+        backoff = self.retry_backoff_s * (2 ** (res.attempts - 1))
+        dl = res.request.deadline
+        if (res.attempts <= self.max_retries
+                and (dl is None or now + backoff <= dl)):
+            self._retries += 1
+            res.t_retry = now + backoff
+            q = self._tenants.get(res.request.tenant)
+            if q is None:
+                q = self._tenants[res.request.tenant] = deque()
+                self._rr.append(res.request.tenant)
+            q.appendleft(res)
+            self._queued_total += 1
+        else:
+            res.status = ServeStatus.FAILED
+            res.t_finish = now
+            self._failed += 1
+            self.completed.append(res)
+            self._by_req.pop(id(res.request), None)
+
+    def _admit_ready(self, now: float) -> int:
         admitted = 0
-        while self._ready and self.decoder.admit(self._ready[0].request):
+        while self._ready:
+            res = self._ready[0]
+            try:
+                ok = self.decoder.admit(res.request)
+            except Exception as exc:  # noqa: BLE001 — contained per request
+                self._ready.popleft()
+                self._fail_or_retry(res, now, exc)
+                continue
+            if not ok:
+                break
             self._ready.popleft()
             admitted += 1
         return admitted
@@ -269,17 +350,38 @@ class ServingRuntime:
         now = self.clock() if now is None else now
         events = 0
         self._expire(now)
-        events += self._admit_ready()
+        events += self._admit_ready(now)
         if self._should_flush(now):
-            batch = self._form_microbatch()
+            batch = self._form_microbatch(now)
             if batch:
-                self.rag.retrieve([r.request for r in batch])
-                self._ready.extend(batch)
-                self._batch_hist[len(batch)] = self._batch_hist.get(len(batch), 0) + 1
-                events += 1
-                events += self._admit_ready()
+                try:
+                    self.rag.retrieve([r.request for r in batch])
+                except Exception as exc:  # noqa: BLE001 — contained
+                    # the whole micro-batch shared the failed dispatch;
+                    # each request retries (or fails) individually
+                    for res in batch:
+                        self._fail_or_retry(res, now, exc)
+                    events += 1
+                else:
+                    self._ready.extend(batch)
+                    self._batch_hist[len(batch)] = (
+                        self._batch_hist.get(len(batch), 0) + 1)
+                    events += 1
+                    events += self._admit_ready(now)
         live = int(self.decoder.live.sum())
-        finished = self.decoder.step()
+        try:
+            finished = self.decoder.step()
+        except Exception as exc:  # noqa: BLE001 — contained
+            # a failed decode step poisons the whole slot batch: evict
+            # every resident (no stranded slots) and retry each request
+            # from retrieval — decode_input is rebuilt, never compounded
+            t_fail = self.clock()
+            for req in self.decoder.evict_all():
+                res = self._by_req.get(id(req))
+                if res is not None:
+                    self._fail_or_retry(res, t_fail, exc)
+            finished = []
+            events += 1
         if live or finished:
             self._decode_steps += 1
         events += live
@@ -355,8 +457,18 @@ class ServingRuntime:
     # -- streaming mutations (in-flight; DESIGN.md §3.6) ---------------------
     def insert(
         self, vectors: np.ndarray, label_sets: Sequence[tuple[int, ...]]
-    ) -> np.ndarray:
-        return self.rag.insert(vectors, label_sets)
+    ) -> MutationResult:
+        """Add documents to the retrieval corpus between ticks.  Returns a
+        typed :class:`MutationResult`: a delta arena at its growth ceiling
+        (:class:`~repro.index.base.CapacityError`) is an ``ok=False``
+        outcome the operator handles (flush, shed, resize) — not an
+        exception tearing down the serving loop mid-stream."""
+        try:
+            ids = self.rag.insert(vectors, label_sets)
+        except CapacityError as exc:
+            return MutationResult(ok=False,
+                                  error=f"{type(exc).__name__}: {exc}")
+        return MutationResult(ok=True, ids=ids)
 
     def delete(self, ids) -> int:
         return self.rag.delete(ids)
@@ -374,6 +486,8 @@ class ServingRuntime:
             completed_ok=completed_ok,
             rejected=self._rejected,
             deadline_misses=self._deadline_misses,
+            failed=self._failed,
+            retries=self._retries,
             decode_steps=self._decode_steps,
             retrieval_batches=sum(self._batch_hist.values()),
             batch_size_hist=dict(sorted(self._batch_hist.items())),

@@ -1,0 +1,174 @@
+"""Crash matrix: kill-at-every-registered-fault-point recovery parity
+(ISSUE 8 acceptance).
+
+One subprocess (so a wedged recovery cannot take the suite down, and the
+XLA compile cache stays warm across all scenarios) runs, for every
+registered durability fault point × storage spec {f32, int8+rerank}, the
+same mutation schedule over a WAL+snapshot durable engine on the 10k/500
+acceptance fixture:
+
+    insert → delete → snapshot → insert → delete → flush → insert → snapshot
+
+with a deterministic :class:`FaultPlan` arming exactly one point (armed
+AFTER the build, so hit counts index into the schedule, not into the
+initial snapshot).  The injected fault kills the run mid-operation; the
+parent contract is then checked:
+
+  * the fault actually fired, at the scheduled operation;
+  * ``recover()`` comes back, and its search (k ∈ {1, 10}, all 500
+    queries) is BIT-IDENTICAL to an uninterrupted survivor engine that
+    applied exactly the durable operations — the crash-point semantics:
+    ``wal.append.pre/mid_write`` ⇒ the in-flight op was never
+    acknowledged and must be absent; ``wal.append.post_write`` and
+    ``compact.mid_fold`` ⇒ the record is durable (the ambiguous-ack
+    window) and must be present; snapshot/truncate crashes ⇒ logically
+    no-op, every acked mutation present.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+# fault points this module exercises (see tests/test_fault_registry.py)
+COVERED_POINTS = (
+    "wal.append.pre_write",
+    "wal.append.mid_write",
+    "wal.append.post_write",
+    "wal.truncate.mid_replace",
+    "snapshot.mid_write",
+    "snapshot.mid_rename",
+    "snapshot.post_publish",
+    "compact.mid_fold",
+)
+
+# (point, nth, index of the op the fault lands in, in-flight op durable?)
+SCENARIOS = [
+    ("wal.append.pre_write", 3, 3, False),
+    ("wal.append.mid_write", 4, 4, False),
+    ("wal.append.post_write", 5, 5, True),
+    ("compact.mid_fold", 1, 5, True),
+    ("snapshot.mid_write", 5, 2, False),
+    ("snapshot.mid_rename", 1, 2, False),
+    ("snapshot.post_publish", 1, 2, False),
+    ("wal.truncate.mid_replace", 1, 7, False),
+]
+SPECS = ["f32", "int8+rerank"]
+
+_CHILD = r"""
+import json, sys, tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import durability as D
+from repro.core import (LabelWorkloadConfig, StreamingEngine,
+                        generate_label_sets, generate_query_label_sets)
+from repro.core.faults import FaultPlan, InjectedFault, inject
+
+SCENARIOS = json.loads(sys.argv[1])
+SPECS = json.loads(sys.argv[2])
+
+rng = np.random.default_rng(11)
+N, DIM, Q = 10_000, 32, 500
+x = rng.standard_normal((N, DIM)).astype(np.float32)
+ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=10, seed=3))
+qv = rng.standard_normal((Q, DIM)).astype(np.float32)
+qls = generate_query_label_sets(ls, Q - 4, seed=4, from_base_fraction=0.75)
+qls += [(0, 1, 2, 3, 4, 5), (2, 3, 4, 5, 6, 7, 8, 9), (0, 2, 4, 6, 8), ()]
+pool_x = rng.standard_normal((90, DIM)).astype(np.float32)
+pool_ls = generate_label_sets(90, LabelWorkloadConfig(num_labels=10,
+                                                      seed=21))
+pool_ls = [tuple(sorted(set(s) | ({11} if i % 9 == 0 else set())))
+           for i, s in enumerate(pool_ls)]
+
+KW = dict(backend="flat", max_delta_fraction=None,
+          max_tombstone_fraction=None)
+OPS = ["insert1", "delete1", "snapshot", "insert2", "delete2", "flush",
+       "insert3", "snapshot"]
+
+
+def apply_op(eng, op):
+    if op == "insert1":
+        apply_op.ids1 = eng.insert(pool_x[:40], pool_ls[:40])
+    elif op == "delete1":
+        eng.delete(np.concatenate([apply_op.ids1[:7],
+                                   np.arange(0, 30, 3, dtype=np.int64)]))
+    elif op == "insert2":
+        apply_op.ids2 = eng.insert(pool_x[40:70], pool_ls[40:70])
+    elif op == "delete2":
+        eng.delete(apply_op.ids2[:5])
+    elif op == "flush":
+        eng.flush()
+    elif op == "insert3":
+        eng.insert(pool_x[70:90], pool_ls[70:90])
+    elif op == "snapshot":
+        if hasattr(eng, "snapshot"):
+            eng.snapshot()      # logical no-op on the survivor
+    else:
+        raise AssertionError(op)
+
+
+def searches(eng):
+    out = []
+    for k in (1, 10):
+        dist, ids = eng.search_batched(qv, qls, k)
+        out.append((np.asarray(dist), np.asarray(ids)))
+    return out
+
+
+results = []
+root = Path(tempfile.mkdtemp(prefix="crash_matrix_"))
+for spec in SPECS:
+    for point, nth, crash_idx, durable_inflight in SCENARIOS:
+        tag = f"{point}@{spec}"
+        d = root / tag.replace("/", "_").replace("+", "_")
+        eng = D.DurableStreamingEngine.build(x, ls, d, storage=spec, **KW)
+        crashed_at = None
+        try:
+            with inject(FaultPlan({point: nth})):
+                for i, op in enumerate(OPS):
+                    apply_op(eng, op)
+        except InjectedFault as e:
+            assert e.point == point, (tag, e.point)
+            crashed_at = i
+        eng.close()
+        rec = D.recover(d)
+        durable_ops = OPS[:crash_idx] + (
+            [OPS[crash_idx]] if durable_inflight else [])
+        sv = StreamingEngine.build(x, ls, storage=spec, **KW)
+        for op in durable_ops:
+            apply_op(sv, op)
+        got, want = searches(rec), searches(sv)
+        parity = all(np.array_equal(i0, i1) and np.array_equal(d0, d1)
+                     for (d0, i0), (d1, i1) in zip(want, got))
+        results.append({"point": point, "spec": spec,
+                        "crashed_at": crashed_at,
+                        "expected_crash_at": crash_idx,
+                        "parity": bool(parity)})
+        rec.close()
+print("RESULT" + json.dumps(results))
+"""
+
+
+@pytest.fixture(scope="module")
+def matrix():
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD, json.dumps(SCENARIOS),
+         json.dumps(SPECS)],
+        capture_output=True, text=True, cwd=".", timeout=3000)
+    line = next((ln for ln in r.stdout.splitlines()
+                 if ln.startswith("RESULT")), None)
+    assert line, f"child failed:\n{r.stdout[-3000:]}\n{r.stderr[-3000:]}"
+    return json.loads(line[len("RESULT"):])
+
+
+@pytest.mark.parametrize("spec", SPECS)
+@pytest.mark.parametrize("point", [s[0] for s in SCENARIOS])
+def test_recovery_bit_parity(matrix, point, spec):
+    rec = next(r for r in matrix if r["point"] == point
+               and r["spec"] == spec)
+    assert rec["crashed_at"] == rec["expected_crash_at"], rec
+    assert rec["parity"], rec

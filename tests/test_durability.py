@@ -1,0 +1,404 @@
+"""Crash-consistent streaming durability (ISSUE 8 tentpole + satellites).
+
+Unit + integration coverage for ``core/durability.py`` and friends:
+
+  * WAL record format: roundtrip, torn-tail / CRC / LSN-discontinuity
+    detection, and that an injected ``wal.append.mid_write`` crash leaves
+    a GENUINELY torn record on disk which replay discards;
+  * snapshot/restore: a recovered engine is search-bit-identical to the
+    survivor for ``f32`` and ``int8+rerank`` arenas and for a
+    private-storage (ivf) backend; WAL-tail replay on top of a snapshot;
+    fallback to the previous snapshot when the newest is corrupt; WAL
+    truncation keeps exactly the tail the oldest retained snapshot needs;
+  * deterministic fault injection: FaultPlan nth/prob/times semantics,
+    seed determinism, unregistered-point hard error;
+  * satellite regressions: ``DeltaArena``/``StreamingEngine`` capacity
+    exhaustion raises typed ``CapacityError`` with NO state change, and
+    ``Checkpointer.save`` survives a mid-write crash (previous step
+    intact, torn tmp invisible to restore).
+
+The exhaustive every-registered-point × storage-spec crash matrix runs
+subprocess-isolated in tests/test_crash_matrix.py.
+"""
+from __future__ import annotations
+
+import json
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.atomicio import atomic_write_bytes, sha256_bytes
+from repro.core import durability as D
+from repro.core import (LabelHybridEngine, LabelWorkloadConfig,
+                        StreamingEngine, generate_label_sets,
+                        generate_query_label_sets)
+from repro.core.faults import (FAULT_POINTS, FaultPlan, FaultRule,
+                               InjectedFault, faultpoint, inject)
+from repro.index.base import CapacityError, DeltaArena
+
+# fault points this module exercises (tests/test_fault_registry.py
+# asserts the union over all test modules covers the whole registry)
+COVERED_POINTS = (
+    "wal.append.pre_write",
+    "wal.append.mid_write",
+    "wal.append.post_write",
+    "wal.truncate.mid_replace",
+    "snapshot.mid_write",
+    "snapshot.mid_rename",
+    "snapshot.post_publish",
+    "checkpoint.mid_write",
+)
+
+
+# -- fault-injection harness --------------------------------------------------
+def test_faultpoint_unregistered_is_hard_error():
+    with pytest.raises(RuntimeError, match="unregistered"):
+        faultpoint("no.such.point")
+
+
+def test_fault_plan_nth_and_times():
+    name = "wal.append.pre_write"
+    plan = FaultPlan({name: 3})
+    hits = [plan.should_fire(name) for _ in range(6)]
+    assert hits == [False, False, True, False, False, False]
+    plan = FaultPlan({name: FaultRule(nth=2, times=None)})
+    assert [plan.should_fire(name) for _ in range(4)] == \
+        [False, True, False, False]
+
+
+def test_fault_plan_prob_deterministic():
+    name = "wal.append.pre_write"
+    runs = []
+    for _ in range(2):
+        plan = FaultPlan({name: FaultRule(prob=0.5, times=None)}, seed=7)
+        runs.append([plan.should_fire(name) for _ in range(32)])
+    assert runs[0] == runs[1]
+    assert any(runs[0]) and not all(runs[0])
+
+
+def test_inject_scopes_the_plan():
+    assert "wal.append.pre_write" in FAULT_POINTS
+    with inject(FaultPlan({"wal.append.pre_write": 1})) as plan:
+        with pytest.raises(InjectedFault) as ei:
+            faultpoint("wal.append.pre_write")
+        assert ei.value.point == "wal.append.pre_write"
+        assert plan.fired["wal.append.pre_write"] == 1
+    faultpoint("wal.append.pre_write")  # disarmed outside the block
+
+
+# -- WAL unit tests -----------------------------------------------------------
+def _wal_records(n=3):
+    rng = np.random.default_rng(0)
+    recs = []
+    for i in range(n):
+        v = rng.standard_normal((2 + i, 4)).astype(np.float32)
+        recs.append((D.REC_INSERT, D._pack_insert(v, [(1, 2)] * len(v))))
+    recs.append((D.REC_DELETE, D._pack_delete(np.array([3, 5], np.int64))))
+    recs.append((D.REC_FLUSH, b""))
+    return recs
+
+
+def test_wal_roundtrip(tmp_path):
+    wal = D.WriteAheadLog(tmp_path / "wal.log")
+    recs = _wal_records()
+    for rtype, payload in recs:
+        wal.append(rtype, payload)
+    wal.close()
+    got, valid = D.replay_wal(tmp_path / "wal.log")
+    assert valid == (tmp_path / "wal.log").stat().st_size
+    assert [(t, p) for _, t, p in got] == recs
+    assert [lsn for lsn, _, _ in got] == list(range(1, len(recs) + 1))
+    v, ls = D._unpack_insert(got[0][2])
+    assert v.shape == (2, 4) and ls == [(1, 2), (1, 2)]
+    assert D._unpack_delete(got[-2][2]).tolist() == [3, 5]
+
+
+def test_wal_torn_tail_detected(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = D.WriteAheadLog(path)
+    for rtype, payload in _wal_records():
+        wal.append(rtype, payload)
+    wal.close()
+    full, valid = D.replay_wal(path)
+    # chop the file mid-way through the last record
+    data = path.read_bytes()
+    path.write_bytes(data[:len(data) - 5])
+    got, got_valid = D.replay_wal(path)
+    assert [r[0] for r in got] == [r[0] for r in full[:-1]]
+    assert got_valid < len(data) - 5  # the torn record is NOT counted valid
+
+
+def test_wal_crc_corruption_detected(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = D.WriteAheadLog(path)
+    for rtype, payload in _wal_records():
+        wal.append(rtype, payload)
+    wal.close()
+    full, _ = D.replay_wal(path)
+    data = bytearray(path.read_bytes())
+    data[-1] ^= 0xFF  # flip a payload byte of the final record
+    path.write_bytes(bytes(data))
+    got, _ = D.replay_wal(path)
+    assert len(got) == len(full) - 1
+
+
+def test_wal_lsn_discontinuity_detected(tmp_path):
+    path = tmp_path / "wal.log"
+    payload = D._pack_delete(np.array([1], np.int64))
+    with open(path, "wb") as f:
+        for lsn in (1, 2, 9):  # 9 breaks contiguity
+            f.write(D._HEADER.pack(D._MAGIC, lsn, D.REC_DELETE,
+                                   zlib.crc32(payload), len(payload)))
+            f.write(payload)
+    got, _ = D.replay_wal(path)
+    assert [r[0] for r in got] == [1, 2]
+
+
+def test_wal_mid_write_fault_leaves_torn_record(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = D.WriteAheadLog(path)
+    wal.append(D.REC_FLUSH, b"")
+    with inject(FaultPlan({"wal.append.mid_write": 1})):
+        with pytest.raises(InjectedFault):
+            wal.append(D.REC_INSERT, _wal_records()[0][1])
+    wal.close()
+    assert path.stat().st_size > D._HEADER.size  # half a record IS on disk
+    got, valid = D.replay_wal(path)
+    assert [(r[0], r[1]) for r in got] == [(1, D.REC_FLUSH)]
+    assert valid == D._HEADER.size  # only the intact record counts
+
+
+# -- fixture ------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(5)
+    N, D_, Q = 900, 16, 24
+    x = rng.standard_normal((N, D_)).astype(np.float32)
+    ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=8, seed=3))
+    qv = rng.standard_normal((Q, D_)).astype(np.float32)
+    qls = generate_query_label_sets(ls, Q - 1, seed=4,
+                                    from_base_fraction=0.75) + [()]
+    pool_x = rng.standard_normal((120, D_)).astype(np.float32)
+    pool_ls = generate_label_sets(120, LabelWorkloadConfig(num_labels=8,
+                                                           seed=21))
+    return dict(x=x, ls=ls, qv=qv, qls=qls, pool_x=pool_x, pool_ls=pool_ls)
+
+
+def _searches(engine, data, ks=(1, 10)):
+    out = []
+    for k in ks:
+        dist, ids = engine.search_batched(data["qv"], data["qls"], k)
+        out.append((np.asarray(dist), np.asarray(ids)))
+    return out
+
+
+def _assert_bitwise_equal(a, b):
+    for (d0, i0), (d1, i1) in zip(a, b):
+        np.testing.assert_array_equal(i0, i1)
+        np.testing.assert_array_equal(d0, d1)
+
+
+def _mutate(eng, data, *, snap_between=False):
+    """A representative mutation schedule: insert, delete, (snapshot?),
+    insert, delete, flush, insert — exercising delta + tombstones +
+    compaction on both sides of the snapshot point."""
+    px, pls = data["pool_x"], data["pool_ls"]
+    ids = eng.insert(px[:40], pls[:40])
+    eng.delete(np.concatenate([ids[:7], np.arange(0, 30, 3)]))
+    if snap_between:
+        eng.snapshot()
+    ids2 = eng.insert(px[40:70], pls[40:70])
+    eng.delete(ids2[:5])
+    eng.flush()
+    eng.insert(px[70:90], pls[70:90])
+
+
+STORAGE_SPECS = [("flat", "f32", {}), ("flat", "int8+rerank", {}),
+                 ("ivf", "f32", {"nprobe": 4})]
+
+
+@pytest.mark.parametrize("backend,storage,params", STORAGE_SPECS,
+                         ids=["flat-f32", "flat-int8", "ivf-f32"])
+def test_recover_parity_snapshot_plus_tail(tmp_path, data, backend,
+                                           storage, params):
+    """Snapshot mid-stream + WAL-tail replay ⇒ recovered engine is
+    search-bit-identical to the uninterrupted survivor."""
+    eng = D.DurableStreamingEngine.build(
+        data["x"], data["ls"], tmp_path / "dur", backend=backend,
+        storage=storage, max_delta_fraction=None,
+        max_tombstone_fraction=None, **params)
+    _mutate(eng, data, snap_between=True)
+    want = _searches(eng, data)
+    sent = eng.sentinel
+    eng.close()
+    rec = D.recover(tmp_path / "dur")
+    assert rec.sentinel == sent
+    _assert_bitwise_equal(_searches(rec, data), want)
+    # the recovered engine is live: it keeps accepting durable mutations
+    rec.insert(data["pool_x"][90:95], data["pool_ls"][90:95])
+    assert rec.sentinel == sent + 5
+    rec.close()
+
+
+def test_recover_without_any_mutations(tmp_path, data):
+    eng = D.DurableStreamingEngine.build(
+        data["x"], data["ls"], tmp_path / "dur", backend="flat",
+        max_delta_fraction=None, max_tombstone_fraction=None)
+    want = _searches(eng, data)
+    eng.close()
+    rec = D.recover(tmp_path / "dur")
+    _assert_bitwise_equal(_searches(rec, data), want)
+    rec.close()
+
+
+def test_recover_falls_back_to_previous_snapshot(tmp_path, data):
+    """Corrupting the newest snapshot must not lose durable state: the
+    previous snapshot plus its (untruncated) WAL tail replays to the
+    identical survivor state."""
+    eng = D.DurableStreamingEngine.build(
+        data["x"], data["ls"], tmp_path / "dur", backend="flat",
+        max_delta_fraction=None, max_tombstone_fraction=None)
+    _mutate(eng, data, snap_between=True)
+    eng.snapshot()
+    want = _searches(eng, data)
+    eng.close()
+    snaps = D._snapshot_paths(tmp_path / "dur")
+    assert len(snaps) == 2  # keep=2: initial snapshot was GC'd
+    # corrupt the NEWEST snapshot's largest blob
+    newest = snaps[-1][1]
+    blob = newest / "base_vectors.npy"
+    raw = bytearray(blob.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    blob.write_bytes(bytes(raw))
+    rec = D.recover(tmp_path / "dur")
+    _assert_bitwise_equal(_searches(rec, data), want)
+    rec.close()
+
+
+def test_snapshot_truncates_wal_past_oldest_retained(tmp_path, data):
+    eng = D.DurableStreamingEngine.build(
+        data["x"], data["ls"], tmp_path / "dur", backend="flat",
+        max_delta_fraction=None, max_tombstone_fraction=None)
+    _mutate(eng, data, snap_between=True)
+    eng.snapshot()
+    snaps = D._snapshot_paths(tmp_path / "dur")
+    retained = [lsn for lsn, _ in snaps][-eng.keep_snapshots:]
+    records, _ = D.replay_wal(tmp_path / "dur" / "wal.log")
+    if records:
+        # nothing the oldest retained snapshot already folded remains
+        assert min(r[0] for r in records) > min(retained)
+    eng.close()
+
+
+def test_fresh_open_on_durable_dir_refuses(tmp_path, data):
+    eng = D.DurableStreamingEngine.build(
+        data["x"][:100], data["ls"][:100], tmp_path / "dur", backend="flat",
+        max_delta_fraction=None, max_tombstone_fraction=None)
+    eng.close()
+    with pytest.raises(D.RecoveryError, match="recover"):
+        D.DurableStreamingEngine.build(
+            data["x"][:100], data["ls"][:100], tmp_path / "dur",
+            backend="flat")
+
+
+def test_recover_empty_dir_raises(tmp_path):
+    with pytest.raises(D.RecoveryError, match="no snapshot"):
+        D.recover(tmp_path / "nothing_here")
+
+
+def test_selection_json_roundtrip(data):
+    eng = LabelHybridEngine.build(data["x"], data["ls"], backend="flat")
+    sel = eng.selection
+    back = D._selection_from_json(
+        json.loads(json.dumps(D._selection_to_json(sel))))
+    assert back.selected == sel.selected
+    assert back.assignment == sel.assignment
+    assert back.cost == sel.cost and back.c == sel.c
+    assert back.rounds == sel.rounds
+
+
+# -- capacity exhaustion (satellite b) ---------------------------------------
+def test_delta_arena_capacity_error():
+    arena = DeltaArena.empty(8, 1, capacity=256, max_capacity=512)
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((512, 8)).astype(np.float32)
+    lw = np.zeros((512, 1), np.int32)
+    arena = arena.appended(v, lw)  # exactly at the ceiling: fine
+    assert arena.count == 512
+    with pytest.raises(CapacityError, match="flush"):
+        arena.appended(v[:1], lw[:1])
+    assert arena.count == 512  # functional append: the raise changed nothing
+    with pytest.raises(CapacityError):
+        DeltaArena.empty(8, 1, capacity=1024, max_capacity=512)
+
+
+def test_streaming_engine_capacity_error_no_state_change(data):
+    se = StreamingEngine.build(
+        data["x"], data["ls"], backend="flat",
+        min_delta_capacity=64, max_delta_capacity=64)
+    ids = se.insert(data["pool_x"][:60], data["pool_ls"][:60])
+    assert ids.size == 60
+    before = se.sentinel
+    with pytest.raises(CapacityError):
+        se.insert(data["pool_x"][60:70], data["pool_ls"][60:70])
+    assert se.sentinel == before          # nothing staged by the failure
+    assert se.delta.count == 60
+    se.flush()                            # the documented operator remedy
+    ids2 = se.insert(data["pool_x"][60:70], data["pool_ls"][60:70])
+    assert ids2.size == 10
+
+
+def test_durable_engine_capacity_error_logs_nothing(tmp_path, data):
+    """Pre-validation keeps unreplayable records out of the WAL: a
+    capacity-rejected insert leaves the log untouched, so recovery never
+    trips over it."""
+    eng = D.DurableStreamingEngine.build(
+        data["x"], data["ls"], tmp_path / "dur", backend="flat",
+        max_delta_fraction=None, max_tombstone_fraction=None,
+        min_delta_capacity=64, max_delta_capacity=64)
+    lsn = eng.wal.lsn
+    with pytest.raises(CapacityError):
+        eng.insert(data["pool_x"][:100], data["pool_ls"][:100])
+    assert eng.wal.lsn == lsn
+    want = _searches(eng, data)
+    eng.close()
+    rec = D.recover(tmp_path / "dur")
+    _assert_bitwise_equal(_searches(rec, data), want)
+    rec.close()
+
+
+# -- Checkpointer crash-atomicity (satellite a) ------------------------------
+def test_checkpointer_survives_mid_write_crash(tmp_path):
+    from repro.checkpoint import Checkpointer
+
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": np.ones(4, np.float32)}
+    ck = Checkpointer(tmp_path / "ck", keep=3)
+    ck.save(1, tree, blocking=True)
+    tree2 = {"w": tree["w"] * 2, "b": tree["b"] * 3}
+    with inject(FaultPlan({"checkpoint.mid_write": 2})):
+        with pytest.raises(InjectedFault):
+            ck.save(2, tree2, blocking=True)
+    # the torn step-2 attempt is invisible: restore sees intact step 1
+    restored, info = ck.restore({"w": np.zeros((3, 4), np.float32),
+                                 "b": np.zeros(4, np.float32)})
+    assert info.step == 1
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    assert not (tmp_path / "ck" / "step_000000002").exists()
+    # and the next save of step 2 cleans the tmp and publishes atomically
+    ck.save(2, tree2, blocking=True)
+    restored, info = ck.restore({"w": np.zeros((3, 4), np.float32),
+                                 "b": np.zeros(4, np.float32)})
+    assert info.step == 2
+    np.testing.assert_array_equal(restored["w"], tree2["w"])
+
+
+def test_atomic_write_bytes_replaces_whole_file(tmp_path):
+    p = tmp_path / "blob.bin"
+    atomic_write_bytes(p, b"aaaa")
+    atomic_write_bytes(p, b"bbbbbb")
+    assert p.read_bytes() == b"bbbbbb"
+    assert not p.with_name(p.name + ".tmp").exists()
+    assert sha256_bytes(b"") == \
+        "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"

@@ -1,0 +1,56 @@
+"""Fault-point registry completeness (ISSUE 8 satellite).
+
+Every registered fault point must be exercised by at least one test — a
+crash site nobody kills is a crash-consistency claim nobody checked.
+Test modules that inject faults declare the points they cover in a
+module-level ``COVERED_POINTS`` tuple; this test imports every host
+module (populating the registry) and every declaring test module, and
+asserts the two sets match exactly in both directions:
+
+  * a registered point with no covering test cannot silently ship;
+  * a stale ``COVERED_POINTS`` entry for a point that no longer exists
+    fails too (the declaration must track the code).
+"""
+from __future__ import annotations
+
+import importlib
+
+# modules that register fault points at import time
+HOST_MODULES = (
+    "repro.core.durability",
+    "repro.core.stream",
+    "repro.serve.engine",
+    "repro.checkpoint",
+)
+
+# test modules that declare the points they exercise
+DECLARING_TESTS = (
+    "test_durability",
+    "test_crash_matrix",
+    "test_serve_containment",
+)
+
+
+def test_every_registered_point_is_exercised():
+    for mod in HOST_MODULES:
+        importlib.import_module(mod)
+    from repro.core.faults import FAULT_POINTS
+
+    covered: set[str] = set()
+    for mod in DECLARING_TESTS:
+        covered |= set(importlib.import_module(mod).COVERED_POINTS)
+
+    registered = set(FAULT_POINTS)
+    missing = registered - covered
+    stale = covered - registered
+    assert not missing, f"registered fault points with no test: {missing}"
+    assert not stale, f"COVERED_POINTS entries not registered: {stale}"
+
+
+def test_every_point_has_a_docstring():
+    for mod in HOST_MODULES:
+        importlib.import_module(mod)
+    from repro.core.faults import FAULT_POINTS
+
+    undocumented = [n for n, doc in FAULT_POINTS.items() if not doc]
+    assert not undocumented, undocumented

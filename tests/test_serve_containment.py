@@ -1,0 +1,169 @@
+"""Serving-layer failure containment (ISSUE 8 serving satellite).
+
+A fault in any serving stage — retrieval dispatch, admission prefill,
+decode step — must never escape :meth:`ServingRuntime.tick`, never strand
+a decoder resident, and never be silently dropped: affected requests are
+retried with bounded deadline-aware backoff and surface as typed
+``FAILED`` results once retries are exhausted.  Corpus mutations surface
+typed :class:`MutationResult` (a capacity-exhausted insert is an operator
+signal, not a crashed serving loop).
+
+Faults are injected deterministically at the ``serve.retrieve`` /
+``serve.decode`` points registered by ``serve/engine.py``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import arch as A
+from repro.configs import reduced_arch
+from repro.core.engine import LabelHybridEngine
+from repro.core.faults import FaultPlan, FaultRule, inject
+from repro.core.stream import StreamingEngine
+from repro.data.pipeline import VectorLabelDataset
+from repro.models.common import init_params
+from repro.serve import (BatchedDecoder, Request, RetrievalAugmentedEngine,
+                         ServeStatus, ServingRuntime)
+
+# fault points this module exercises (see tests/test_fault_registry.py)
+COVERED_POINTS = ("serve.retrieve", "serve.decode")
+
+
+@pytest.fixture(scope="module")
+def fix():
+    spec = reduced_arch("mamba2_130m")
+    params = init_params(jax.random.PRNGKey(0), A.param_specs(spec))
+    ds = VectorLabelDataset(n=800, dim=16, n_labels=8, seed=3)
+    vectors, label_sets = ds.generate()
+    return {"spec": spec, "params": params, "x": vectors, "ls": label_sets}
+
+
+def _runtime(fix, *, streaming=False, max_new=3, **rt_kwargs):
+    decoder = BatchedDecoder(fix["spec"], fix["params"], batch_slots=3,
+                             max_len=64)
+    if streaming:
+        eli = StreamingEngine.build(fix["x"], fix["ls"], mode="eis", c=0.2,
+                                    backend="flat", max_delta_fraction=None,
+                                    max_tombstone_fraction=None,
+                                    min_delta_capacity=64,
+                                    max_delta_capacity=64)
+    else:
+        eli = LabelHybridEngine.build(fix["x"], fix["ls"], mode="eis",
+                                      c=0.2, backend="flat")
+    rag = RetrievalAugmentedEngine(decoder, eli, k=3, min_bucket=4)
+    rt = ServingRuntime(rag, max_coalesce=4, latency_budget_s=0.0,
+                        warmup=False, **rt_kwargs)
+    return rt, max_new
+
+
+def _reqs(fix, n, *, max_new=3, deadline=None, seed=7):
+    rng = np.random.default_rng(seed)
+    vocab = fix["spec"].cfg.vocab
+    ls_pool = [(0,), (1, 2), (), (3,)]
+    return [Request(prompt=rng.integers(0, vocab, size=5 + (i % 4)
+                                        ).astype(np.int32),
+                    max_new=max_new, label_set=ls_pool[i % len(ls_pool)],
+                    rid=i, deadline=deadline)
+            for i in range(n)]
+
+
+def test_retrieval_fault_retries_to_ok(fix):
+    """One failed retrieval dispatch: the whole micro-batch retries after
+    backoff and completes OK — a transient fault costs latency, never an
+    answer."""
+    rt, _ = _runtime(fix, retry_backoff_s=1e-3)
+    reqs = _reqs(fix, 3)
+    with inject(FaultPlan({"serve.retrieve": FaultRule(nth=1)})) as plan:
+        for r in reqs:
+            rt.submit(r)
+        done = rt.run_until_idle(max_seconds=120)
+    assert plan.fired["serve.retrieve"] == 1
+    assert [r.status for r in done] == [ServeStatus.OK] * 3
+    assert all(len(r.request.generated) == 3 for r in done)
+    st = rt.stats()
+    assert st.retries == 3 and st.failed == 0
+    assert all(r.attempts == 1 and r.error is not None for r in done)
+
+
+def test_retrieval_fault_exhausts_retries_to_failed(fix):
+    """A permanently failing dependency: every request surfaces as a
+    typed FAILED result with the error attached — never an escaped
+    exception, and the runtime drains to idle."""
+    rt, _ = _runtime(fix, retry_backoff_s=1e-3, max_retries=2)
+    reqs = _reqs(fix, 3)
+    with inject(FaultPlan({"serve.retrieve":
+                           FaultRule(prob=1.0, nth=None, times=None)})):
+        for r in reqs:
+            rt.submit(r)
+        done = rt.run_until_idle(max_seconds=120)
+    assert rt.idle
+    assert [r.status for r in done] == [ServeStatus.FAILED] * 3
+    assert all("InjectedFault" in r.error for r in done)
+    assert all(r.attempts == 3 for r in done)  # initial + 2 retries
+    st = rt.stats()
+    assert st.failed == 3 and st.retries == 6 and st.completed_ok == 0
+
+
+def test_decode_fault_evicts_all_residents_then_recovers(fix):
+    """A failed decode step poisons the slot batch: every resident is
+    evicted (no stranded slots, no orphaned admission stragglers) and
+    re-served from retrieval — then completes OK."""
+    rt, _ = _runtime(fix, retry_backoff_s=1e-3)
+    reqs = _reqs(fix, 3, max_new=3)
+    with inject(FaultPlan({"serve.decode": FaultRule(nth=1)})) as plan:
+        for r in reqs:
+            rt.submit(r)
+        rt.tick()  # retrieve + admit + the failing decode step
+        assert plan.fired.get("serve.decode") == 1
+        # containment: nothing stranded in the decoder
+        assert not rt.decoder.live.any()
+        assert not rt.decoder._admit_done
+        assert not rt.idle  # the evicted requests are requeued, not lost
+        done = rt.run_until_idle(max_seconds=120)
+    assert [r.status for r in done] == [ServeStatus.OK] * 3
+    # re-serve resets generation: exactly max_new tokens, no accumulation
+    assert all(len(r.request.generated) == 3 for r in done)
+    assert rt.stats().retries == 3 and rt.stats().failed == 0
+
+
+def test_deadline_aware_retry_fails_fast(fix):
+    """A retry whose backoff cannot land before the request deadline is
+    pointless: the request fails immediately (attempts == 1, zero retries
+    scheduled) instead of burning the backoff and timing out."""
+    rt, _ = _runtime(fix, retry_backoff_s=5.0)
+    reqs = _reqs(fix, 2, deadline=time.monotonic() + 1.0)
+    with inject(FaultPlan({"serve.retrieve": FaultRule(nth=1)})):
+        for r in reqs:
+            rt.submit(r)
+        t0 = time.monotonic()
+        done = rt.run_until_idle(max_seconds=30)
+    assert time.monotonic() - t0 < 1.0  # did NOT wait out the 5s backoff
+    assert [r.status for r in done] == [ServeStatus.FAILED] * 2
+    assert all(r.attempts == 1 for r in done)
+    st = rt.stats()
+    assert st.retries == 0 and st.failed == 2 and st.deadline_misses == 0
+
+
+def test_insert_capacity_surfaces_typed_mutation_result(fix):
+    """ISSUE 8 satellite: a delta arena at its growth ceiling turns
+    ``ServingRuntime.insert`` into an ``ok=False`` MutationResult — the
+    serving loop keeps serving."""
+    rt, _ = _runtime(fix, streaming=True)
+    rng = np.random.default_rng(3)
+    ls_pool = [fix["ls"][i % len(fix["ls"])] for i in range(100)]
+    res = rt.insert(rng.standard_normal((100, 16)).astype(np.float32),
+                    ls_pool)
+    assert not res.ok and res.ids is None
+    assert "CapacityError" in res.error
+    ok = rt.insert(rng.standard_normal((8, 16)).astype(np.float32),
+                   ls_pool[:8])
+    assert ok.ok and ok.error is None and ok.ids.shape == (8,)
+    # the loop still serves after the rejected mutation
+    for r in _reqs(fix, 2, max_new=2):
+        rt.submit(r)
+    done = rt.run_until_idle(max_seconds=120)
+    assert [r.status for r in done] == [ServeStatus.OK] * 2

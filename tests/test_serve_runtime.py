@@ -112,7 +112,9 @@ def test_runtime_zero_new_traces_streaming_mutations_in_flight(fix):
     rng = np.random.default_rng(5)
     ins = rng.standard_normal((cap0 + 44, 16)).astype(np.float32)
     ls_ins = [fix["ls"][i % len(fix["ls"])] for i in range(len(ins))]
-    ids = rt.insert(ins, ls_ins)
+    mres = rt.insert(ins, ls_ins)
+    assert mres.ok and mres.error is None
+    ids = mres.ids
     assert se.delta.capacity == 2 * cap0  # grew through a tier
     rt.delete(ids[:3])  # tombstones in flight too
     _submit_and_drain(rt, fix, sizes=(3, 6), seed0=300)

@@ -16,6 +16,24 @@ import numpy as np
 from repro.core import (LabelWorkloadConfig, brute_force_filtered,
                         generate_label_sets, generate_query_label_sets,
                         recall_at_k)
+from repro.obs import metrics as obs_metrics
+
+
+def latency_percentiles(lat_s: list[float]) -> dict:
+    """Exact order-statistic percentiles of a pooled latency sample, in
+    ms — the single home of the benchmark quantile convention (serving
+    benchmarks pool latencies across reps BEFORE taking percentiles;
+    a p99 of a single rep is one order statistic of a small sample)."""
+    a = np.asarray(lat_s, dtype=np.float64)
+    if a.size == 0:
+        return {"p50_ms": None, "p99_ms": None, "mean_ms": None,
+                "max_ms": None}
+    return {
+        "p50_ms": float(np.percentile(a, 50) * 1e3),
+        "p99_ms": float(np.percentile(a, 99) * 1e3),
+        "mean_ms": float(a.mean() * 1e3),
+        "max_ms": float(a.max() * 1e3),
+    }
 
 
 def make_dataset(n=20_000, d=32, n_labels=12, q=200, distribution="zipf",
@@ -77,7 +95,16 @@ def measure_modes(eng, qv, qls, k, gt_i, n, repeats=3):
 
 def emit_json(payload: dict, name: str, out_dir: str | Path = "."):
     """Write ``BENCH_<name>.json`` — the machine-readable perf artifact
-    (CI and later sessions diff these to track the perf trajectory)."""
+    (CI and later sessions diff these to track the perf trajectory).
+
+    A snapshot of the process-wide metrics registry rides along under a
+    ``"metrics"`` key (callers can pre-set the key to override), so every
+    benchmark artifact carries the elastic-factor / dispatch / recompile
+    accounting of the run that produced it.
+    """
+    payload = dict(payload)
+    if obs_metrics.enabled():
+        payload.setdefault("metrics", obs_metrics.snapshot())
     path = Path(out_dir) / f"BENCH_{name}.json"
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
     print(f"wrote {path}", flush=True)

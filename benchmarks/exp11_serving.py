@@ -41,7 +41,7 @@ from repro.serve import (
     ServingRuntime,
 )
 
-from .common import emit, emit_json, make_dataset
+from .common import emit, emit_json, latency_percentiles, make_dataset
 
 # long enough that decode dominates service time (the serving regime:
 # a synchronous server's head-of-line penalty scales with generation
@@ -108,16 +108,6 @@ def bursty_offsets(n, qps, rng, burst=8):
     starts = np.arange(n_bursts) * (burst / qps)
     jitter = rng.exponential(0.1 / qps, size=n)
     return np.repeat(starts, burst)[:n] + jitter
-
-
-def _percentiles(lat):
-    lat = np.asarray(lat)
-    return {
-        "p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "p99_ms": float(np.percentile(lat, 99) * 1e3),
-        "mean_ms": float(lat.mean() * 1e3),
-        "max_ms": float(lat.max() * 1e3),
-    }
 
 
 def run_baseline(rag, arrivals, max_seconds=300.0, max_batch=64):
@@ -236,11 +226,17 @@ def run(tiny: bool = False, out_dir: str = "."):
                             "decode_steps": st.decode_steps,
                             "deadline_misses": st.deadline_misses,
                             "new_segmented_traces": st.new_segmented_traces,
+                            # registry-histogram quantiles: coarser than
+                            # the pooled exact percentiles below (fixed
+                            # buckets, per-runtime-instance) but free at
+                            # serve time — the production-side number
+                            "latency_p50_s": st.latency_p50_s,
+                            "latency_p99_s": st.latency_p99_s,
                         }
                     pooled[system].extend(lat)
             gc.enable()
             for system in ("baseline", "runtime"):
-                point[system] = _percentiles(pooled[system])
+                point[system] = latency_percentiles(pooled[system])
             b99 = point["baseline"]["p99_ms"]
             r99 = point["runtime"]["p99_ms"]
             point["p99_speedup"] = b99 / r99

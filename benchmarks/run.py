@@ -9,13 +9,21 @@ explicit ``--out-dir`` a tiny run writes its JSON artifact to a temp dir,
 never over the recorded BENCH_*.json.  ``--tiny-only`` restricts the
 selection to benchmarks whose ``run`` accepts a ``tiny`` parameter.
 ``--out-dir`` routes every produced JSON into one directory (the CI job
-uploads it as a workflow artifact for PR-to-PR perf eyeballing)."""
+uploads it as a workflow artifact for PR-to-PR perf eyeballing).
+``--trace`` turns on span tracing and writes one Chrome-trace-event file
+``TRACE_<name>.json`` per benchmark next to the JSON artifacts; the
+tracer is reset between benchmarks so each file covers exactly one run.
+``--metrics`` prints the Prometheus text exposition of the process-wide
+registry after the last benchmark."""
 import argparse
 import inspect
 import pathlib
 import sys
 import time
 import traceback
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from . import (exp1_qps_recall, exp2_index_cost, exp3_shard_scaling,
                exp5_distributions, exp6_label_universe, exp7_vs_optimal,
@@ -51,16 +59,27 @@ def main() -> int:
     ap.add_argument("--out-dir", default="",
                     help="directory for JSON artifacts (benchmarks that "
                          "emit one); created if missing")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable span tracing; write TRACE_<name>.json "
+                         "per benchmark into --out-dir (or cwd)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus exposition after all "
+                         "benchmarks finish")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(ALL)
     if args.tiny_only:
         names = [n for n in names if tiny_capable(n)]
     if args.out_dir:
         pathlib.Path(args.out_dir).mkdir(parents=True, exist_ok=True)
+    trace_dir = pathlib.Path(args.out_dir or ".")
+    if args.trace:
+        obs_trace.enable()
     print("name,us_per_call,derived")
     failed = []
     for name in names:
         t0 = time.time()
+        if args.trace:
+            obs_trace.reset()
         try:
             params = inspect.signature(ALL[name]).parameters
             kwargs = {}
@@ -73,6 +92,12 @@ def main() -> int:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+        if args.trace:
+            path = trace_dir / f"TRACE_{name}.json"
+            obs_trace.get_tracer().write(path)
+            print(f"# wrote {path}", flush=True)
+    if args.metrics:
+        print(obs_metrics.render(), flush=True)
     if failed:
         print(f"# FAILED: {failed}")
     return 1 if failed else 0

@@ -1,8 +1,13 @@
 """Quickstart: build an ELI engine over a labelled vector dataset and run
 label-hybrid AKNN queries — the paper's core loop in ~40 lines.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--metrics]
+
+``--metrics`` prints the Prometheus text exposition of the query-path
+telemetry registry (elastic factors, dispatch counts, mutation and WAL
+accounting) after the walkthrough.
 """
+import sys
 
 from repro.core.engine import LabelHybridEngine, brute_force_filtered
 from repro.core import recall_at_k
@@ -107,3 +112,11 @@ assert np.array_equal(np.asarray(want[1]), np.asarray(got[1]))
 print(f"recovered at lsn {recovered.wal.lsn}: search bit-identical "
       f"(torn delete correctly dropped)")
 recovered.close()
+
+# 9. observability (DESIGN.md §6): everything above was metered — the
+#    process-wide registry has been counting searches, elastic factors,
+#    mutations, and WAL records the whole time.
+if "--metrics" in sys.argv:
+    from repro.obs import metrics
+
+    print(metrics.render())

@@ -5,7 +5,7 @@ model itself, retrieves label-filtered neighbors through the ELI-selected
 indexes, splices them as context, and generates with slot-based batching —
 the "vector DB next to the LLM" deployment the paper targets.
 
-    PYTHONPATH=src python examples/rag_serve.py --arch mamba2_130m
+    PYTHONPATH=src python examples/rag_serve.py --arch mamba2_130m [--metrics]
 """
 import argparse
 
@@ -15,11 +15,17 @@ from repro.launch import serve
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2_130m")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the telemetry registry exposition at exit")
     args = ap.parse_args()
     import sys
     sys.argv = ["serve", "--arch", args.arch, "--requests", "10",
                 "--slots", "4", "--max-new", "10"]
     serve.main()
+    if args.metrics:
+        from repro.obs import metrics
+
+        print(metrics.render())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,161 @@
+"""CI obs-smoke: exercise every instrumented layer, then validate the
+telemetry surfaces.
+
+Runs a tiny pass through each of the five metered layers — engine search
+(flat backend), streaming mutations, WAL + snapshot durability, the
+serving runtime, and the segmented-topk kernel dispatcher — then checks:
+
+  * ``metrics.render()`` is schema-valid Prometheus text exposition
+    (``validate_exposition`` returns no problems);
+  * one required metric family per layer is present, including the
+    elastic-factor pair (``eli_elastic_factor_realized`` vs
+    ``eli_elastic_factor_bound``);
+  * ``metrics.snapshot()`` is JSON-serializable;
+  * the tracer produced events and query cards and its ``to_json()``
+    payload is a well-formed Chrome-trace-event document.
+
+Exit status is nonzero on any failure, so the CI step fails loudly.
+
+    PYTHONPATH=src python scripts/obs_smoke.py
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro import arch as A
+from repro.configs import reduced_arch
+from repro.core import DurableStreamingEngine, StreamingEngine
+from repro.core.engine import LabelHybridEngine
+from repro.data.pipeline import VectorLabelDataset
+from repro.models.common import init_params
+from repro.obs import metrics, trace, validate_exposition
+from repro.serve import BatchedDecoder, Request, RetrievalAugmentedEngine, ServingRuntime
+
+# one family per instrumented layer; the elastic-factor pair is the
+# paper-facing accounting the issue pins
+REQUIRED_SERIES = (
+    "eli_search_latency_seconds",       # core/engine.py
+    "eli_elastic_factor_realized",      # core/engine.py (paper Fig. 6 axis)
+    "eli_elastic_factor_bound",         # core/engine.py (configured c)
+    "eli_stream_mutations_total",       # core/stream.py
+    "eli_wal_records_total",            # core/durability.py
+    "eli_serve_submitted_total",        # serve/runtime.py
+    "eli_segmented_dispatches_total",   # kernels/ops.py
+)
+
+
+def _exercise_engine_and_stream() -> None:
+    ds = VectorLabelDataset(n=1200, dim=16, n_labels=8, seed=3)
+    x, ls = ds.generate()
+    qv, qls = ds.queries(16)
+    eng = LabelHybridEngine.build(x, ls, mode="eis", c=0.2, backend="flat")
+    eng.search(qv, qls, k=5)
+    eng.stats()
+
+    stream = StreamingEngine(eng)
+    extra = VectorLabelDataset(n=40, dim=16, n_labels=8, seed=4)
+    nx, nls = extra.generate()
+    ids = stream.insert(nx, nls)
+    stream.search(qv[:4], qls[:4], k=5)
+    stream.delete(ids[:10])
+    stream.flush()
+
+
+def _exercise_durability() -> None:
+    ds = VectorLabelDataset(n=600, dim=16, n_labels=8, seed=5)
+    x, ls = ds.generate()
+    extra = VectorLabelDataset(n=20, dim=16, n_labels=8, seed=6)
+    nx, nls = extra.generate()
+    root = Path(tempfile.mkdtemp(prefix="obs_smoke_dur_")) / "engine"
+    dur = DurableStreamingEngine.build(
+        x, ls, mode="eis", c=0.2, backend="flat", directory=root
+    )
+    ids = dur.insert(nx, nls)
+    dur.delete(ids[:5])
+    dur.snapshot()
+    dur.close()
+
+
+def _exercise_serving() -> None:
+    spec = reduced_arch("mamba2_130m")
+    params = init_params(jax.random.PRNGKey(0), A.param_specs(spec))
+    ds = VectorLabelDataset(n=800, dim=16, n_labels=8, seed=7)
+    x, ls = ds.generate()
+    eli = LabelHybridEngine.build(x, ls, mode="eis", c=0.2, backend="flat")
+    dec = BatchedDecoder(spec, params, batch_slots=2, max_len=32)
+    rag = RetrievalAugmentedEngine(dec, eli, k=3, min_bucket=4)
+    rt = ServingRuntime(rag, queue_depth=16, max_coalesce=4, warmup=False)
+    rng = np.random.default_rng(11)
+    vocab = spec.cfg.vocab
+    for i in range(4):
+        prompt = rng.integers(0, vocab, size=6).astype(np.int32)
+        rt.submit(Request(prompt=prompt, max_new=1, label_set=(0,), rid=i))
+    rt.run_until_idle()
+    rt.stats()
+
+
+def main() -> int:
+    problems: list[str] = []
+    trace.enable()
+    trace.reset()
+
+    _exercise_engine_and_stream()
+    _exercise_durability()
+    _exercise_serving()
+
+    # -- exposition: schema plus per-layer coverage ---------------------
+    text = metrics.render()
+    problems += validate_exposition(text)
+    for name in REQUIRED_SERIES:
+        if f"# TYPE {name} " not in text:
+            problems.append(f"missing required series: {name}")
+
+    # -- snapshot: must round-trip through json --------------------------
+    try:
+        json.dumps(metrics.snapshot())
+    except (TypeError, ValueError) as e:
+        problems.append(f"snapshot not JSON-serializable: {e}")
+
+    # -- tracer: events + query cards, valid trace document --------------
+    doc = trace.get_tracer().to_json()
+    if not doc.get("traceEvents"):
+        problems.append("tracer produced no events")
+    elif not all(
+        ev.get("ph") in ("X", "i") and "ts" in ev for ev in doc["traceEvents"]
+    ):
+        problems.append("malformed trace events (expect ph X/i with ts)")
+    if not doc.get("queryCards"):
+        problems.append("tracer produced no query cards")
+    else:
+        card = doc["queryCards"][0]
+        for field in ("query_key", "elastic_factor", "bound"):
+            if field not in card:
+                problems.append(f"query card missing field: {field}")
+    try:
+        json.dumps(doc)
+    except (TypeError, ValueError) as e:
+        problems.append(f"trace document not JSON-serializable: {e}")
+
+    trace.disable()
+    if problems:
+        for p in problems:
+            print(f"OBS-SMOKE FAIL: {p}", file=sys.stderr)
+        return 1
+    n_series = text.count("# TYPE ")
+    print(
+        f"obs-smoke OK: {n_series} metric families, "
+        f"{len(doc['traceEvents'])} trace events, "
+        f"{len(doc['queryCards'])} query cards"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,7 +14,7 @@ Shape policy (per the assignment matrix):
     long_500k    seq 524288 global_batch 1     -> decode; SSM/hybrid/
                  window archs only (DESIGN.md §4 records the skips)
 
-Sharding policy (DESIGN.md §6): training uses FSDP rules (EMBED axis over
+Sharding policy (DESIGN.md §7): training uses FSDP rules (EMBED axis over
 'data'; kimi-k2 additionally over 'pod') with ZeRO-sharded optimizer
 moments; serving uses plain TP for ≤15B models and FSDP for kimi-k2;
 long-context decode swaps to the flash-decoding layout (KV seq over

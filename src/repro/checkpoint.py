@@ -10,7 +10,7 @@ Layout (one directory per step, atomic rename on completion):
         001_params.blocks.attn.wq.npy
         ...
 
-Production notes (DESIGN.md §6):
+Production notes (DESIGN.md §7):
   * **async** — `save()` snapshots device arrays to host (device_get) and
     hands the serialization to a writer thread; the train loop's bubble is
     the device->host copy only.  `wait()` joins before the next save or

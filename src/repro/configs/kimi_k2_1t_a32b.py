@@ -5,7 +5,7 @@
 d_ff_expert 2048 + one shared expert, dense-layer d_ff 18432,
 vocab 163840, SwiGLU.
 
-Capacity notes (DESIGN.md §6): 1.04T params ⇒ bf16 weights alone are
+Capacity notes (DESIGN.md §7): 1.04T params ⇒ bf16 weights alone are
 2.08 TB.  Training shards parameters AND gradients over
 (pod, data, model) = 512 ways (FSDP_POD rules) and uses **Adafactor**
 (factored second moment ≈ 0.1% of AdamW state) — the only optimizer

@@ -55,6 +55,7 @@ import os
 import re
 import shutil
 import struct
+import time
 import zlib
 from pathlib import Path
 from typing import Sequence
@@ -63,6 +64,8 @@ import numpy as np
 
 from ..atomicio import fsync_dir, publish_dir, sha256_bytes
 from ..index.base import check_global_id_contract
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .eis import EISResult
 from .engine import LabelHybridEngine
 from .faults import faultpoint, register_fault_point
@@ -87,8 +90,51 @@ _MAGIC = b"WALR"
 _HEADER = struct.Struct("<4sQBIQ")   # magic, lsn, type, crc32, payload len
 
 REC_INSERT, REC_DELETE, REC_FLUSH = 1, 2, 3
+_RTYPE_NAMES = {REC_INSERT: "insert", REC_DELETE: "delete",
+                REC_FLUSH: "flush"}
 
 _SNAP_RE = re.compile(r"snap_(\d{12})")
+
+# Durability telemetry (DESIGN.md §6.3).  Instruments record only AFTER
+# the guarded operation succeeds, so an injected crash mid-append leaves
+# the counters exactly as a real crash would — nothing acknowledged,
+# nothing counted.  The fsync histogram is observed from the syncer
+# thread (the registry lock makes that safe).
+_M_WAL_REC = _metrics.counter(
+    "eli_wal_records_total", "WAL records appended by type", ("rtype",),
+)
+_M_WAL_BYTES = _metrics.counter(
+    "eli_wal_bytes_total", "bytes appended to the WAL (header + payload)",
+)
+_M_WAL_APPEND_S = _metrics.histogram(
+    "eli_wal_append_seconds", "WAL append wall time (excl. deferred fsync)",
+)
+_M_WAL_FSYNC_S = _metrics.histogram(
+    "eli_wal_fsync_seconds", "WAL fsync barrier wall time",
+)
+_M_WAL_TRUNC = _metrics.counter(
+    "eli_wal_truncations_total", "post-snapshot WAL tail rewrites",
+)
+_M_WAL_LSN = _metrics.gauge(
+    "eli_wal_lsn", "last durably appended log sequence number",
+)
+_M_SNAP = _metrics.counter(
+    "eli_snapshots_total", "snapshots published",
+)
+_M_SNAP_S = _metrics.histogram(
+    "eli_snapshot_seconds", "snapshot write+publish+prune wall time",
+)
+_M_RECOVER_S = _metrics.histogram(
+    "eli_recover_seconds", "recovery phase wall time", ("phase",),
+)
+_M_REPLAYED = _metrics.counter(
+    "eli_recover_replayed_records_total",
+    "WAL records replayed past the snapshot during recovery",
+)
+_M_SNAP_FALLBACK = _metrics.counter(
+    "eli_recover_snapshot_fallbacks_total",
+    "recoveries that skipped a corrupt newest snapshot",
+)
 
 
 class RecoveryError(RuntimeError):
@@ -168,6 +214,8 @@ class WriteAheadLog:
         record is still fully written + flushed, only the disk barrier
         is deferred.  The caller must :meth:`sync` before acknowledging.
         """
+        t0 = (time.perf_counter()
+              if _metrics.enabled() or _trace.enabled() else 0.0)
         lsn = self.lsn + 1
         buf = (_HEADER.pack(_MAGIC, lsn, rtype, zlib.crc32(payload),
                             len(payload)) + payload)
@@ -187,12 +235,30 @@ class WriteAheadLog:
         # durable system has — recovery MUST apply this record
         faultpoint("wal.append.post_write")
         self.lsn = lsn
+        if _metrics.enabled():
+            _M_WAL_REC.labels(_RTYPE_NAMES.get(rtype, str(rtype))).inc()
+            _M_WAL_BYTES.inc(len(buf))
+            _M_WAL_APPEND_S.observe(time.perf_counter() - t0)
+            _M_WAL_LSN.set(lsn)
+        if _trace.enabled():
+            _trace.get_tracer().complete("wal.append", t0,
+                                         time.perf_counter(), lsn=lsn,
+                                         nbytes=len(buf))
         return lsn
 
     def sync(self) -> None:
         """Disk barrier for everything appended so far (no-op when the
-        log was opened with ``fsync=False``)."""
-        if self.fsync:
+        log was opened with ``fsync=False``).  May run on the durability
+        layer's syncer thread — the instruments are thread-safe."""
+        if not self.fsync:
+            return
+        if _metrics.enabled() or _trace.enabled():
+            t0 = time.perf_counter()
+            os.fsync(self._f.fileno())
+            t1 = time.perf_counter()
+            _M_WAL_FSYNC_S.observe(t1 - t0)
+            _trace.get_tracer().complete("wal.fsync", t0, t1)
+        else:
             os.fsync(self._f.fileno())
 
     def truncate_through(self, keep_lsn: int) -> None:
@@ -218,6 +284,7 @@ class WriteAheadLog:
         if self.fsync:
             fsync_dir(self.path.parent)
         self._f = open(self.path, "ab")
+        _M_WAL_TRUNC.inc()
 
     def close(self) -> None:
         self._f.close()
@@ -527,6 +594,8 @@ class DurableStreamingEngine:
         already folded into the oldest RETAINED snapshot — so corruption
         of the newest can always fall back to the previous one plus its
         log tail."""
+        t0 = (time.perf_counter()
+              if _metrics.enabled() or _trace.enabled() else 0.0)
         lsn = self.wal.lsn
         final = self.dir / f"snap_{lsn:012d}"
         if final.exists():
@@ -544,6 +613,12 @@ class DurableStreamingEngine:
             shutil.rmtree(p, ignore_errors=True)
         retained = _snapshot_paths(self.dir)
         self.wal.truncate_through(retained[0][0])
+        if _metrics.enabled():
+            _M_SNAP.inc()
+            _M_SNAP_S.observe(time.perf_counter() - t0)
+        if _trace.enabled():
+            _trace.get_tracer().complete("durability.snapshot", t0,
+                                         time.perf_counter(), lsn=lsn)
         return final
 
     def close(self) -> None:
@@ -587,6 +662,8 @@ def recover(directory: str | Path, *, fsync: bool = True,
     every intact record past the snapshot replayed through the public
     mutation methods.  Returns a live :class:`DurableStreamingEngine`
     positioned at the last durable LSN."""
+    telem = _metrics.enabled() or _trace.enabled()
+    t_start = time.perf_counter() if telem else 0.0
     directory = Path(directory)
     snaps = _snapshot_paths(directory)
     if not snaps:
@@ -602,7 +679,10 @@ def recover(directory: str | Path, *, fsync: bool = True,
     if manifest is None:
         raise RecoveryError(
             f"no valid snapshot under {directory}: {'; '.join(errors)}")
+    if errors and _metrics.enabled():
+        _M_SNAP_FALLBACK.inc()
     se = _restore_engine(manifest, blobs)
+    t_restore = time.perf_counter() if telem else 0.0
     wal_path = directory / "wal.log"
     records: list[tuple[int, int, bytes]] = []
     if wal_path.exists():
@@ -634,6 +714,19 @@ def recover(directory: str | Path, *, fsync: bool = True,
         tmp_wal.unlink()
     last = max(manifest["wal_lsn"],
                records[-1][0] if records else 0)
+    if telem:
+        t_end = time.perf_counter()
+        replayed = sum(1 for r in records if r[0] > manifest["wal_lsn"])
+        if _metrics.enabled():
+            _M_REPLAYED.inc(replayed)
+            _M_RECOVER_S.labels("load_snapshot").observe(t_restore - t_start)
+            _M_RECOVER_S.labels("replay").observe(t_end - t_restore)
+            _M_RECOVER_S.labels("total").observe(t_end - t_start)
+        if _trace.enabled():
+            tr = _trace.get_tracer()
+            tr.complete("recover.load_snapshot", t_start, t_restore)
+            tr.complete("recover.replay", t_restore, t_end,
+                        records=replayed)
     return DurableStreamingEngine(se, directory, fsync=fsync,
                                   keep_snapshots=keep_snapshots,
                                   _recovered_lsn=last)

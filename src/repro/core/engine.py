@@ -37,6 +37,8 @@ from ..index.base import (Arena, as_row_ids, check_global_id_contract,
                           dispatch_padded, fallback_search_padded,
                           get_index_builder, parse_storage, pow2_bucket)
 from ..kernels import ops as _kernel_ops
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .eis import EISResult, greedy_eis
 from .elastic import min_elastic_factor
 from .estimator import sampled_group_table
@@ -44,6 +46,165 @@ from .groups import EMPTY_KEY, GroupTable, observed_query_keys
 from .labels import (encode_label_set, encode_many, key_contains,
                      key_to_mask, mask_key, masks_to_int32_words)
 from .sis import SISResult, sis
+
+
+# Search-path telemetry (DESIGN.md §6.3).  Everything here is host-side
+# bookkeeping gated on the obs enabled flags: with telemetry off the whole
+# apparatus is one boolean check per batch, and with it on nothing touches
+# jax — search bits and the jit caches are untouched either way (pinned by
+# tests/test_obs_invariants.py).
+_M_QUERIES = _metrics.counter(
+    "eli_search_queries_total", "queries served by the batched executor",
+    ("backend",),
+)
+_M_BATCHES = _metrics.counter(
+    "eli_search_batches_total", "search_batched calls", ("backend",),
+)
+_M_LAT = _metrics.histogram(
+    "eli_search_latency_seconds",
+    "end-to-end search_batched wall time by launch signature",
+    ("backend", "bucket", "dtype"),
+)
+_M_STAGE = _metrics.histogram(
+    "eli_search_stage_seconds",
+    "search_batched phase split: route vs dispatch+collect",
+    ("stage",),
+)
+_M_EF = _metrics.histogram(
+    "eli_elastic_factor_realized",
+    "per-query realized elastic factor |S(L_q)|/|I_i| at the routed index",
+    ("backend",),
+    buckets=(0.05, 0.1, 0.15, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0),
+)
+_M_EF_BOUND = _metrics.gauge(
+    "eli_elastic_factor_bound",
+    "configured elastic-factor bound c of the live selection",
+)
+_M_EF_VIOL = _metrics.counter(
+    "eli_elastic_bound_violations_total",
+    "queries whose realized elastic factor fell below the configured bound",
+)
+_M_UNSEEN = _metrics.counter(
+    "eli_route_unseen_keys_total",
+    "queries routed through the fallback path (key outside the workload)",
+)
+_M_RECOMPILE = _metrics.counter(
+    "eli_search_recompiles_total",
+    "search batches that grew the _segmented_topk jit cache post-warmup",
+)
+_M_ENGINE_GAUGE = _metrics.gauge(
+    "eli_engine_rows", "engine row accounting", ("state",),
+)
+_M_ENGINE_BYTES = _metrics.gauge(
+    "eli_engine_nbytes", "engine device-memory split", ("component",),
+)
+_M_SELECTED = _metrics.gauge(
+    "eli_selected_indexes", "physical indexes in the live selection",
+)
+_M_ENTRIES = _metrics.gauge(
+    "eli_selection_entries_total", "Σ|I| rows stored across the selection",
+)
+_M_ACHIEVED = _metrics.gauge(
+    "eli_elastic_factor_achieved",
+    "min realized elastic factor over the selection workload (stats())",
+)
+
+
+def record_search_telemetry(engine, routed, qmasks, k, n_queries, *,
+                            t_start, t_route, seg_before=None,
+                            tier_bucket=None, min_bucket=1,
+                            tomb_density=None, backend=None):
+    """Per-batch query-path accounting — the single home of the metrics
+    + query-card emission shared by ``LabelHybridEngine.search_batched``
+    and the streaming executor (``core.stream``).  Called only when
+    telemetry is enabled; pure host work."""
+    t_end = time.perf_counter()
+    backend = backend or engine.backend
+    arena = getattr(engine, "arena", None)
+    dtype = arena.dtype if arena is not None else "f32"
+    bound = getattr(engine.selection, "c", None)
+    seg_delta = 0
+    if seg_before is not None:
+        seg_delta = _kernel_ops._segmented_topk._cache_size() - seg_before
+
+    if _metrics.enabled():
+        _M_QUERIES.labels(backend).inc(n_queries)
+        _M_BATCHES.labels(backend).inc()
+        _M_LAT.labels(backend, pow2_bucket(n_queries, min_bucket),
+                      dtype).observe(t_end - t_start)
+        _M_STAGE.labels("route").observe(t_route - t_start)
+        _M_STAGE.labels("dispatch").observe(t_end - t_route)
+        if seg_delta > 0:
+            _M_RECOMPILE.inc()
+        if bound is not None:
+            _M_EF_BOUND.set(bound)
+
+    tracing = _trace.enabled()
+    # group the batch by (query key, routed key): every query in a group
+    # pays the same elastic factor, so one observe/card per group amortizes
+    # the host cost on large batches
+    groups: dict[tuple[tuple[int, ...], tuple[int, ...]], int] = {}
+    for qm, skey in zip(qmasks, routed):
+        gk = (mask_key(qm), skey)
+        groups[gk] = groups.get(gk, 0) + 1
+    for (qkey, skey), count in groups.items():
+        qsize = engine.table.closure_sizes.get(qkey)
+        ssize = engine.selection.selected.get(skey)
+        factor = None
+        if qsize and ssize:
+            factor = qsize / ssize
+        if _metrics.enabled():
+            if factor is not None:
+                _M_EF.labels(backend).observe(factor, n=count)
+                if bound is not None and factor < bound - 1e-12:
+                    _M_EF_VIOL.inc(count)
+            else:
+                _M_UNSEEN.inc(count)
+        if tracing:
+            seg = engine.segments.get(skey)
+            span_tier = (pow2_bucket(seg[1])
+                         if seg is not None and arena is not None else None)
+            if tier_bucket is not None and span_tier is not None:
+                q_bucket = tier_bucket.get(span_tier)
+            else:
+                q_bucket = pow2_bucket(count, min_bucket)
+            shortlist = None
+            if arena is not None and arena.rerank is not None:
+                lmax = span_tier if span_tier is not None else k
+                shortlist = max(k, min(4 * k, lmax))
+            _trace.get_tracer().add_card(_trace.QueryCard(
+                query_key=qkey, selected_key=skey, n_queries=count,
+                elastic_factor=factor, bound=bound, span_tier=span_tier,
+                q_bucket=q_bucket, dtype=dtype, shortlist=shortlist,
+                tombstone_density=tomb_density,
+                recompiled=seg_delta > 0, backend=backend))
+    if tracing:
+        tr = _trace.get_tracer()
+        tr.complete("search.route", t_start, t_route, Q=n_queries,
+                    backend=backend)
+        tr.complete("search.dispatch", t_route, t_end, k=k, backend=backend,
+                    groups=len(groups))
+
+
+def publish_engine_gauges(st) -> None:
+    """Mirror an ``EngineStats`` into registry gauges so the exposition
+    carries the engine's structural state (stats() keeps its dataclass
+    shape; the registry is an additional read path, not a replacement)."""
+    if not _metrics.enabled():
+        return
+    _M_ENGINE_GAUGE.labels("live").set(st.live_rows)
+    _M_ENGINE_GAUGE.labels("tombstoned").set(st.tombstoned_rows)
+    _M_ENGINE_GAUGE.labels("delta").set(st.delta_rows)
+    _M_ENGINE_BYTES.labels("total").set(st.nbytes)
+    _M_ENGINE_BYTES.labels("arena").set(st.arena_nbytes)
+    _M_ENGINE_BYTES.labels("segment").set(st.segment_nbytes)
+    _M_ENGINE_BYTES.labels("delta").set(st.delta_nbytes)
+    _M_ENGINE_BYTES.labels("codes").set(st.codes_nbytes)
+    _M_ENGINE_BYTES.labels("rerank").set(st.rerank_nbytes)
+    _M_ENGINE_BYTES.labels("tombstone").set(st.tombstone_nbytes)
+    _M_SELECTED.set(st.n_selected)
+    _M_ENTRIES.set(st.total_entries)
+    _M_ACHIEVED.set(st.achieved_c)
 
 
 @dataclasses.dataclass
@@ -231,6 +392,12 @@ class LabelHybridEngine:
         self._skey_sizes = np.array(
             [selection.selected[k] for k in self._skeys], dtype=np.int64)
         self._route_cache: dict[tuple[int, ...], tuple[int, ...]] = {}
+        if _metrics.enabled():
+            _M_SELECTED.set(len(self._skeys))
+            _M_ENTRIES.set(selection.total_entries)
+            c = getattr(selection, "c", None)
+            if c is not None:
+                _M_EF_BOUND.set(c)
 
     # -- construction --------------------------------------------------------
     @staticmethod
@@ -407,6 +574,8 @@ class LabelHybridEngine:
         rejects it: streaming drives ``Arena.tombstones`` through its own
         executor there.
         """
+        telem = _metrics.enabled() or _trace.enabled()
+        t_start = time.perf_counter() if telem else 0.0
         queries = np.asarray(queries, dtype=np.float32)
         Q = queries.shape[0]
         # sentinel/dtype contract: ids int32, empty slot == n (asserted
@@ -420,6 +589,7 @@ class LabelHybridEngine:
         qmasks = encode_many(query_label_sets)
         qwords = masks_to_int32_words(qmasks)
         routed = self.route_many(query_label_sets, qmasks)
+        t_route = time.perf_counter() if telem else 0.0
         pend: list[tuple[list[int], object, object, int]] = []
 
         if self._arena_native and self.arena is not None:
@@ -432,9 +602,14 @@ class LabelHybridEngine:
                 raise TypeError(f"arena-native backend {self.backend!r} "
                                 f"takes no search params; got "
                                 f"{sorted(search_params)}")
+            seg_before = (_kernel_ops._segmented_topk._cache_size()
+                          if telem else None)
+            tier_bucket: dict[int, int] = {}
             for qids, qp, lp, starts, lens, lmax, g in \
                     self.arena_tier_batches(queries, qwords, routed,
                                             min_bucket):
+                if telem:
+                    tier_bucket[lmax] = qp.shape[0]
                 vals, _, gi = _kernel_ops.segmented_topk(
                     qp, lp, self.arena.vectors, self.arena.label_words,
                     self.arena.norms, self._rows_concat_dev, starts, lens,
@@ -448,6 +623,11 @@ class LabelHybridEngine:
             for qids, d, gi, g in pend:
                 out_d[qids] = np.asarray(d)[:g]
                 out_i[qids] = np.asarray(gi)[:g]
+            if telem:
+                record_search_telemetry(
+                    self, routed, qmasks, k, Q, t_start=t_start,
+                    t_route=t_route, seg_before=seg_before,
+                    tier_bucket=tier_bucket, min_bucket=min_bucket)
             return out_d, out_i
 
         by_key: dict[tuple[int, ...], list[int]] = {}
@@ -479,6 +659,10 @@ class LabelHybridEngine:
             # rows.size == 0 (empty dataset edge): out_i already holds the
             # sentinel n everywhere, nothing to map
             out_d[qids] = np.asarray(d)[:g]
+        if telem:
+            record_search_telemetry(self, routed, qmasks, k, Q,
+                                    t_start=t_start, t_route=t_route,
+                                    min_bucket=min_bucket)
         return out_d, out_i
 
     def arena_tier_batches(self, queries: np.ndarray, qwords: np.ndarray,
@@ -648,7 +832,7 @@ class LabelHybridEngine:
         # private-storage accounting stays comparable to pre-arena runs
         segment_nbytes = (int(self._rows_concat_dev.nbytes)
                           if self._rows_concat_dev is not None else 0)
-        return EngineStats(
+        st = EngineStats(
             n=len(self.label_sets),
             n_candidates=len(self.table.closure_sizes),
             n_selected=len(self.indexes),
@@ -672,6 +856,8 @@ class LabelHybridEngine:
             rerank_nbytes=tiers["rerank"],
             tombstone_nbytes=tiers["tombstone"],
         )
+        publish_engine_gauges(st)
+        return st
 
 
 def brute_force_filtered(vectors: np.ndarray,

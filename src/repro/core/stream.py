@@ -75,9 +75,12 @@ from ..index.base import (Arena, CapacityError, DeltaArena,
                           check_global_id_contract, pack_tombstones,
                           pow2_bucket)
 from ..kernels import ops as _kernel_ops
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .adaptive import WorkloadMonitor, selection_from_weighted, weighted_select
 from .eis import EISResult
-from .engine import LabelHybridEngine
+from .engine import (LabelHybridEngine, publish_engine_gauges,
+                     record_search_telemetry)
 from .faults import faultpoint, register_fault_point
 from .groups import EMPTY_KEY, GroupTable
 from .labels import encode_many, key_to_mask, masks_to_int32_words
@@ -87,6 +90,34 @@ from .labels import encode_many, key_to_mask, masks_to_int32_words
 # durable state alone (core/durability.py; tests/test_crash_matrix.py)
 register_fault_point("compact.mid_fold",
                      "flush(): after _survivors, before the fold")
+
+# Streaming-mutation telemetry (DESIGN.md §6.3): host-side counters and
+# gauges only — the mutation/search device programs are untouched.
+_M_MUT = _metrics.counter(
+    "eli_stream_mutations_total", "streaming mutations by operation",
+    ("op",),
+)
+_M_MUT_ROWS = _metrics.counter(
+    "eli_stream_rows_total",
+    "rows moved by streaming mutations (inserted/deleted/folded/dropped)",
+    ("op",),
+)
+_M_MUT_S = _metrics.histogram(
+    "eli_stream_mutation_seconds", "streaming mutation wall time", ("op",),
+)
+_M_RESELECTS = _metrics.counter(
+    "eli_stream_reselects_total",
+    "drift-triggered reselects piggybacked on a compaction",
+)
+_M_LIVE = _metrics.gauge(
+    "eli_stream_live_rows", "rows a streaming search can return",
+)
+_M_TOMB = _metrics.gauge(
+    "eli_stream_tombstoned_rows", "deleted-but-not-yet-compacted rows",
+)
+_M_DELTA = _metrics.gauge(
+    "eli_stream_delta_rows", "rows resident in the delta arena / staging",
+)
 
 
 class StreamingEngine:
@@ -224,6 +255,8 @@ class StreamingEngine:
         the renumbering of earlier ids) and the batch lands in the fresh
         delta — the ids returned are therefore always valid at return.
         """
+        _t0 = (time.perf_counter()
+               if _metrics.enabled() or _trace.enabled() else 0.0)
         vectors = np.ascontiguousarray(vectors, dtype=np.float32)
         if vectors.ndim != 2 or vectors.shape[1] != self.base.vectors.shape[1]:
             raise ValueError(f"expected [m, {self.base.vectors.shape[1]}] "
@@ -257,6 +290,7 @@ class StreamingEngine:
             self.delta = new_delta
         else:
             self._dirty = True
+        self._record_mutation("insert", m, _t0)
         return ids
 
     def ensure_insert_capacity(self, m: int) -> None:
@@ -287,6 +321,8 @@ class StreamingEngine:
         O(Σ|I|/8) host bytes, never O(build).  Staged-delta deletes ride
         the fold their insert already forced.  May trigger automatic
         compaction."""
+        _t0 = (time.perf_counter()
+               if _metrics.enabled() or _trace.enabled() else 0.0)
         ids = np.unique(np.asarray(ids, dtype=np.int64).ravel())
         if ids.size == 0:
             return 0
@@ -317,6 +353,7 @@ class StreamingEngine:
         # non-lazy delta_slots: those rows are staged host-side and only
         # become searchable at the fold their insert made pending
         # (_dirty) — the fold reads _delta_dead, nothing else to do
+        self._record_mutation("delete", newly, _t0)
         self._maybe_compact()
         return newly
 
@@ -393,7 +430,28 @@ class StreamingEngine:
                "arena_version": (self.base.arena.version
                                  if self.base.arena is not None else 0)}
         self.compaction_log.append(rec)
+        if _metrics.enabled():
+            _M_MUT_ROWS.labels("folded").inc(folded)
+            _M_MUT_ROWS.labels("dropped").inc(dropped)
+            if reselected:
+                _M_RESELECTS.inc()
+        self._record_mutation("flush", folded, t0)
         return rec
+
+    def _record_mutation(self, op: str, rows: int, t0: float) -> None:
+        """Host-side mutation accounting — one boolean check when
+        telemetry is off, plain-Python bookkeeping when on."""
+        if _metrics.enabled():
+            _M_MUT.labels(op).inc()
+            _M_MUT_ROWS.labels(op).inc(rows)
+            _M_MUT_S.labels(op).observe(time.perf_counter() - t0)
+            dead = int(self._base_dead.sum() + self._delta_dead.sum())
+            _M_LIVE.set(self.sentinel - dead)
+            _M_TOMB.set(dead)
+            _M_DELTA.set(self._n_inserted)
+        if _trace.enabled():
+            _trace.get_tracer().complete(
+                "stream." + op, t0, time.perf_counter(), rows=rows)
 
     def _piggyback_selection(self, table: GroupTable) -> EISResult | None:
         """Drift-triggered weighted reselect, evaluated only when a
@@ -526,6 +584,8 @@ class StreamingEngine:
         passes per-selected-key tombstone bitmaps down the
         ``search_padded(tomb=…)`` protocol (``_private_tombs``).
         """
+        telem = _metrics.enabled() or _trace.enabled()
+        t_start = time.perf_counter() if telem else 0.0
         if self.monitor is not None:
             self.monitor.observe([tuple(ls) for ls in query_label_sets])
         if not self.lazy:
@@ -555,6 +615,10 @@ class StreamingEngine:
         qmasks = encode_many(query_label_sets)
         qwords = masks_to_int32_words(qmasks)
         routed = eng.route_many(query_label_sets, qmasks)
+        t_route = time.perf_counter() if telem else 0.0
+        seg_before = (_kernel_ops._segmented_topk._cache_size()
+                      if telem else None)
+        tier_bucket: dict[int, int] = {}
         delta = self.delta
         # tombstone mask only when base deletes are actually pending: the
         # un-deleted stream then runs the exact static program (zero mask
@@ -570,6 +634,8 @@ class StreamingEngine:
         base_g = jnp.full((qb, k), n_base, jnp.int32)
         for qids, qp, lp, starts, lens, lmax, g in \
                 eng.arena_tier_batches(queries, qwords, routed, min_bucket):
+            if telem:
+                tier_bucket[lmax] = qp.shape[0]
             bvals, _, bgid = _kernel_ops.segmented_topk(
                 qp, lp, eng.arena.vectors, eng.arena.label_words,
                 eng.arena.norms, eng._rows_concat_dev, starts, lens,
@@ -595,6 +661,13 @@ class StreamingEngine:
         # empty delta: base_g's empty-slot id n_base IS the stream sentinel
         out_d[:] = np.asarray(base_v)[:Q]
         out_i[:] = np.asarray(base_g)[:Q]
+        if telem:
+            dead = int(self._base_dead.sum() + self._delta_dead.sum())
+            record_search_telemetry(
+                eng, routed, qmasks, k, Q, t_start=t_start, t_route=t_route,
+                seg_before=seg_before, tier_bucket=tier_bucket,
+                min_bucket=min_bucket,
+                tomb_density=dead / max(1, self.sentinel))
         return out_d, out_i
 
     # -- warmup ---------------------------------------------------------------
@@ -786,7 +859,7 @@ class StreamingEngine:
         delta_nbytes = self.delta.nbytes if self.delta is not None else 0
         dt = (self.delta.tier_nbytes if self.delta is not None
               else {"codes": 0, "scales": 0, "rerank": 0, "tombstone": 0})
-        return _dc.replace(
+        st = _dc.replace(
             st,
             live_rows=self.sentinel - dead,
             tombstoned_rows=dead,
@@ -802,3 +875,5 @@ class StreamingEngine:
             rerank_nbytes=st.rerank_nbytes + dt["rerank"],
             tombstone_nbytes=st.tombstone_nbytes + dt["tombstone"],
         )
+        publish_engine_gauges(st)
+        return st

@@ -1,6 +1,6 @@
 """Deterministic, coordinator-free data pipeline.
 
-Design for 1000+ nodes (DESIGN.md §6):
+Design for 1000+ nodes (DESIGN.md §7):
 
   * **Stateless indexing** — batch(step, host) is a pure function of
     (seed, step, host); there is no shared cursor, no coordinator, and a

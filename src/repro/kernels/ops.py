@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.labels import masks_to_int32_words
+from ..obs import metrics as _metrics
 from . import ref
 from .filtered_topk import filtered_topk_pallas
 from .gather_distance import (gather_distance_pallas,
@@ -266,6 +267,25 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
     return vals, pos.astype(jnp.int32), gid.astype(jnp.int32)
 
 
+# Kernel-dispatch-cache telemetry (DESIGN.md §6.3): every dispatch of the
+# jit-cached segmented program is counted per launch signature, and cache
+# growth (a recompile) is surfaced both as a counter and a gauge so the
+# serving zero-retrace invariant is observable, not just pinned by tests.
+_M_DISPATCH = _metrics.counter(
+    "eli_segmented_dispatches_total",
+    "segmented_topk program dispatches by launch signature",
+    ("backend", "dtype", "bucket"),
+)
+_M_TRACES = _metrics.counter(
+    "eli_segmented_traces_total",
+    "new _segmented_topk programs compiled (jit cache growth)",
+)
+_M_CACHE = _metrics.gauge(
+    "eli_segmented_cache_size",
+    "resident _segmented_topk jit cache entries",
+)
+
+
 def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
                    lmax: int, metric: str = "l2", backend: str = "ref",
                    chunk: int | None = None, tomb=None, dtype: str = "f32",
@@ -304,7 +324,8 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
         q = _pad_axis(q, 1, 128)
         if rerank is not None:
             rerank = _pad_axis(rerank, 1, 128)
-    return _segmented_topk(
+    before = _segmented_topk._cache_size() if _metrics.enabled() else None
+    out = _segmented_topk(
         jnp.asarray(q, jnp.float32), jnp.asarray(lq, jnp.int32),
         ax, alw, axn, rows_concat,
         jnp.asarray(starts, jnp.int32), jnp.asarray(lens, jnp.int32),
@@ -312,6 +333,15 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
         k=k, lmax=lmax, chunk=chunk or min(SEG_CHUNK, lmax), metric=metric,
         backend=backend, interpret=default_interpret(), dtype=dtype,
         kprime=kprime, dcols=dcols)
+    if before is not None:
+        # tracing (if any) happened synchronously during the call above,
+        # so the cache-size delta is already visible here
+        after = _segmented_topk._cache_size()
+        _M_DISPATCH.labels(backend, dtype, q.shape[0]).inc()
+        if after > before:
+            _M_TRACES.inc(after - before)
+        _M_CACHE.set(after)
+    return out
 
 
 def delta_topk(q, lq, dx, dlw, dxn, tomb, count: int, *, k: int,

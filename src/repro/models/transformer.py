@@ -2,7 +2,7 @@
 architectures (dense GQA, squared-ReLU Nemotron family, gemma-2
 local/global + softcap, and both MoE variants).
 
-Engineering for the 512-device dry-run (DESIGN.md §7):
+Engineering for the 512-device dry-run (DESIGN.md §8):
   * scan-over-layers with stacked parameters — HLO size O(1) in depth;
   * per-layer remat (``jax.checkpoint``) so train_4k activation memory is
     one layer deep;

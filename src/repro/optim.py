@@ -9,7 +9,7 @@ Two production optimizers:
     state for an N-param model occupies 8N/|data×model| bytes per chip.
   * **Adafactor** — factored second moment (row+col fp32 vectors, no
     momentum by default).  State is ~0.1% of AdamW's; it is the only way a
-    1T-param model (kimi-k2) trains inside v5e HBM (DESIGN.md §6).
+    1T-param model (kimi-k2) trains inside v5e HBM (DESIGN.md §7).
 
 Both are expressed as ``init(params) -> state`` / ``update(grads, state,
 params) -> (new_params, new_state, stats)`` pure functions so the whole

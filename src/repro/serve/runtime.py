@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import itertools
 import time
 from collections import deque
 from typing import Callable, Sequence
@@ -62,7 +63,62 @@ import numpy as np
 
 from ..index.base import CapacityError
 from ..kernels import ops as _kernel_ops
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .engine import Request, RetrievalAugmentedEngine
+
+# Serving telemetry (DESIGN.md §6.3).  The runtime's counters LIVE in the
+# registry — ``stats()`` reads them back — with one labeled child per
+# runtime instance so concurrent runtimes (tests, benchmark sweeps) don't
+# bleed into each other's RuntimeStats.  Caveat that follows: with the
+# registry disabled (``obs.metrics.disable()``) these counters freeze and
+# RuntimeStats reports zeros; metrics default ON precisely so the stats
+# surface stays authoritative.
+_RT_SEQ = itertools.count()
+_M_SRV_SUBMITTED = _metrics.counter(
+    "eli_serve_submitted_total", "requests submitted", ("runtime",),
+)
+_M_SRV_REJECTED = _metrics.counter(
+    "eli_serve_rejected_total", "admissions rejected (queue full)",
+    ("runtime",),
+)
+_M_SRV_MISSES = _metrics.counter(
+    "eli_serve_deadline_misses_total", "requests surfaced as TIMEOUT",
+    ("runtime",),
+)
+_M_SRV_FAILED = _metrics.counter(
+    "eli_serve_failed_total", "terminal FAILED results (retries exhausted)",
+    ("runtime",),
+)
+_M_SRV_RETRIES = _metrics.counter(
+    "eli_serve_retries_total", "re-serve attempts after a contained fault",
+    ("runtime",),
+)
+_M_SRV_STEPS = _metrics.counter(
+    "eli_serve_decode_steps_total", "decoder steps that advanced work",
+    ("runtime",),
+)
+_M_SRV_BATCHES = _metrics.counter(
+    "eli_serve_retrieval_batches_total", "retrieval micro-batches dispatched",
+    ("runtime",),
+)
+_M_SRV_QWAIT = _metrics.histogram(
+    "eli_serve_queue_wait_seconds",
+    "admission-to-microbatch queue wait", ("runtime",),
+)
+_M_SRV_LAT = _metrics.histogram(
+    "eli_serve_completion_latency_seconds",
+    "submit-to-OK completion latency (terminal OK results only)",
+    ("runtime",),
+)
+_M_SRV_MB = _metrics.histogram(
+    "eli_serve_microbatch_size", "formed micro-batch sizes", ("runtime",),
+    buckets=(1, 2, 4, 8, 16, 32, 64, 128),
+)
+_M_SRV_DEPTH = _metrics.gauge(
+    "eli_serve_queue_depth", "queued requests after the last tick",
+    ("runtime",),
+)
 
 
 class ServeStatus(enum.Enum):
@@ -130,6 +186,12 @@ class RuntimeStats:
     # warmed-up runtime has served any stream whose batches fit the
     # ladder — pinned by tests/test_serve_runtime.py)
     new_segmented_traces: int
+    # completion-latency quantiles estimated from the registry histogram
+    # (eli_serve_completion_latency_seconds, OK results only); None until
+    # the first OK completion.  Linear interpolation within fixed buckets
+    # — exact enough for reporting, no sample retention
+    latency_p50_s: float | None = None
+    latency_p99_s: float | None = None
 
 
 class ServingRuntime:
@@ -187,13 +249,22 @@ class ServingRuntime:
         self._ready: deque[ServeResult] = deque()  # retrieved, need slot
         self._by_req: dict[int, ServeResult] = {}  # id(Request) -> result
         self.completed: list[ServeResult] = []
-        # counters
-        self._submitted = 0
-        self._rejected = 0
-        self._deadline_misses = 0
-        self._failed = 0
-        self._retries = 0
-        self._decode_steps = 0
+        # counters are registry-backed (one labeled child per runtime
+        # instance; stats() reads them back) — the refit that makes the
+        # exposition and RuntimeStats one data source
+        rt = f"rt{next(_RT_SEQ)}"
+        self.runtime_label = rt
+        self._c_submitted = _M_SRV_SUBMITTED.labels(rt)
+        self._c_rejected = _M_SRV_REJECTED.labels(rt)
+        self._c_misses = _M_SRV_MISSES.labels(rt)
+        self._c_failed = _M_SRV_FAILED.labels(rt)
+        self._c_retries = _M_SRV_RETRIES.labels(rt)
+        self._c_steps = _M_SRV_STEPS.labels(rt)
+        self._c_batches = _M_SRV_BATCHES.labels(rt)
+        self._h_qwait = _M_SRV_QWAIT.labels(rt)
+        self._h_latency = _M_SRV_LAT.labels(rt)
+        self._h_mb = _M_SRV_MB.labels(rt)
+        self._g_depth = _M_SRV_DEPTH.labels(rt)
         self._batch_hist: dict[int, int] = {}
         self._depth_samples: list[int] = []
 
@@ -207,11 +278,12 @@ class ServingRuntime:
         convenience)."""
         now = self.clock() if at is None else at
         res = ServeResult(request=req, status=ServeStatus.PENDING, t_submit=now)
-        self._submitted += 1
+        self._c_submitted.inc()
         if self._queued_total >= self.queue_depth:
             res.status = ServeStatus.REJECTED
             res.t_finish = now
-            self._rejected += 1
+            self._c_rejected.inc()
+            _trace.get_tracer().instant("serve.reject", rid=req.rid)
             self.completed.append(res)
             return res
         q = self._tenants.get(req.tenant)
@@ -239,7 +311,9 @@ class ServingRuntime:
             return False
         res.status = ServeStatus.TIMEOUT
         res.t_finish = now
-        self._deadline_misses += 1
+        self._c_misses.inc()
+        _trace.get_tracer().instant("serve.deadline_miss",
+                                    rid=res.request.rid)
         self.completed.append(res)
         self._by_req.pop(id(res.request), None)
         return True
@@ -308,7 +382,9 @@ class ServingRuntime:
         dl = res.request.deadline
         if (res.attempts <= self.max_retries
                 and (dl is None or now + backoff <= dl)):
-            self._retries += 1
+            self._c_retries.inc()
+            _trace.get_tracer().instant("serve.retry", rid=res.request.rid,
+                                        attempt=res.attempts)
             res.t_retry = now + backoff
             q = self._tenants.get(res.request.tenant)
             if q is None:
@@ -319,7 +395,7 @@ class ServingRuntime:
         else:
             res.status = ServeStatus.FAILED
             res.t_finish = now
-            self._failed += 1
+            self._c_failed.inc()
             self.completed.append(res)
             self._by_req.pop(id(res.request), None)
 
@@ -348,12 +424,18 @@ class ServingRuntime:
         retrievals + finishes + live slots stepped) — 0 means the tick
         was pure waiting and the caller may sleep."""
         now = self.clock() if now is None else now
+        tracing = _trace.enabled()
+        t_tick0 = time.perf_counter() if tracing else 0.0
         events = 0
         self._expire(now)
         events += self._admit_ready(now)
         if self._should_flush(now):
             batch = self._form_microbatch(now)
             if batch:
+                if _metrics.enabled():
+                    for res in batch:
+                        self._h_qwait.observe(max(0.0, now - res.t_submit))
+                t_r0 = time.perf_counter() if tracing else 0.0
                 try:
                     self.rag.retrieve([r.request for r in batch])
                 except Exception as exc:  # noqa: BLE001 — contained
@@ -366,9 +448,16 @@ class ServingRuntime:
                     self._ready.extend(batch)
                     self._batch_hist[len(batch)] = (
                         self._batch_hist.get(len(batch), 0) + 1)
+                    self._c_batches.inc()
+                    self._h_mb.observe(len(batch))
                     events += 1
                     events += self._admit_ready(now)
+                if tracing:
+                    _trace.get_tracer().complete(
+                        "serve.retrieve", t_r0, time.perf_counter(),
+                        batch=len(batch))
         live = int(self.decoder.live.sum())
+        t_d0 = time.perf_counter() if tracing else 0.0
         try:
             finished = self.decoder.step()
         except Exception as exc:  # noqa: BLE001 — contained
@@ -383,7 +472,11 @@ class ServingRuntime:
             finished = []
             events += 1
         if live or finished:
-            self._decode_steps += 1
+            self._c_steps.inc()
+            if tracing:
+                _trace.get_tracer().complete(
+                    "serve.decode_step", t_d0, time.perf_counter(),
+                    live=live, finished=len(finished))
         events += live
         t_done = self.clock()
         for req in finished:
@@ -395,12 +488,19 @@ class ServingRuntime:
             # (the generated tokens stay attached for the caller to keep)
             if req.deadline is not None and t_done > req.deadline:
                 res.status = ServeStatus.TIMEOUT
-                self._deadline_misses += 1
+                self._c_misses.inc()
             else:
                 res.status = ServeStatus.OK
+                if res.latency is not None:
+                    self._h_latency.observe(res.latency)
             self.completed.append(res)
             events += 1
         self._depth_samples.append(self._queued_total)
+        self._g_depth.set(self._queued_total)
+        if tracing and events:
+            _trace.get_tracer().complete(
+                "serve.tick", t_tick0, time.perf_counter(), events=events,
+                queued=self._queued_total, live=live)
         return events
 
     @property
@@ -478,22 +578,27 @@ class ServingRuntime:
 
     # -- reporting -----------------------------------------------------------
     def stats(self) -> RuntimeStats:
+        """Reporting surface, read back from this runtime's labeled
+        registry series (the refit: one data source for RuntimeStats and
+        the exposition; see the module-level metric declarations)."""
         depths = self._depth_samples or [0]
         completed_ok = sum(1 for r in self.completed if r.status is ServeStatus.OK)
         traces = _kernel_ops._segmented_topk._cache_size() - self._trace_base
         return RuntimeStats(
-            submitted=self._submitted,
+            submitted=int(self._c_submitted.value()),
             completed_ok=completed_ok,
-            rejected=self._rejected,
-            deadline_misses=self._deadline_misses,
-            failed=self._failed,
-            retries=self._retries,
-            decode_steps=self._decode_steps,
+            rejected=int(self._c_rejected.value()),
+            deadline_misses=int(self._c_misses.value()),
+            failed=int(self._c_failed.value()),
+            retries=int(self._c_retries.value()),
+            decode_steps=int(self._c_steps.value()),
             retrieval_batches=sum(self._batch_hist.values()),
             batch_size_hist=dict(sorted(self._batch_hist.items())),
             queue_depth_max=max(depths),
             queue_depth_mean=float(np.mean(depths)),
             new_segmented_traces=traces,
+            latency_p50_s=self._h_latency.quantile(0.5),
+            latency_p99_s=self._h_latency.quantile(0.99),
         )
 
     def assert_no_new_traces(self) -> None:

@@ -14,7 +14,7 @@ Mapping (Megatron-style TP on 'model', DP/ZeRO on 'data', pure DP across
     embed / layers / seq / state             -> replicated
 
 GSPMD handles non-divisible cases (e.g. 36 heads on a 16-way model axis)
-with implicit padding; DESIGN.md §6 records where that costs us and the
+with implicit padding; DESIGN.md §7 records where that costs us and the
 hillclimb in EXPERIMENTS.md §Perf revisits the worst offenders.
 """
 from __future__ import annotations

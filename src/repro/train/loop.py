@@ -1,6 +1,6 @@
 """Fault-tolerant training loop.
 
-Responsibilities (DESIGN.md §6 — the 1000+ node story):
+Responsibilities (DESIGN.md §7 — the 1000+ node story):
 
   * **checkpoint/restart** — async sharded checkpoints every
     ``ckpt_every`` steps; on construction the Trainer auto-resumes from

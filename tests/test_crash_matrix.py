@@ -67,6 +67,13 @@ from repro.core import durability as D
 from repro.core import (LabelWorkloadConfig, StreamingEngine,
                         generate_label_sets, generate_query_label_sets)
 from repro.core.faults import FaultPlan, InjectedFault, inject
+from repro.obs import metrics, trace
+
+# the whole matrix runs with the durability instrumentation live (ISSUE 9:
+# metering a crash must not change what survives it) — metrics default on,
+# tracing forced on
+assert metrics.enabled()
+trace.enable()
 
 SCENARIOS = json.loads(sys.argv[1])
 SPECS = json.loads(sys.argv[2])

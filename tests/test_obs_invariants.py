@@ -1,0 +1,171 @@
+"""The telemetry hard invariant (ISSUE 9): observability is host-side
+only.  Turning metrics or tracing on/off must not change a single search
+bit on any backend, must not trace a single new jit program post-warmup,
+and the query cards + exposition must actually carry the elastic-factor
+accounting the paper's claims rest on.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+# importing the instrumented layers registers every family (so the
+# five-layer exposition check below is about declarations, not luck)
+import repro.core.durability  # noqa: F401
+import repro.core.stream  # noqa: F401
+import repro.serve.runtime  # noqa: F401
+from repro.core import (
+    LabelHybridEngine,
+    LabelWorkloadConfig,
+    generate_label_sets,
+    generate_query_label_sets,
+)
+from repro.core.labels import encode_label_set, mask_key
+from repro.kernels import ops
+from repro.obs import metrics, trace, validate_exposition
+
+BACKENDS = {
+    "flat": {},
+    "ivf": {"nprobe": 4},
+    "graph": {"M": 8, "n_cand": 16, "ef_search": 32},
+    "distributed": {},
+}
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(19)
+    N, D, Q = 3000, 16, 150
+    x = rng.standard_normal((N, D)).astype(np.float32)
+    ls = generate_label_sets(N, LabelWorkloadConfig(num_labels=9, seed=5))
+    qv = rng.standard_normal((Q, D)).astype(np.float32)
+    qls = generate_query_label_sets(ls, Q - 2, seed=6,
+                                    from_base_fraction=0.75)
+    qls += [(0, 1, 2, 3, 4, 5, 6, 7, 8), ()]  # unseen-key + unfiltered
+    return dict(x=x, ls=ls, qv=qv, qls=qls)
+
+
+_ENGINES: dict[str, LabelHybridEngine] = {}
+
+
+def _engine(name: str, data) -> LabelHybridEngine:
+    if name not in _ENGINES:
+        _ENGINES[name] = LabelHybridEngine.build(
+            data["x"], data["ls"], mode="eis", c=0.2, backend=name,
+            **BACKENDS[name]
+        )
+    return _ENGINES[name]
+
+
+@pytest.fixture(params=sorted(BACKENDS), scope="module")
+def backend_engine(request, data):
+    return request.param, _engine(request.param, data)
+
+
+@pytest.fixture
+def tracing():
+    trace.enable()
+    trace.reset()
+    yield trace.get_tracer()
+    trace.disable()
+
+
+def test_metrics_toggle_bitwise_parity(backend_engine, data):
+    """Search output is bit-identical with metrics on and off — the
+    instrumentation reads results, it never participates in them."""
+    name, eng = backend_engine
+    qv, qls, k = data["qv"], data["qls"], 7
+    eng.search_batched(qv, qls, k)  # warm jit caches once
+    assert metrics.enabled()
+    d_on, i_on = eng.search_batched(qv, qls, k)
+    with metrics.disabled():
+        d_off, i_off = eng.search_batched(qv, qls, k)
+    np.testing.assert_array_equal(i_on, i_off, err_msg=name)
+    np.testing.assert_array_equal(d_on, d_off, err_msg=name)
+
+
+def test_tracing_zero_new_traces_and_parity(data, tracing):
+    """Tracing enabled mid-flight adds zero ``_segmented_topk`` programs
+    post-warmup and leaves the bits alone (host-side-only pin)."""
+    eng = _engine("flat", data)
+    qv, qls, k = data["qv"], data["qls"], 5
+    d_ref, i_ref = eng.search_batched(qv, qls, k)  # warm with tracing ON
+    before = ops._segmented_topk._cache_size()
+    d_tr, i_tr = eng.search_batched(qv, qls, k)
+    assert ops._segmented_topk._cache_size() == before
+    np.testing.assert_array_equal(i_tr, i_ref)
+    np.testing.assert_array_equal(d_tr, d_ref)
+    assert tracing.events, "tracing on but no spans recorded"
+
+
+def test_query_cards_carry_elastic_accounting(data, tracing):
+    """Every routed query group gets a card; realized factors respect the
+    EIS guarantee (>= c for keys inside the workload closure) and the
+    launch-shape fields describe a real padded launch."""
+    eng = _engine("flat", data)
+    qv, qls = data["qv"], data["qls"]
+    eng.search_batched(qv, qls, 5)  # warm
+    trace.reset()
+    eng.search_batched(qv, qls, 5)
+    cards = list(trace.iter_cards())
+    assert cards
+    assert sum(c.n_queries for c in cards) == len(qls)
+    keyed = {c.query_key: c for c in cards}
+    assert mask_key(encode_label_set(data["qls"][0])) in keyed
+    seen = [c for c in cards if c.elastic_factor is not None]
+    assert seen, "no card carries a realized elastic factor"
+    for c in seen:
+        assert c.bound == pytest.approx(0.2)
+        assert c.elastic_factor <= 1.0 + 1e-12
+        assert c.elastic_factor >= c.bound - 1e-12, (
+            "EIS routed below the configured bound"
+        )
+        assert c.selected_key is not None
+    for c in cards:
+        if c.span_tier is not None:
+            assert c.span_tier & (c.span_tier - 1) == 0  # power of two
+        if c.q_bucket is not None:
+            assert c.q_bucket & (c.q_bucket - 1) == 0
+        assert not c.recompiled  # post-warmup batch compiled nothing
+    # the unseen 9-label combination routes through the fallback: no
+    # factor to account, flagged via the unseen counter instead
+    unseen = [c for c in cards if c.elastic_factor is None]
+    assert unseen
+
+
+def test_exposition_covers_all_five_layers(data):
+    """One family per instrumented layer is declared and the engine-side
+    elastic-factor pair actually carries values after a search."""
+    eng = _engine("flat", data)
+    eng.search_batched(data["qv"], data["qls"], 5)
+    text = metrics.render()
+    assert validate_exposition(text) == []
+    for family in (
+        "eli_search_latency_seconds",      # core/engine.py
+        "eli_elastic_factor_realized",     # core/engine.py
+        "eli_elastic_factor_bound",        # core/engine.py
+        "eli_stream_mutations_total",      # core/stream.py
+        "eli_wal_records_total",           # core/durability.py
+        "eli_serve_submitted_total",       # serve/runtime.py
+        "eli_segmented_dispatches_total",  # kernels/ops.py
+    ):
+        assert f"# TYPE {family} " in text, family
+    ef = metrics.REGISTRY.get("eli_elastic_factor_realized")
+    assert ef.labels("flat").count > 0
+    bound = metrics.REGISTRY.get("eli_elastic_factor_bound")
+    assert bound.value() == pytest.approx(0.2)
+
+
+def test_disabled_telemetry_skips_the_accounting(data):
+    """With metrics off, a search moves no counters (the off path is a
+    real no-op, not a buffered one)."""
+    eng = _engine("flat", data)
+    eng.search_batched(data["qv"][:8], data["qls"][:8], 5)  # warm
+    fam = metrics.REGISTRY.get("eli_search_queries_total").labels("flat")
+    before = fam.value()
+    with metrics.disabled():
+        eng.search_batched(data["qv"][:8], data["qls"][:8], 5)
+    assert fam.value() == before
+    eng.search_batched(data["qv"][:8], data["qls"][:8], 5)
+    assert fam.value() == before + 8

@@ -1,0 +1,244 @@
+"""Unit tests for the metrics registry (obs/metrics.py): value semantics,
+labeled families, idempotent registration, the disabled no-op path, and
+both exposition surfaces (Prometheus text + JSON snapshot).
+
+All registration tests run against fresh ``MetricsRegistry`` instances so
+they cannot collide with the process-wide ``REGISTRY`` the instrumented
+modules declare into at import time.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+import pytest
+
+from repro.obs import metrics
+from repro.obs.metrics import DEFAULT_BUCKETS, MetricsRegistry, validate_exposition
+
+
+@pytest.fixture
+def reg():
+    return MetricsRegistry()
+
+
+# --- counters / gauges -----------------------------------------------------
+
+
+def test_counter_inc(reg):
+    c = reg.counter("t_total", "help text")
+    assert c.value() == 0
+    c.inc()
+    c.inc(4)
+    assert c.value() == 5
+
+
+def test_counter_rejects_negative(reg):
+    c = reg.counter("t_total")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec(reg):
+    g = reg.gauge("t_rows")
+    g.set(10)
+    g.inc(2.5)
+    g.dec()
+    assert g.value() == 11.5
+
+
+# --- histograms ------------------------------------------------------------
+
+
+def test_histogram_buckets_and_sum(reg):
+    h = reg.histogram("t_seconds", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 100.0):
+        h.observe(v)
+    assert h.count == 4
+    assert h.sum == pytest.approx(105.0)
+    assert h._counts == [1, 1, 1, 1]  # last slot is +Inf
+
+
+def test_histogram_observe_n_amortized(reg):
+    h = reg.histogram("t_seconds", buckets=(1.0,))
+    h.observe(0.5, n=7)
+    assert h.count == 7
+    assert h.sum == pytest.approx(3.5)
+
+
+def test_histogram_quantile_interpolates(reg):
+    h = reg.histogram("t_seconds", buckets=(1.0, 2.0))
+    # 10 observations all inside (1.0, 2.0]: p50 lands mid-bucket
+    h.observe(1.5, n=10)
+    assert h.quantile(0.5) == pytest.approx(1.5)
+    assert h.quantile(1.0) == pytest.approx(2.0)
+    assert h.quantile(0.0) == pytest.approx(1.0)
+
+
+def test_histogram_quantile_empty_is_none(reg):
+    h = reg.histogram("t_seconds")
+    assert h.quantile(0.5) is None
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_histogram_rejects_unsorted_buckets(reg):
+    with pytest.raises(ValueError):
+        reg.histogram("t_seconds", buckets=(2.0, 1.0))
+
+
+# --- labeled families ------------------------------------------------------
+
+
+def test_labels_create_and_cache_children(reg):
+    c = reg.counter("t_total", labelnames=("backend",))
+    a = c.labels("flat")
+    b = c.labels("ivf")
+    assert a is c.labels("flat")
+    assert a is not b
+    a.inc(3)
+    assert a.value() == 3 and b.value() == 0
+
+
+def test_labelless_family_is_its_own_child(reg):
+    c = reg.counter("t_total")
+    assert c.labels() is c
+    assert c.children() == [c]
+
+
+def test_labels_arity_checked(reg):
+    c = reg.counter("t_total", labelnames=("a", "b"))
+    with pytest.raises(ValueError):
+        c.labels("only-one")
+
+
+def test_histogram_children_inherit_custom_buckets(reg):
+    h = reg.histogram("t_seconds", labelnames=("tier",), buckets=(1.0, 8.0))
+    child = h.labels("hot")
+    assert child.buckets == (1.0, 8.0)
+    assert child.buckets != DEFAULT_BUCKETS
+
+
+# --- registration ----------------------------------------------------------
+
+
+def test_registration_idempotent(reg):
+    a = reg.counter("t_total", labelnames=("x",))
+    b = reg.counter("t_total", labelnames=("x",))
+    assert a is b
+
+
+def test_conflicting_registration_raises(reg):
+    reg.counter("t_total")
+    with pytest.raises(ValueError):
+        reg.gauge("t_total")
+    with pytest.raises(ValueError):
+        reg.counter("t_total", labelnames=("x",))
+
+
+def test_bad_names_rejected(reg):
+    with pytest.raises(ValueError):
+        reg.counter("bad name")
+    with pytest.raises(ValueError):
+        reg.counter("ok_total", labelnames=("bad-label",))
+
+
+# --- disabled mode ---------------------------------------------------------
+
+
+def test_disabled_is_a_true_noop(reg):
+    c = reg.counter("t_total")
+    g = reg.gauge("t_rows")
+    h = reg.histogram("t_seconds")
+    with metrics.disabled():
+        assert not metrics.enabled()
+        c.inc(5)
+        g.set(9)
+        h.observe(1.0)
+    assert metrics.enabled()
+    assert c.value() == 0 and g.value() == 0 and h.count == 0
+
+
+def test_disabled_restores_prior_state():
+    assert metrics.enabled()
+    with metrics.disabled():
+        with metrics.disabled():
+            pass
+        assert not metrics.enabled()
+    assert metrics.enabled()
+
+
+# --- exposition ------------------------------------------------------------
+
+
+def _populated_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    c = reg.counter("t_total", "a counter", labelnames=("backend",))
+    c.labels("flat").inc(2)
+    c.labels('we"ird\\').inc()  # label value needing escaping
+    reg.gauge("t_rows", "a gauge").set(-3.5)
+    h = reg.histogram("t_seconds", "a histogram", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5, n=2)
+    h.observe(10.0)
+    return reg
+
+
+def test_render_is_valid_exposition():
+    text = _populated_registry().render()
+    assert validate_exposition(text) == []
+    assert "# TYPE t_total counter" in text
+    assert 't_total{backend="flat"} 2' in text
+    assert 't_seconds_bucket{le="+Inf"} 4' in text
+    assert "t_seconds_count 4" in text
+
+
+def test_validate_exposition_catches_problems():
+    assert validate_exposition("t_orphan 1\n")  # sample without TYPE
+    assert validate_exposition("# TYPE t_x summary\n")  # unknown kind
+    bad_hist = (
+        "# TYPE t_s histogram\n"
+        't_s_bucket{le="1"} 1\nt_s_sum 1\nt_s_count 1\n'
+    )
+    assert any("+Inf" in p for p in validate_exposition(bad_hist))
+    assert validate_exposition("# TYPE t_s histogram\nt_s 3\n")  # bare sample
+
+
+def test_snapshot_json_roundtrip():
+    snap = _populated_registry().snapshot()
+    again = json.loads(json.dumps(snap))
+    assert again["t_total"]["type"] == "counter"
+    flat = next(
+        s
+        for s in again["t_total"]["series"]
+        if s["labels"] == {"backend": "flat"}
+    )
+    assert flat["value"] == 2
+    hist = again["t_seconds"]["series"][0]
+    assert hist["count"] == 4
+    assert hist["buckets"] == {"0.1": 1, "1": 2, "+Inf": 1}
+
+
+def test_reset_zeroes_but_keeps_families():
+    reg = _populated_registry()
+    reg.reset()
+    assert reg.get("t_total").labels("flat").value() == 0
+    assert reg.get("t_seconds").count == 0
+    assert validate_exposition(reg.render()) == []
+
+
+def test_fmt_inf():
+    assert metrics._fmt(math.inf) == "+Inf"
+    assert metrics._fmt(3.0) == "3"
+    assert metrics._fmt(0.25) == "0.25"
+
+
+# --- module-level registry -------------------------------------------------
+
+
+def test_global_registry_render_and_snapshot():
+    """The process-wide registry (instrumented modules declared into it
+    at import time) must always render valid exposition."""
+    assert validate_exposition(metrics.render()) == []
+    json.dumps(metrics.snapshot())

@@ -28,7 +28,8 @@ from repro.obs import trace as obs_trace
 from . import (exp1_qps_recall, exp2_index_cost, exp3_shard_scaling,
                exp5_distributions, exp6_label_universe, exp7_vs_optimal,
                exp8_adaptive, exp9_backends, exp10_streaming,
-               exp11_serving, exp12_durability, fig6_elastic_factor)
+               exp11_serving, exp12_durability, exp13_fused_scan,
+               fig6_elastic_factor)
 
 ALL = {
     "fig6": fig6_elastic_factor.run,
@@ -43,6 +44,7 @@ ALL = {
     "exp10": exp10_streaming.run,
     "exp11": exp11_serving.run,
     "exp12": exp12_durability.run,
+    "exp13": exp13_fused_scan.run,
 }
 
 

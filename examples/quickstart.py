@@ -54,6 +54,18 @@ print(f"int8 tier: {st8.arena_nbytes / st.arena_nbytes:.2f}x the f32 "
       f"arena bytes, recall@10 = "
       f"{recall_at_k(i8, gt_i, len(label_sets)):.4f}")
 
+# 6b. fused scan kernel (DESIGN.md §3.9, authoring guide in
+#     docs/KERNELS.md): the same segmented program with the scan stage
+#     fused — gather, distance, filter, and the running top-k in one
+#     kernel, tile sizes from the launch/roofline.py model.  Results are
+#     bit-identical; the win is cache traffic at scale (BENCH_exp13.json).
+engine_f = LabelHybridEngine.build(vectors, label_sets, mode="eis", c=0.2,
+                                   backend="flat", fused=True)
+df, idf = engine_f.search(queries, query_labels, k=10)
+import numpy as np
+assert np.array_equal(np.asarray(idf), np.asarray(ids))
+print("fused scan kernel: bit-identical ids, see BENCH_exp13.json for QPS")
+
 # 7. streaming mutations (DESIGN.md §3.6): the corpus is rarely static.
 #    insert → search → delete → flush, with search always bit-identical
 #    to an engine rebuilt from scratch on the surviving rows.

@@ -6,6 +6,14 @@ indexes, splices them as context, and generates with slot-based batching —
 the "vector DB next to the LLM" deployment the paper targets.
 
     PYTHONPATH=src python examples/rag_serve.py --arch mamba2_130m [--metrics]
+
+``--metrics`` prints the registry exposition at exit.  This launcher uses
+the synchronous run-to-completion path (``RetrievalAugmentedEngine.serve``),
+which reports under the ``eli_serve_*`` families' ``runtime="sync"`` child:
+submissions, retrieval batches, batch sizes, and completion latency.
+Queue-side series (depth, waits, rejections, retries) belong to the
+continuous-batching ``ServingRuntime`` and stay at zero here — there is no
+queue on the sync path (DESIGN.md §6.3).
 """
 import argparse
 

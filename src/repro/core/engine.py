@@ -259,6 +259,11 @@ class LabelHybridEngine:
         self.backend_params = dict(backend_params)
         self._arena_native = hasattr(builder, "build_view")
         self._seg_backend = backend_params.get("kernel_backend", "ref")
+        # fused scan stage (DESIGN.md §3.9): True | False | "auto";
+        # resolved once so views, executor and warmup agree
+        from ..kernels.fused_scan import resolve_fused
+        self._seg_fused = resolve_fused(backend_params.get("fused", False),
+                                        backend=self._seg_backend)
         parse_storage(storage)   # validate the spec before any device work
         if storage != "f32" and not self._arena_native:
             raise ValueError(
@@ -614,7 +619,7 @@ class LabelHybridEngine:
                     qp, lp, self.arena.vectors, self.arena.label_words,
                     self.arena.norms, self._rows_concat_dev, starts, lens,
                     k=k, lmax=lmax, metric=self.metric,
-                    backend=self._seg_backend,
+                    backend=self._seg_backend, fused=self._seg_fused,
                     **self.arena.tier_kwargs())
                 # global ids resolved inside the traced program (sentinel n
                 # included): no host remap, and warmup covers the full path
@@ -784,7 +789,7 @@ class LabelHybridEngine:
                             self.arena.label_words, self.arena.norms,
                             self._rows_concat_dev, zero, zero, k=k,
                             lmax=lmax, metric=self.metric,
-                            backend=self._seg_backend,
+                            backend=self._seg_backend, fused=self._seg_fused,
                             **self.arena.tier_kwargs())
                         outs.append(vals)
                 else:

@@ -641,7 +641,7 @@ class StreamingEngine:
                 eng.arena.norms, eng._rows_concat_dev, starts, lens,
                 k=k, lmax=lmax, metric=eng.metric,
                 backend=eng._seg_backend, tomb=tomb,
-                **eng.arena.tier_kwargs())
+                fused=eng._seg_fused, **eng.arena.tier_kwargs())
             idx = np.full(bvals.shape[0], qb, np.int32)
             idx[:g] = qids                  # pad lanes scatter out of
             base_v, base_g = _kernel_ops.scatter_topk_rows(
@@ -655,7 +655,7 @@ class StreamingEngine:
                 qp_all, lp_all, delta.vectors, delta.label_words,
                 delta.norms, delta.tombstones, delta.count, k=k,
                 metric=eng.metric, backend=eng._seg_backend,
-                **delta.tier_kwargs())
+                fused=eng._seg_fused, **delta.tier_kwargs())
             base_v, base_g = _kernel_ops.merge_topk(
                 base_v, base_g, dvals, dslot, n_base, sentinel, k=k)
         # empty delta: base_g's empty-slot id n_base IS the stream sentinel
@@ -708,7 +708,8 @@ class StreamingEngine:
                 dvals, dslot = _kernel_ops.delta_topk(
                     qz, lz, delta.vectors, delta.label_words, delta.norms,
                     delta.tombstones, delta.count, k=k, metric=eng.metric,
-                    backend=eng._seg_backend, **delta.tier_kwargs())
+                    backend=eng._seg_backend, fused=eng._seg_fused,
+                    **delta.tier_kwargs())
                 outs.append(dvals)
                 for lmax in span_tiers:
                     # both tombstone variants: the executor flips between
@@ -720,6 +721,7 @@ class StreamingEngine:
                             eng._rows_concat_dev, zero, zero,
                             k=k, lmax=lmax, metric=eng.metric,
                             backend=eng._seg_backend, tomb=tomb,
+                            fused=eng._seg_fused,
                             **eng.arena.tier_kwargs())
                         outs.append(bvals)
                 mv, _ = _kernel_ops.merge_topk(
@@ -785,7 +787,7 @@ class StreamingEngine:
                         qz, lz, dummy.vectors, dummy.label_words,
                         dummy.norms, dummy.tombstones, dummy.count, k=k,
                         metric=eng.metric, backend=eng._seg_backend,
-                        **dummy.tier_kwargs())
+                        fused=eng._seg_fused, **dummy.tier_kwargs())
                     outs.append(dvals)
             c *= 2
         for o in outs:

@@ -25,13 +25,14 @@ class FlatIndex:
 
     def __init__(self, vectors: np.ndarray, label_words: np.ndarray,
                  metric: str = "l2", kernel_backend: str = "ref",
-                 block_n: int = 1024):
+                 block_n: int = 1024, fused=False):
         self.vectors = jnp.asarray(np.ascontiguousarray(vectors, dtype=np.float32))
         self.label_words = jnp.asarray(np.ascontiguousarray(label_words, dtype=np.int32))
         self.metric = metric
         self.kernel_backend = kernel_backend
         self.block_n = block_n
-        self.num_vectors, self.dim = vectors.shape
+        self.fused = fused    # consumed by arena views (DESIGN.md §3.9);
+        self.num_vectors, self.dim = vectors.shape  # the copy path is dense
 
     @classmethod
     def build(cls, vectors, label_words, metric: str = "l2", **params):
@@ -136,7 +137,7 @@ class FlatArenaView:
 
     def __init__(self, arena: Arena, rows_concat, start: int, length: int, *,
                  metric: str = "l2", kernel_backend: str = "ref",
-                 block_n: int = 1024):
+                 block_n: int = 1024, fused=False):
         self.arena = arena
         self._rows = rows_concat           # device int32 [R] (engine-shared)
         self.start = int(start)
@@ -145,6 +146,7 @@ class FlatArenaView:
         self.kernel_backend = kernel_backend
         self.block_n = block_n             # unused: the segmented scan chunks
         self.num_vectors = self.length     # by ops.SEG_CHUNK, not block_n
+        self.fused = fused                 # fused scan stage (DESIGN.md §3.9)
         self.dim = arena.dim
 
     def search(self, queries: np.ndarray, query_label_words: np.ndarray,
@@ -179,7 +181,7 @@ class FlatArenaView:
                     self.arena.norms, self._rows, starts, lens, k=_k,
                     lmax=_lmax, metric=self.metric,
                     backend=self.kernel_backend, tomb=tomb,
-                    **self.arena.tier_kwargs())
+                    fused=self.fused, **self.arena.tier_kwargs())
                 # segment positions ARE local ids (ascending global order);
                 # normalize the empty-slot sentinel to num_vectors
                 ids = jnp.where(pos >= self.length, self.length, pos)

@@ -1,0 +1,369 @@
+"""Fused segmented arena scan (DESIGN.md §3.9).
+
+One kernel, two implementations sharing one chunking schedule:
+
+* :func:`_pallas_fused_scan` — a Pallas TPU kernel over a
+  ``(Q // queries_per_tile, span // rows_per_chunk)`` grid.  Each grid
+  step DMAs one chunk of the per-query candidate-id window from the CSR
+  row table (HBM → SMEM), gathers the referenced arena rows — codes,
+  label words, norms, int8 scale/zero sidecar, tombstone words — with
+  per-row async copies (HBM → VMEM, the scalar-prefetch gather idiom of
+  ``gather_distance.py`` turned inside the kernel), dequantizes
+  in-register with the ``dcols`` lane mask, computes multiply +
+  minor-axis-reduce distances, applies the packed-label + tombstone +
+  segment-length filter, and merges the chunk into a running (distance,
+  position) top-k held in VMEM scratch across chunks.  The ``[Q, span]``
+  distance matrix never exists anywhere.
+
+* :func:`_lax_fused_scan` — the interpret/CPU fallback: the same chunk
+  schedule composed from ``jax.lax`` (a ``lax.map`` over query tiles of a
+  ``lax.scan`` over row chunks), arithmetically byte-identical to the
+  unfused executor's ref branch.
+
+Both are bit-compatible with the unchunked oracle
+``ref.segmented_filtered_topk``: distances are the same multiply +
+minor-axis f32 reduce (never ``dot_general``), and the running-pool merge
+preserves the (distance, position) lexicographic order for ANY chunk /
+query-tile decomposition — chunk entries always carry strictly later
+positions than the running pool, and every selection step prefers the
+lower concatenation index on value ties, exactly like ``lax.top_k`` in
+the unfused scan.  Tile sizes come from the roofline model
+(``launch/roofline.py::fused_scan_tiles``), not hand constants.
+
+Dispatched behind ``ops._segmented_topk`` via the ``fused`` flag; see
+DESIGN.md §3.9 for the contract and docs/KERNELS.md for the authoring
+walkthrough.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+
+def resolve_fused(fused, *, backend: str) -> bool:
+    """Resolve the public ``fused=True|False|"auto"`` flag to a static
+    bool.  ``"auto"`` enables the fused kernel wherever the pallas gather
+    path would run (the fused kernel strictly dominates the per-candidate
+    gather kernel there) and keeps the ref/lax executor unfused by
+    default — its win is workload-dependent, so opting in is explicit."""
+    if fused == "auto":
+        return backend == "pallas"
+    if fused in (True, False):
+        return bool(fused)
+    raise ValueError(f"fused must be True, False or 'auto'; got {fused!r}")
+
+
+def clamp_qtile(qtile: int, q: int) -> int:
+    """Largest power-of-two ≤ ``qtile`` that divides ``q`` (engine buckets
+    are powers of two, so this is usually ``min(qtile, q)``; direct kernel
+    callers with odd Q degrade toward per-query tiles)."""
+    qtile = max(1, min(qtile, q))
+    while q % qtile:
+        qtile //= 2
+    return max(1, qtile)
+
+
+def fused_segmented_scan(q, lq, ax, alw, axn, rows_concat, starts, lens,
+                         tomb, scales, zeros, *, kp: int, lmax: int,
+                         chunk: int, qtile: int, metric: str, dtype: str,
+                         dcols: int | None, backend: str, interpret: bool):
+    """Scan stage of the fused path: (vals [Q, kp] asc, pos [Q, kp] i32,
+    pos == lmax ⇒ empty).  The caller (``ops._segmented_topk``) owns the
+    rerank stage and the empty-slot/gid epilogue, shared with the unfused
+    executor."""
+    if lmax % chunk:
+        raise ValueError(f"chunk {chunk} must divide lmax {lmax}")
+    if backend == "pallas":
+        return _pallas_fused_scan(
+            q, lq, ax, alw, axn, rows_concat, starts, lens, tomb, scales,
+            zeros, kp=kp, lmax=lmax, chunk=chunk, qtile=qtile,
+            metric=metric, dtype=dtype, dcols=dcols, interpret=interpret)
+    return _lax_fused_scan(
+        q, lq, ax, alw, axn, rows_concat, starts, lens, tomb, scales,
+        zeros, kp=kp, lmax=lmax, chunk=chunk, qtile=qtile, metric=metric,
+        dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# lax-composed fallback (CPU / interpret), same schedule
+# ---------------------------------------------------------------------------
+
+
+def _lax_fused_scan(q, lq, ax, alw, axn, rows_concat, starts, lens, tomb,
+                    scales, zeros, *, kp, lmax, chunk, qtile, metric,
+                    dtype):
+    Q = q.shape[0]
+    R = rows_concat.shape[0]
+    qtile = clamp_qtile(qtile, Q)
+    steps = jnp.arange(0, lmax, chunk, dtype=jnp.int32)
+
+    def tile_fn(tile):
+        qt, lqt, st, ln = tile
+        qn = jnp.sum(qt * qt, axis=1)
+        init = (jnp.full((qtile, kp), jnp.inf, jnp.float32),
+                jnp.full((qtile, kp), lmax, jnp.int32))
+
+        def body(carry, c0):
+            run_v, run_p = carry
+            pos = c0 + jnp.arange(chunk, dtype=jnp.int32)        # [C]
+            valid = pos[None, :] < ln[:, None]                   # [T, C]
+            p = jnp.clip(st[:, None] + pos[None, :], 0, max(R - 1, 0))
+            gid = rows_concat[jnp.where(valid, p, 0)]            # [T, C]
+            xg = ref.dequantize_rows(
+                ax[gid], dtype,
+                None if scales is None else scales[gid],
+                None if zeros is None else zeros[gid])           # [T, C, D]
+            # multiply + minor-axis reduce, NOT dot_general: per-element
+            # f32 accumulation, independent of the (qtile, chunk) tiling —
+            # the bit-parity the fused/unfused equivalence rests on
+            ip = jnp.sum(xg * qt[:, None, :], axis=-1)
+            d = -ip if metric == "ip" else \
+                qn[:, None] - 2.0 * ip + axn[gid]
+            keep = jnp.all((lqt[:, None, :] & alw[gid]) == lqt[:, None, :],
+                           axis=-1)
+            if tomb is not None:
+                keep = keep & ref.tombstone_mask(tomb, gid)
+            d = jnp.where(keep & valid, d, jnp.inf)
+            # running-pool merge: running entries hold strictly earlier
+            # positions and lax.top_k prefers the lower concat index on
+            # ties, preserving (distance, position) order chunk by chunk
+            cat_v = jnp.concatenate([run_v, d], axis=1)
+            cat_p = jnp.concatenate(
+                [run_p, jnp.broadcast_to(pos[None, :], (qtile, chunk))],
+                axis=1)
+            neg, sel = jax.lax.top_k(-cat_v, kp)
+            return (-neg, jnp.take_along_axis(cat_p, sel, axis=1)), None
+
+        (v, p), _ = jax.lax.scan(body, init, steps)
+        return v, p
+
+    tiles = (q.reshape(Q // qtile, qtile, -1),
+             lq.reshape(Q // qtile, qtile, -1),
+             jnp.asarray(starts).reshape(Q // qtile, qtile),
+             jnp.asarray(lens).reshape(Q // qtile, qtile))
+    v, p = jax.lax.map(tile_fn, tiles)
+    return v.reshape(Q, kp), p.reshape(Q, kp)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+def _pack_tombstone_words(tomb):
+    """[⌈N/8⌉] u8 little-bit-order bitmap → [Tw, 1] i32 words such that
+    row ``r``'s bit is ``(words[r >> 5] >> (r & 31)) & 1`` — the same bit
+    indexing as ``ref.tombstone_mask``, with bytes packed little-endian
+    into each word."""
+    t = jnp.pad(tomb, (0, (-tomb.shape[0]) % 4)).astype(jnp.uint32)
+    w = (t[0::4] | (t[1::4] << 8) | (t[2::4] << 16) | (t[3::4] << 24))
+    return jax.lax.bitcast_convert_type(w, jnp.int32).reshape(-1, 1)
+
+
+def _pallas_fused_scan(q, lq, ax, alw, axn, rows_concat, starts, lens,
+                       tomb, scales, zeros, *, kp, lmax, chunk, qtile,
+                       metric, dtype, dcols, interpret):
+    Q, Dp = q.shape
+    W = lq.shape[1]
+    qtile = clamp_qtile(qtile, Q)
+    nc = lmax // chunk
+    l2 = metric == "l2"
+    int8 = dtype == "int8"
+
+    # the id-window DMA reads a contiguous [chunk] slice of the row table;
+    # clamp the window start so it always stays in range (over-read lanes
+    # are masked by pos >= len), and pad the table so a window exists even
+    # when R < chunk (tiny selections)
+    rc = jnp.asarray(rows_concat, jnp.int32)
+    if rc.shape[0] < chunk:
+        rc = jnp.pad(rc, (0, chunk - rc.shape[0]))
+    rp = rc.shape[0]
+
+    operands = [rc, ax, alw]
+    if l2:
+        operands.append(axn.reshape(-1, 1).astype(jnp.float32))
+    if int8:
+        operands.append(scales.reshape(-1, 1).astype(jnp.float32))
+        operands.append(zeros.reshape(-1, 1).astype(jnp.float32))
+    if tomb is not None:
+        operands.append(_pack_tombstone_words(tomb))
+
+    scratch = [
+        pltpu.SMEM((qtile, chunk), jnp.int32),           # id window
+        pltpu.VMEM((qtile, chunk, Dp), ax.dtype),        # gathered codes
+        pltpu.VMEM((qtile, chunk, W), jnp.int32),        # gathered labels
+        pltpu.VMEM((qtile, kp), jnp.float32),            # running vals
+        pltpu.VMEM((qtile, kp), jnp.int32),              # running pos
+        pltpu.SemaphoreType.DMA,
+    ]
+    if l2:
+        scratch.append(pltpu.VMEM((qtile, chunk, 1), jnp.float32))
+    if int8:
+        scratch.append(pltpu.VMEM((qtile, chunk, 1), jnp.float32))
+        scratch.append(pltpu.VMEM((qtile, chunk, 1), jnp.float32))
+    if tomb is not None:
+        scratch.append(pltpu.VMEM((qtile, chunk), jnp.int32))  # vector ids
+        scratch.append(pltpu.VMEM((qtile, chunk, 1), jnp.int32))
+
+    def kernel(starts_sm, lens_sm, q_ref, lq_ref, rc_ref, ax_ref, alw_ref,
+               *rest):
+        it = iter(rest)
+        axn_ref = next(it) if l2 else None
+        s_ref = next(it) if int8 else None
+        z_ref = next(it) if int8 else None
+        tw_ref = next(it) if tomb is not None else None
+        vals_ref, pos_ref = next(it), next(it)
+        idbuf, xbuf, lwbuf, run_v, run_p, sem = (next(it) for _ in range(6))
+        nbuf = next(it) if l2 else None
+        sbuf = next(it) if int8 else None
+        zbuf = next(it) if int8 else None
+        idv = next(it) if tomb is not None else None
+        tbuf = next(it) if tomb is not None else None
+
+        ti = pl.program_id(0)
+        ci = pl.program_id(1)
+        c0 = ci * chunk
+
+        @pl.when(ci == 0)
+        def _init():
+            run_v[...] = jnp.full((qtile, kp), jnp.inf, jnp.float32)
+            run_p[...] = jnp.full((qtile, kp), lmax, jnp.int32)
+
+        # -- phase 1: DMA each query's id window (contiguous CSR slice) --
+        id_cps = []
+        for t in range(qtile):
+            cs = jnp.clip(starts_sm[ti * qtile + t] + c0, 0, rp - chunk)
+            id_cps.append(pltpu.make_async_copy(
+                rc_ref.at[pl.ds(cs, chunk)], idbuf.at[t], sem))
+            if tomb is not None:
+                id_cps.append(pltpu.make_async_copy(
+                    rc_ref.at[pl.ds(cs, chunk)], idv.at[t], sem))
+        for cp in id_cps:
+            cp.start()
+        for cp in id_cps:
+            cp.wait()
+
+        # -- phase 2: per-row gather DMAs, all in flight before the first
+        # wait (the DMA engine pipelines them) --
+        row_cps = []
+        for t in range(qtile):
+            for r in range(chunk):
+                rid = idbuf[t, r]
+                row_cps.append(pltpu.make_async_copy(
+                    ax_ref.at[pl.ds(rid, 1), :],
+                    xbuf.at[t, pl.ds(r, 1), :], sem))
+                row_cps.append(pltpu.make_async_copy(
+                    alw_ref.at[pl.ds(rid, 1), :],
+                    lwbuf.at[t, pl.ds(r, 1), :], sem))
+                if l2:
+                    row_cps.append(pltpu.make_async_copy(
+                        axn_ref.at[pl.ds(rid, 1), :],
+                        nbuf.at[t, pl.ds(r, 1), :], sem))
+                if int8:
+                    row_cps.append(pltpu.make_async_copy(
+                        s_ref.at[pl.ds(rid, 1), :],
+                        sbuf.at[t, pl.ds(r, 1), :], sem))
+                    row_cps.append(pltpu.make_async_copy(
+                        z_ref.at[pl.ds(rid, 1), :],
+                        zbuf.at[t, pl.ds(r, 1), :], sem))
+                if tomb is not None:
+                    wi = jax.lax.shift_right_logical(rid, 5)
+                    row_cps.append(pltpu.make_async_copy(
+                        tw_ref.at[pl.ds(wi, 1), :],
+                        tbuf.at[t, pl.ds(r, 1), :], sem))
+        for cp in row_cps:
+            cp.start()
+        for cp in row_cps:
+            cp.wait()
+
+        # -- phase 3: dequant + distance + filter, all in registers --
+        qv = q_ref[...]                                     # [T, Dp]
+        xr = xbuf[...]
+        if dtype == "fp16":
+            xr = xr.astype(jnp.float32)
+        elif int8:
+            xr = zbuf[...] + sbuf[...] * xr.astype(jnp.float32)
+            if dcols is not None and dcols < Dp:
+                # lane-pad code byte 0 dequantizes to the row zero-point,
+                # not 0 — mask the pad lanes (DESIGN.md §3.9)
+                lane = jax.lax.broadcasted_iota(
+                    jnp.int32, (qtile, chunk, Dp), 2)
+                xr = jnp.where(lane < dcols, xr, 0.0)
+        ip = jnp.sum(xr * qv[:, None, :], axis=-1)          # [T, C]
+        if metric == "ip":
+            d = -ip
+        else:
+            qn = jnp.sum(qv * qv, axis=1)
+            d = qn[:, None] - 2.0 * ip + nbuf[...][:, :, 0]
+        lqv = lq_ref[...]
+        keep = jnp.all((lqv[:, None, :] & lwbuf[...]) == lqv[:, None, :],
+                       axis=-1)
+        if tomb is not None:
+            shift = idv[...] & 31
+            keep = keep & (
+                ((tbuf[...][:, :, 0] >> shift) & 1) == 0)
+        lens_vec = jnp.stack(
+            [lens_sm[ti * qtile + t] for t in range(qtile)])
+        pos = c0 + jax.lax.broadcasted_iota(jnp.int32, (qtile, chunk), 1)
+        d = jnp.where(keep & (pos < lens_vec[:, None]), d, jnp.inf)
+
+        # -- phase 4: merge the chunk into the VMEM-resident running
+        # top-k.  Iterative first-min selection over [running | chunk]
+        # reproduces lax.top_k's (value, concat-index) order bitwise:
+        # the first unselected lane holding the minimum wins, so value
+        # ties resolve toward the running pool (strictly earlier
+        # positions), and surviving +inf slots keep the running pool's
+        # pos == lmax sentinel — the invariant the rerank stage's
+        # ``listed`` mask depends on --
+        m_lanes = kp + chunk
+        cat_v = jnp.concatenate([run_v[...], d], axis=1)
+        cat_p = jnp.concatenate([run_p[...], pos], axis=1)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (qtile, m_lanes), 1)
+        col = jax.lax.broadcasted_iota(jnp.int32, (qtile, kp), 1)
+        taken = jnp.zeros((qtile, m_lanes), jnp.bool_)
+        new_v = jnp.zeros((qtile, kp), jnp.float32)
+        new_p = jnp.zeros((qtile, kp), jnp.int32)
+        for j in range(kp):
+            vm = jnp.where(taken, jnp.inf, cat_v)
+            m = jnp.min(vm, axis=1)
+            cand = (~taken) & (vm == m[:, None])
+            first = jnp.min(jnp.where(cand, lane, m_lanes), axis=1)
+            hit = lane == first[:, None]
+            pj = jnp.sum(jnp.where(hit, cat_p, 0), axis=1)
+            new_v = jnp.where(col == j, m[:, None], new_v)
+            new_p = jnp.where(col == j, pj[:, None], new_p)
+            taken = taken | hit
+        run_v[...] = new_v
+        run_p[...] = new_p
+
+        @pl.when(ci == nc - 1)
+        def _emit():
+            vals_ref[...] = run_v[...]
+            pos_ref[...] = run_p[...]
+
+    def im(i, j, starts_ref, lens_ref):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q // qtile, nc),
+        in_specs=[pl.BlockSpec((qtile, Dp), im),
+                  pl.BlockSpec((qtile, W), im)]
+        + [pl.BlockSpec(memory_space=pltpu.ANY)] * len(operands),
+        out_specs=[pl.BlockSpec((qtile, kp), im),
+                   pl.BlockSpec((qtile, kp), im)],
+        scratch_shapes=scratch,
+    )
+    vals, pos = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((Q, kp), jnp.float32),
+                   jax.ShapeDtypeStruct((Q, kp), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(starts, jnp.int32), jnp.asarray(lens, jnp.int32),
+      q, lq, *operands)
+    return vals, pos

@@ -18,6 +18,7 @@ from ..core.labels import masks_to_int32_words
 from ..obs import metrics as _metrics
 from . import ref
 from .filtered_topk import filtered_topk_pallas
+from .fused_scan import fused_segmented_scan, resolve_fused
 from .gather_distance import (gather_distance_pallas,
                               segmented_gather_distance_pallas)
 from .masked_distance import LABEL_WORDS, masked_distance_pallas
@@ -132,12 +133,14 @@ SEG_CHUNK = 2048
 
 @functools.partial(jax.jit, static_argnames=("k", "lmax", "chunk", "metric",
                                              "backend", "interpret", "dtype",
-                                             "kprime", "dcols"))
+                                             "kprime", "dcols", "fused",
+                                             "qtile"))
 def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
                     tomb=None, scales=None, zeros=None, rr=None, rrn=None, *,
                     k: int, lmax: int, chunk: int, metric: str, backend: str,
                     interpret: bool, dtype: str = "f32",
-                    kprime: int | None = None, dcols: int | None = None):
+                    kprime: int | None = None, dcols: int | None = None,
+                    fused: bool = False, qtile: int | None = None):
     """Chunked segmented arena top-k — bit-identical to the unchunked
     oracle ``ref.segmented_filtered_topk``.
 
@@ -182,7 +185,7 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
     init = (jnp.full((Q, kp), jnp.inf, jnp.float32),
             jnp.full((Q, kp), lmax, jnp.int32))
 
-    def body(carry, c0):
+    def body(carry, c0):  # unfused scan stage (fused=False)
         run_v, run_p = carry
         pos = c0 + jnp.arange(chunk, dtype=jnp.int32)          # [C]
         valid = pos[None, :] < lens[:, None]                   # [Q, C]
@@ -222,8 +225,20 @@ def _segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens,
         neg, sel = jax.lax.top_k(-cat_v, kp)
         return (-neg, jnp.take_along_axis(cat_p, sel, axis=1)), None
 
-    (vals, pos), _ = jax.lax.scan(body, init,
-                                  jnp.arange(0, lmax, chunk, dtype=jnp.int32))
+    if fused:
+        # fused scan stage (DESIGN.md §3.9): same chunk schedule, but the
+        # per-chunk [Q, chunk] distance buffer lives only inside the
+        # kernel (VMEM on the pallas backend) and the running top-k merge
+        # is fused in — bit-compatible with the lax.scan below for any
+        # (chunk, qtile) decomposition
+        vals, pos = fused_segmented_scan(
+            q, lq, ax, alw, axn, rows_concat, starts, lens, tomb, scales,
+            zeros, kp=kp, lmax=lmax, chunk=chunk, qtile=qtile or 8,
+            metric=metric, dtype=dtype, dcols=dcols, backend=backend,
+            interpret=interpret)
+    else:
+        (vals, pos), _ = jax.lax.scan(
+            body, init, jnp.arange(0, lmax, chunk, dtype=jnp.int32))
     if rr is not None:
         # ---- stage 2: exact rerank of the compressed-scan shortlist ----
         # re-sort by segment position: shortlist order is (scan-distance,
@@ -290,7 +305,8 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
                    lmax: int, metric: str = "l2", backend: str = "ref",
                    chunk: int | None = None, tomb=None, dtype: str = "f32",
                    scales=None, zeros=None, rerank=None, rerank_norms=None,
-                   kprime: int | None = None):
+                   kprime: int | None = None, fused=False,
+                   qtile: int | None = None):
     """Single-dispatch segmented arena search (DESIGN.md §3).
 
     One traced program per (k, Q-bucket, lmax, metric, backend) serves every
@@ -315,6 +331,16 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
     turn the program two-level — compressed scan to a ``kprime`` (default
     4k) shortlist, exact in-program rerank.  ``dtype="f32"`` with no tier
     operands is byte-for-byte the pre-tier program.
+
+    ``fused`` (DESIGN.md §3.9): ``True`` / ``False`` / ``"auto"`` selects
+    the fused scan stage (``kernels/fused_scan.py``) — same results bit
+    for bit, but the per-chunk distance buffer never leaves the kernel.
+    With ``chunk``/``qtile`` unset, tile sizes come from the roofline
+    model (``launch/roofline.py::fused_scan_tiles``), which is
+    deterministic per (D, lmax, dtype, Q-bucket, backend, device kind):
+    warmup and serving resolve identical tiles, so the fused path adds no
+    post-warmup cache keys.  An explicit ``chunk`` always wins (the
+    parity tests sweep it).
     """
     dcols = None
     if backend == "pallas":
@@ -324,6 +350,17 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
         q = _pad_axis(q, 1, 128)
         if rerank is not None:
             rerank = _pad_axis(rerank, 1, 128)
+    fused = resolve_fused(fused, backend=backend)
+    if fused and chunk is None:
+        from ..launch import roofline  # lazy: launch/ is orchestration-side
+        tc = roofline.fused_scan_tiles(ax.shape[1], lmax, dtype, q.shape[0],
+                                       backend=backend,
+                                       label_words=alw.shape[1])
+        chunk, qtile = tc.rows_per_chunk, qtile or tc.queries_per_tile
+        while lmax % chunk:  # non-pow2 lmax (direct callers): degrade
+            chunk //= 2
+    if not fused:
+        qtile = None  # not a knob of the unfused program: one cache key
     before = _segmented_topk._cache_size() if _metrics.enabled() else None
     out = _segmented_topk(
         jnp.asarray(q, jnp.float32), jnp.asarray(lq, jnp.int32),
@@ -332,7 +369,7 @@ def segmented_topk(q, lq, ax, alw, axn, rows_concat, starts, lens, *, k: int,
         tomb, scales, zeros, rerank, rerank_norms,
         k=k, lmax=lmax, chunk=chunk or min(SEG_CHUNK, lmax), metric=metric,
         backend=backend, interpret=default_interpret(), dtype=dtype,
-        kprime=kprime, dcols=dcols)
+        kprime=kprime, dcols=dcols, fused=fused, qtile=qtile)
     if before is not None:
         # tracing (if any) happened synchronously during the call above,
         # so the cache-size delta is already visible here
@@ -348,7 +385,8 @@ def delta_topk(q, lq, dx, dlw, dxn, tomb, count: int, *, k: int,
                metric: str = "l2", backend: str = "ref",
                chunk: int | None = None, dtype: str = "f32",
                scales=None, zeros=None, rerank=None, rerank_norms=None,
-               kprime: int | None = None):
+               kprime: int | None = None, fused=False,
+               qtile: int | None = None):
     """Brute-force label-filtered top-k over the streaming delta arena
     (DESIGN.md §3.6) — one traced program per (k, Q-bucket, capacity-tier).
 
@@ -376,7 +414,7 @@ def delta_topk(q, lq, dx, dlw, dxn, tomb, count: int, *, k: int,
                                   backend=backend, chunk=chunk, tomb=tomb,
                                   dtype=dtype, scales=scales, zeros=zeros,
                                   rerank=rerank, rerank_norms=rerank_norms,
-                                  kprime=kprime)
+                                  kprime=kprime, fused=fused, qtile=qtile)
     return vals, pos
 
 

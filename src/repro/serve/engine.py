@@ -30,6 +30,7 @@ import numpy as np
 
 from .. import arch as A
 from ..core.faults import faultpoint, register_fault_point
+from ..obs.metrics import enabled as _metrics_enabled
 
 register_fault_point("serve.retrieve",
                      "RetrievalAugmentedEngine.retrieve: before the embed")
@@ -323,9 +324,30 @@ class RetrievalAugmentedEngine:
         """Synchronous convenience: retrieve, then generate to completion.
         The continuous-batching runtime (``repro.serve.runtime``) drives
         the same stages — :meth:`retrieve` then per-slot admission — but
-        interleaved with decode steps instead of run-to-completion."""
+        interleaved with decode steps instead of run-to-completion.
+
+        Populates the shared ``eli_serve_*`` telemetry under the reserved
+        ``runtime="sync"`` child (DESIGN.md §6.3): submissions, the one
+        retrieval batch, batch size, and per-request completion latency —
+        the series whose semantics don't require the micro-batching loop.
+        Queue/admission series (depth, waits, rejections, retries) stay
+        untouched: a run-to-completion call has no queue to observe."""
+        import time as _time
+
+        from . import runtime as _rt  # lazy: runtime imports this module
+
+        t0 = _time.perf_counter()
         self.retrieve(requests)
-        return self.decoder.run(requests)
+        out = self.decoder.run(requests)
+        if _metrics_enabled():
+            n = len(requests)
+            _rt._M_SRV_SUBMITTED.labels("sync").inc(n)
+            _rt._M_SRV_BATCHES.labels("sync").inc()
+            _rt._M_SRV_MB.labels("sync").observe(n)
+            dt = _time.perf_counter() - t0
+            for _ in range(n):
+                _rt._M_SRV_LAT.labels("sync").observe(dt)
+        return out
 
     # -- streaming mutations (DESIGN.md §3.6) ---------------------------------
     # The corpus behind a RAG deployment is not static: documents arrive

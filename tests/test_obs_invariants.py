@@ -157,6 +157,41 @@ def test_exposition_covers_all_five_layers(data):
     assert bound.value() == pytest.approx(0.2)
 
 
+def test_fused_path_zero_traces_and_same_cards(data, tracing):
+    """The fused scan stage (DESIGN.md §3.9) inherits every observability
+    invariant: bit-identical results to the unfused engine, zero new
+    ``_segmented_topk`` programs post-warmup (the roofline tile model is
+    deterministic per launch signature, so warmup covers serving exactly),
+    and the same query cards — fused is a kernel-internal choice, not a
+    routing or accounting change."""
+    eng = _engine("flat", data)
+    fused = LabelHybridEngine.build(data["x"], data["ls"], mode="eis",
+                                    c=0.2, backend="flat", fused=True)
+    qv, qls, k = data["qv"], data["qls"], 5
+    d_ref, i_ref = eng.search_batched(qv, qls, k)
+    d_f, i_f = fused.search_batched(qv, qls, k)      # warm the fused cache
+    np.testing.assert_array_equal(i_f, i_ref)
+    np.testing.assert_array_equal(d_f, d_ref)
+    before = ops._segmented_topk._cache_size()
+    trace.reset()
+    d_f2, i_f2 = fused.search_batched(qv, qls, k)
+    assert ops._segmented_topk._cache_size() == before
+    np.testing.assert_array_equal(i_f2, i_ref)
+    cards_f = sorted(trace.iter_cards(), key=lambda c: c.query_key)
+    trace.reset()
+    eng.search_batched(qv, qls, k)
+    cards_u = sorted(trace.iter_cards(), key=lambda c: c.query_key)
+    assert [
+        (c.query_key, c.n_queries, c.elastic_factor, c.bound,
+         c.selected_key, c.span_tier, c.q_bucket) for c in cards_f
+    ] == [
+        (c.query_key, c.n_queries, c.elastic_factor, c.bound,
+         c.selected_key, c.span_tier, c.q_bucket) for c in cards_u
+    ]
+    for c in cards_f:
+        assert not c.recompiled
+
+
 def test_disabled_telemetry_skips_the_accounting(data):
     """With metrics off, a search moves no counters (the off path is a
     real no-op, not a buffered one)."""
